@@ -1,0 +1,41 @@
+"""§5 communication model — latency L(n,P), bandwidth BW(n,P), and the
+paper's §6.3.2 claim that communication is 0.14%..0.46% of total time."""
+from __future__ import annotations
+
+from repro.core.cost_model import (latency_messages, bandwidth_words,
+                                   comm_time, lmax, npl, simulate_ata_p,
+                                   SimParams)
+from .common import write_json, PAPER
+
+
+def run(quick: bool = False):
+    sp = SimParams()
+    rows = []
+    for n in PAPER["ns"]:
+        for p in PAPER["ps"]:
+            L = latency_messages(p)
+            bw = bandwidth_words(n)
+            tc = comm_time(n, p, sp.alpha, sp.beta)
+            total = simulate_ata_p(n, p, sp)
+            frac = tc / total
+            rows.append({"n": n, "P": p, "lmax": lmax(p), "L_msgs": L,
+                         "BW_words": bw, "comm_s": tc, "total_s": total,
+                         "comm_fraction": frac})
+    for r in rows:
+        if r["n"] == 10000:
+            print(f"[s5] P={r['P']:>3} lmax={r['lmax']} L={r['L_msgs']:>2} "
+                  f"comm {r['comm_s']*1e3:6.1f}ms of {r['total_s']:7.2f}s "
+                  f"({r['comm_fraction']:.2%})")
+    fr = [r["comm_fraction"] for r in rows]
+    print(f"[s5] comm fraction range {min(fr):.2%}..{max(fr):.2%} "
+          f"(paper: 0.14%..0.46%)")
+    # same order of magnitude as the paper's measured percentages
+    assert max(fr) < 0.02, "communication should be a sub-2% fraction"
+    # npl sanity against the paper's complete-level process counts
+    assert [npl(l) for l in (0, 1, 2, 3)] == [1, 6, 38, 250]
+    write_json("s5_comm.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

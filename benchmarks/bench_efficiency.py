@@ -1,0 +1,30 @@
+"""Fig 7 — efficiency = S/P. Paper: 0.66 (P=6) .. 0.26 (P=250), with a
+local RISE at P=38 (two complete parallel levels) — both reproduced."""
+from __future__ import annotations
+
+from repro.core.cost_model import simulate_metrics
+from .common import write_json, PAPER
+
+
+def run(quick: bool = False):
+    out = {}
+    for n in PAPER["ns"]:
+        rows = simulate_metrics(n, PAPER["ps"])["rows"]
+        out[str(n)] = rows
+        e = {r["P"]: r["efficiency"] for r in rows}
+        print(f"[fig7] n={n}: " + " ".join(
+            f"E({p})={e[p]:.3f}" for p in PAPER["ps"]))
+        # the paper's §6.2 observation: efficiency *grows* at P=38
+        assert e[38] > e[18], "P=38 complete-level efficiency rise missing"
+    e6 = out["10000"][0]["efficiency"]
+    e250 = out["10000"][-1]["efficiency"]
+    assert abs(e6 - PAPER["efficiency_p6"]) < 0.08, e6
+    assert abs(e250 - PAPER["efficiency_p250"]) < 0.08, e250
+    print(f"[fig7] endpoints: E(6)={e6:.3f} (paper 0.66), "
+          f"E(250)={e250:.3f} (paper 0.26)")
+    write_json("fig7_efficiency.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

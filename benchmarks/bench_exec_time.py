@@ -1,0 +1,59 @@
+"""Fig 5 — execution time.
+
+Two parts:
+ 1. MEASURED wall-clock on this CPU: sequential ATA (Strassen-based,
+    levels swept) vs classical tril(A^tA) vs classical full A@B, for
+    scaled-down sizes (the container is one core; the paper's absolute
+    times are replicated analytically in part 2).
+ 2. MODELED Fig-5 curve: critical-path simulator (paper's process tree +
+    its alpha-L + beta-BW comm model) at the paper's n and P grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ata import ata
+from repro.core.strassen import strassen_matmul
+from repro.core.cost_model import simulate_metrics, SimParams
+from .common import timeit, write_json, PAPER
+
+
+def run(quick: bool = False):
+    rows = []
+    ns = (512, 1024) if quick else (512, 1024, 2048)
+    for n in ns:
+        a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+        t_classical = timeit(jax.jit(
+            lambda a: jnp.tril(a.T @ a)), a)
+        t_matmul = timeit(jax.jit(lambda a: a.T @ a), a)
+        row = {"n": n, "classical_tril_s": t_classical,
+               "classical_full_s": t_matmul}
+        for lv in (0, 1, 2):
+            t = timeit(jax.jit(
+                lambda a, lv=lv: ata(a, levels=lv, leaf=128)), a)
+            row[f"ata_l{lv}_s"] = t
+        t_str = timeit(jax.jit(
+            lambda a: strassen_matmul(a.T, a, levels=2, leaf=128)), a)
+        row["strassen_ab_s"] = t_str
+        rows.append(row)
+        print(f"[fig5/measured] n={n}: classical {t_classical*1e3:.1f}ms "
+              f"ata(l2) {row['ata_l2_s']*1e3:.1f}ms "
+              f"strassenAB {t_str*1e3:.1f}ms")
+
+    model = {}
+    for n in PAPER["ns"]:
+        sim = simulate_metrics(n, (1,) + PAPER["ps"])
+        model[n] = sim
+        times = {r["P"]: r["time"] for r in sim["rows"]}
+        print(f"[fig5/model] n={n}: T1={sim['t1']:.1f}s "
+              f"T250={times[250]:.1f}s (strictly decreasing: "
+              f"{all(times[p] >= times[q] - 1e-9 for p, q in zip((1,)+PAPER['ps'], PAPER['ps']))})")
+    payload = {"measured": rows, "model": {str(k): v
+                                           for k, v in model.items()}}
+    write_json("fig5_exec_time.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Fig 8 — Karp-Flatt experimentally-determined serial fraction
+e = (1/S - 1/P)/(1 - 1/P). Paper: small and decreasing."""
+from __future__ import annotations
+
+from repro.core.cost_model import simulate_metrics
+from .common import write_json, PAPER
+
+
+def run(quick: bool = False):
+    out = {}
+    for n in PAPER["ns"]:
+        rows = simulate_metrics(n, PAPER["ps"])["rows"]
+        out[str(n)] = rows
+        kf = [r["karp_flatt"] for r in rows]
+        print(f"[fig8] n={n}: " + " ".join(f"{v:.4f}" for v in kf))
+        assert all(v < 0.15 for v in kf), "KF not small"
+        # decreasing trend over complete-level points (6, 38, 250)
+        kfm = {r["P"]: r["karp_flatt"] for r in rows}
+        assert kfm[6] > kfm[38] > kfm[250], "KF not decreasing"
+    write_json("fig8_karpflatt.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Fig 6 — speed-up: simulator vs the paper's reported values.
+
+Paper claim: max speed-up 64.28 at P=250, n=10000.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import simulate_metrics
+from .common import write_json, PAPER
+
+
+def run(quick: bool = False):
+    out = {}
+    for n in PAPER["ns"]:
+        sim = simulate_metrics(n, PAPER["ps"])
+        out[str(n)] = sim["rows"]
+        s = {r["P"]: r["speedup"] for r in sim["rows"]}
+        print(f"[fig6] n={n}: " + " ".join(
+            f"S({p})={s[p]:.2f}" for p in PAPER["ps"]))
+    s250 = out["10000"][-1]["speedup"]
+    err = abs(s250 - PAPER["max_speedup"]) / PAPER["max_speedup"]
+    print(f"[fig6] paper max speed-up {PAPER['max_speedup']} @P=250 "
+          f"vs model {s250:.2f} (rel err {err:.1%})")
+    assert err < 0.15, "speed-up model drifted from the paper's figure"
+    write_json("fig6_speedup.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+PAPER = {
+    "max_speedup": 64.28,           # Fig 6, n=10000, P=250
+    "efficiency_p6": 0.66,          # Fig 7
+    "efficiency_p250": 0.26,
+    "ps": (6, 12, 18, 38, 76, 114, 250),
+    "complete_ps": (6, 38, 250),
+    "ns": (5000, 10000),
+    "comm_fraction": (0.0014, 0.0046),
+}
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def write_json(name: str, payload) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+fig5  exec time   (measured CPU + modeled cluster)    <- paper Fig 5
+fig6  speed-up                                        <- paper Fig 6
+fig7  efficiency                                      <- paper Fig 7
+fig8  Karp-Flatt                                      <- paper Fig 8
+s3.1  multiplication counts vs (2/7) n^log2(7)        <- paper §3.1
+s5    communication model + comm fraction             <- paper §5/§6.3.2
+roofline  3-term roofline over dry-run artifacts      <- brief §Roofline
+"""
+import argparse
+import sys
+import time
+
+from . import (bench_exec_time, bench_speedup, bench_efficiency,
+               bench_karpflatt, bench_flops, bench_comm, bench_roofline)
+
+ALL = [
+    ("fig5_exec_time", bench_exec_time.run),
+    ("fig6_speedup", bench_speedup.run),
+    ("fig7_efficiency", bench_efficiency.run),
+    ("fig8_karpflatt", bench_karpflatt.run),
+    ("s31_flops", bench_flops.run),
+    ("s5_comm", bench_comm.run),
+    ("roofline", bench_roofline.run),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    failures = []
+    for name, fn in ALL:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n=== {name} {'='*(60-len(name))}")
+        t0 = time.perf_counter()
+        try:
+            fn(quick=args.quick)
+            print(f"--- {name} ok in {time.perf_counter()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            import traceback
+            traceback.print_exc()
+    if failures:
+        print("\nFAILED:", failures)
+        sys.exit(1)
+    print("\nALL BENCHMARKS OK")
+
+
+if __name__ == "__main__":
+    main()

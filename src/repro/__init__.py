@@ -1,0 +1,2 @@
+"""repro: Strassen-based A^tA (ATA) multi-pod JAX framework."""
+__version__ = "1.0.0"

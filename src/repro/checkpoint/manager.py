@@ -1,0 +1,177 @@
+"""Checkpointing: atomic, async, keep-K, mesh-agnostic (elastic restart).
+
+Layout: <dir>/step_<n>/state.npz + meta.json, committed by atomic rename of
+a ".tmp" directory — a crash mid-write never corrupts the latest
+checkpoint. Leaves are stored as host numpy keyed by their pytree path
+('/'-joined dict keys), independent of any device mesh; ``restore``
+re-places them with whatever shardings the *current* mesh wants, so a
+restart may use a different device count (elastic reshard-on-load).
+
+The async writer runs on one background thread; ``wait()`` joins it (used
+before reading a checkpoint back and at shutdown). Failed async saves are
+re-raised on the next call so errors are never silently dropped.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path
+
+_BF16_PREFIX = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(f"#{k.idx}")
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, file: str) -> None:
+    """Flatten (dicts/lists of arrays) -> npz with path-encoded keys."""
+    flat, _ = tree_flatten_with_path(tree)
+    out: Dict[str, np.ndarray] = {}
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:          # npz has no bf16: tag + u16
+            out[_BF16_PREFIX + key] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    np.savez(file, **out)
+
+
+def _insert(tree: dict, parts, value):
+    head = parts[0]
+    if len(parts) == 1:
+        tree[head] = value
+        return
+    tree.setdefault(head, {})
+    _insert(tree[head], parts[1:], value)
+
+
+def _listify(node):
+    """Convert {'#0':..., '#1':...} dicts back into lists."""
+    if not isinstance(node, dict):
+        return node
+    if node and all(re.fullmatch(r"#\d+", k) for k in node):
+        return [_listify(node[f"#{i}"]) for i in range(len(node))]
+    return {k: _listify(v) for k, v in node.items()}
+
+
+def load_pytree(file: str, shardings=None) -> Any:
+    """npz -> nested dict/list tree. ``shardings``: optional matching pytree
+    of NamedSharding — leaves are device_put with them (elastic reshard)."""
+    data = np.load(file)
+    tree: dict = {}
+    for key in data.files:
+        arr = data[key]
+        if key.startswith(_BF16_PREFIX):
+            key = key[len(_BF16_PREFIX):]
+            arr = arr.view(jnp.bfloat16)
+        _insert(tree, key.split("/"), arr)
+    tree = _listify(tree)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s),
+                            tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- write ------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        self.wait()                       # one in-flight save at a time
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+        host_state = jax.device_get(state)   # snapshot NOW (async-safe)
+
+        def work():
+            try:
+                self._write(step, host_state, extra or {})
+            except BaseException as e:       # surfaced on next save/wait
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._error:
+                err, self._error = self._error, None
+                raise err
+
+    def _write(self, step: int, state, extra):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        save_pytree(state, os.path.join(tmp, "state.npz"))
+        meta = {"step": step, "time": time.time(), **extra}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)             # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- read -------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, shardings=None):
+        """Returns (state, meta). ``shardings``: pytree for elastic
+        reshard-on-load (may target a different mesh than the save)."""
+        self.wait()
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        state = load_pytree(os.path.join(d, "state.npz"), shardings)
+        return state, meta

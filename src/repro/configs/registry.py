@@ -1,0 +1,86 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig, plus the
+per-cell input_specs (ShapeDtypeStruct stand-ins, never allocating)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeConfig, SHAPES, reduced
+from . import (zamba2_2_7b, command_r_plus_104b, yi_9b, qwen2_5_3b,
+               gemma2_9b, mamba2_2_7b, deepseek_v3_671b, arctic_480b,
+               chameleon_34b, whisper_small)
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        zamba2_2_7b.CONFIG,
+        command_r_plus_104b.CONFIG,
+        yi_9b.CONFIG,
+        qwen2_5_3b.CONFIG,
+        gemma2_9b.CONFIG,
+        mamba2_2_7b.CONFIG,
+        deepseek_v3_671b.CONFIG,
+        arctic_480b.CONFIG,
+        chameleon_34b.CONFIG,
+        whisper_small.CONFIG,
+    ]
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def reduced_arch(name: str, **overrides) -> ModelConfig:
+    return reduced(get_arch(name), **overrides)
+
+
+def cell_runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Assignment rules: long_500k only for sub-quadratic (SSM/hybrid)
+    families; no encoder-only archs, so decode runs everywhere else."""
+    if shape.name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def all_cells(runnable_only: bool = True) -> List[tuple]:
+    cells = []
+    for a, cfg in ARCHS.items():
+        for s, shape in SHAPES.items():
+            if not runnable_only or cell_runnable(cfg, shape):
+                cells.append((a, s))
+    return cells
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                for_init: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train / prefill: {"inputs": (B,S), "labels": (B,S)[, "enc_inputs"]}
+    decode:          {"tokens": (B,1)} (+ the cache comes from
+                     jax.eval_shape(init_cache, ...) in the launcher)
+    """
+    del for_init
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"inputs": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "audio":
+            specs["enc_inputs"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "audio":
+            specs["enc_inputs"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}

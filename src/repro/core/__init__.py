@@ -1,0 +1,21 @@
+"""Core library: the paper's Strassen-based A^tA contribution in JAX."""
+from .ata import ata, ata_full, ata_levels_for
+from .strassen import strassen_matmul, strassen_levels_for
+from .symmetry import (
+    pack_tril, unpack_tril, pack_tril_blocks, unpack_tril_blocks,
+    symmetrize_from_lower, tri_count, tri_index, tri_coords,
+)
+from .distributed import (
+    gram_allreduce, gram_reducescatter, gram_ring, distributed_gram,
+    ring_layout_coords,
+)
+from . import cost_model
+
+__all__ = [
+    "ata", "ata_full", "ata_levels_for",
+    "strassen_matmul", "strassen_levels_for",
+    "pack_tril", "unpack_tril", "pack_tril_blocks", "unpack_tril_blocks",
+    "symmetrize_from_lower", "tri_count", "tri_index", "tri_coords",
+    "gram_allreduce", "gram_reducescatter", "gram_ring", "distributed_gram",
+    "ring_layout_coords", "cost_model",
+]

@@ -1,0 +1,116 @@
+"""ATA: the paper's cache-oblivious Strassen-based algorithm for C = A^t A.
+
+Algorithm 1 of the paper, adapted for TPU (DESIGN.md §2):
+
+    split A into quadrants A11 A12 / A21 A22, then
+      C11 = ATA(A11) + ATA(A21)                  (recursive, symmetric)
+      C22 = ATA(A12) + ATA(A22)                  (recursive, symmetric)
+      C21 = HASA(A12^t, A11) + HASA(A22^t, A21)  (rectangular Strassen)
+      C12 = C21^t                                (never computed)
+
+Only the lower triangle is computed; multiplication count is upper-bounded
+by (2/7) n^{log2 7} (paper §3.1) versus n^2(n+1)/2 classical.
+
+The recursion unrolls at trace time over static shapes, capped at ``levels``.
+The base case is a SYRK (half-work block gram): ``jnp.dot(a.T, a)`` under XLA
+or the Pallas ``syrk`` kernel which skips upper-triangular blocks entirely.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .strassen import strassen_matmul, DEFAULT_LEAF, DEFAULT_LEVELS
+from .symmetry import symmetrize_from_lower
+
+__all__ = ["ata", "ata_full", "ata_levels_for"]
+
+
+def _default_base_syrk(a: jax.Array) -> jax.Array:
+    """Classical leaf gram with >=fp32 accumulation (lower triangle kept)."""
+    acc = jnp.promote_types(a.dtype, jnp.float32)
+    return jnp.tril(jnp.dot(a.T, a, preferred_element_type=acc))
+
+
+def ata(
+    a: jax.Array,
+    *,
+    levels: int = DEFAULT_LEVELS,
+    leaf: int = DEFAULT_LEAF,
+    variant: str = "strassen",
+    base_syrk: Optional[Callable] = None,
+    base_matmul: Optional[Callable] = None,
+) -> jax.Array:
+    """Lower triangle of ``a.T @ a`` via the paper's ATA recursion.
+
+    Args:
+      a: (m, n) array — general rectangular, any size.
+      levels: recursion depth cap (0 => classical SYRK).
+      leaf: stop recursing when m or n <= leaf (paper: 32; TPU: 256).
+      variant: Strassen variant used for the off-diagonal C21 products.
+      base_syrk: leaf gram fn (n-triangular); default jnp, or Pallas syrk.
+      base_matmul: leaf matmul for the HASA calls.
+
+    Returns:
+      (n, n) array, strictly upper triangle zeroed, dtype promoted from a.
+    """
+    if a.ndim != 2:
+        raise ValueError(f"ata expects a matrix, got shape {a.shape}")
+    syrk = base_syrk or _default_base_syrk
+    out = _ata_rec(a, levels, leaf, variant, syrk, base_matmul)
+    return out.astype(a.dtype)
+
+
+def _ata_rec(a, levels, leaf, variant, syrk, base_matmul):
+    m, n = a.shape
+    # Base case (paper: m or n <= 32; TPU leaf rescaled).
+    if levels <= 0 or m <= leaf or n <= leaf:
+        return syrk(a)
+
+    # Pad odd dims (exact: zero rows of A add nothing to A^tA; zero cols add
+    # zero rows+cols to C, sliced away below).
+    pm, pn = m % 2, n % 2
+    ap = jnp.pad(a, ((0, pm), (0, pn))) if (pm or pn) else a
+    mp, np_ = ap.shape
+    m2, n2 = mp // 2, np_ // 2
+
+    a11 = ap[:m2, :n2]
+    a12 = ap[:m2, n2:]
+    a21 = ap[m2:, :n2]
+    a22 = ap[m2:, n2:]
+
+    rec = lambda x: _ata_rec(x, levels - 1, leaf, variant, syrk, base_matmul)
+
+    # C11, C22: sums of two symmetric recursive grams (lines 7-10, Alg. 1).
+    c11 = rec(a11) + rec(a21)
+    c22 = rec(a12) + rec(a22)
+
+    # C21: two generalized-Strassen rectangular products (lines 11-12).
+    c21 = strassen_matmul(
+        a12.T, a11, levels=levels - 1, leaf=leaf, variant=variant,
+        base_matmul=base_matmul,
+    ) + strassen_matmul(
+        a22.T, a21, levels=levels - 1, leaf=leaf, variant=variant,
+        base_matmul=base_matmul,
+    )
+
+    top = jnp.concatenate([c11, jnp.zeros((n2, np_ - n2), c11.dtype)], axis=1)
+    bot = jnp.concatenate([c21.astype(c11.dtype), c22], axis=1)
+    c = jnp.concatenate([top, bot], axis=0)
+    return c[:n, :n]
+
+
+def ata_full(a: jax.Array, **kw) -> jax.Array:
+    """Full symmetric ``a.T @ a`` (mirrors C21 into C12, per the paper)."""
+    return symmetrize_from_lower(ata(a, **kw))
+
+
+def ata_levels_for(m: int, n: int, leaf: int = DEFAULT_LEAF) -> int:
+    """Natural recursion depth: recurse until a dim hits the leaf size."""
+    lv = 0
+    while m > leaf and n > leaf:
+        m, n = (m + 1) // 2, (n + 1) // 2
+        lv += 1
+    return lv

@@ -1,0 +1,360 @@
+"""Analytic cost model from the paper (§3.1, §4.1, §5, §6).
+
+Used by the benchmark harness to replicate Figures 5-8 (exec time, speedup,
+efficiency, Karp-Flatt) and by EXPERIMENTS.md to validate the complexity
+claim (2/7) n^{log2 7}.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+LOG2_7 = math.log2(7.0)
+
+
+# ---------------------------------------------------------------------------
+# §3.1 — operation counts
+# ---------------------------------------------------------------------------
+
+def strassen_mults(n: float) -> float:
+    """Multiplications of Strassen's algorithm, O(n^{log2 7})."""
+    return n ** LOG2_7
+
+
+def ata_mults_bound(n: float) -> float:
+    """Paper's upper bound on ATA multiplications: (2/7) n^{log2 7}."""
+    return (2.0 / 7.0) * n ** LOG2_7
+
+
+def classical_ata_mults(n: float, m: float | None = None) -> float:
+    """Conventional A^tA products: n(n+1)/2 inner products of length m
+    (paper quotes n^2(n+1)/2 for square)."""
+    m = n if m is None else m
+    return m * n * (n + 1) / 2.0
+
+
+def classical_matmul_mults(n: float) -> float:
+    return n ** 3
+
+
+def ata_mults_exact(m: int, n: int, leaf: int = 32, levels: int | None = None,
+                    _memo=None) -> int:
+    """Exact multiplication count of Algorithm 1 with a given leaf size,
+    by direct evaluation of the recursion (classical leaf: m*n^2 products
+    for the full leaf gram — we count the tril-only leaf: m*n*(n+1)/2)."""
+    if _memo is None:
+        _memo = {}
+    key = (m, n, levels)
+    if key in _memo:
+        return _memo[key]
+    if (levels is not None and levels <= 0) or m <= leaf or n <= leaf:
+        res = m * n * (n + 1) // 2
+    else:
+        m1, m2 = (m + 1) // 2, m // 2
+        n1, n2 = (n + 1) // 2, n // 2
+        lv = None if levels is None else levels - 1
+        res = (
+            ata_mults_exact(m1, n1, leaf, lv, _memo)
+            + ata_mults_exact(m2, n1, leaf, lv, _memo)
+            + ata_mults_exact(m1, n2, leaf, lv, _memo)
+            + ata_mults_exact(m2, n2, leaf, lv, _memo)
+            + strassen_mults_exact(n2, m1, n1, leaf, lv, _memo)
+            + strassen_mults_exact(n2, m2, n1, leaf, lv, _memo)
+        )
+    _memo[key] = res
+    return res
+
+
+def strassen_mults_exact(m: int, k: int, n: int, leaf: int = 32,
+                         levels: int | None = None, _memo=None) -> int:
+    """Exact multiplication count of (level-capped) Strassen on (m,k)x(k,n)."""
+    if _memo is None:
+        _memo = {}
+    key = ("s", m, k, n, levels)
+    if key in _memo:
+        return _memo[key]
+    if (levels is not None and levels <= 0) or min(m, k, n) <= leaf:
+        res = m * k * n
+    else:
+        mp, kp, np_ = (m + 1) // 2, (k + 1) // 2, (n + 1) // 2
+        lv = None if levels is None else levels - 1
+        res = 7 * strassen_mults_exact(mp, kp, np_, leaf, lv, _memo)
+    _memo[key] = res
+    return res
+
+
+# ---------------------------------------------------------------------------
+# §4.1 — process-tree sizing
+# ---------------------------------------------------------------------------
+
+def npl(level: int) -> int:
+    """Processes needed for `level` complete parallel levels (eq. 4)."""
+    if level == 0:
+        return 1
+    if level == 1:
+        return 6
+    return 6 * 4 ** (level - 1) + 2 * sum(
+        4 ** k * 7 ** (level - 1 - k) for k in range(level - 1)
+    )
+
+
+def lmax(p: int) -> int:
+    """Max complete parallel levels with P processes (eq. 5)."""
+    level = 0
+    while npl(level + 1) <= p:
+        level += 1
+    return level
+
+
+# ---------------------------------------------------------------------------
+# §5 — communication model (latency + bandwidth along the critical path)
+# ---------------------------------------------------------------------------
+
+def latency_messages(p: int) -> int:
+    """L(n, P): message count along the critical path."""
+    lm = lmax(p)
+    return max(4 * max(lm - 1, 0), 3 * lm)
+
+
+def bandwidth_words(n: int) -> float:
+    """BW(n, P) = (n/2)^2 words (paper: max message size independent of P)."""
+    return (n / 2.0) ** 2
+
+
+def comm_time(n: int, p: int, alpha: float, beta: float) -> float:
+    """alpha * L + beta * BW (paper §5)."""
+    return alpha * latency_messages(p) + beta * bandwidth_words(n)
+
+
+# ---------------------------------------------------------------------------
+# §6 — performance-metric model (speedup / efficiency / Karp-Flatt)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParallelModel:
+    """Critical-path execution-time model for ATA-P.
+
+    T(P) = serial_frac*T1 + (1-serial_frac)*T1/work_share(P) + comm(n, P)
+
+    where work_share(P) is the effective concurrency: with lmax complete
+    levels the slowest path is a HASA-P chain (branching 7, the heaviest
+    child — paper §6.3.1 notes ATA-P children idle while HASA-P children
+    finish), so effective speedup of the compute phase at complete levels is
+    work/critical-path-work. Between complete levels, extra processes only
+    shave the incomplete level partially (paper Fig 5 plateaus).
+    """
+    t1: float              # measured/modeled serial time (seconds)
+    n: int                 # matrix dimension
+    alpha: float = 2e-6    # per-message latency (s) — Galileo-class IB
+    beta: float = 1.3e-9   # per-word time (s) ~ 6 GB/s fp64 effective
+    serial_frac: float = 0.004  # paper Fig 8: e small, ~0.4%
+
+    def critical_path_fraction(self, p: int) -> float:
+        """Fraction of total work on the critical path, from the recursion:
+        one ATA level splits work into 4 ATA shares (4/14 of the FLOPs... we
+        use the measured 2:7 cost ratio — each HASA call costs ~(7/2)x an ATA
+        call at the same level, paper §6.3.1) onto 6 processes."""
+        lm = lmax(p)
+        if lm == 0:
+            return 1.0
+        # Work split at an ATA level: total = 4*w_ata + 2*w_hasa,
+        # w_hasa = 3.5 * w_ata  => critical child share = 3.5/11.
+        ata_child, hasa_child = 1.0 / 11.0, 3.5 / 11.0
+        frac = 1.0
+        for _ in range(lm):
+            frac *= hasa_child  # HASA child dominates the level
+        # At HASA sub-levels the 7 children split evenly (1/7 each), already
+        # accounted: hasa_child at the next level = its own subtree split.
+        # Incomplete level: leftover processes shave the critical path by the
+        # pairing factor k+1 (paper §4.1) on the last level only.
+        extra = p - npl(lm)
+        if extra > 0:
+            k = extra // npl(lm)
+            if k > 0:
+                frac /= (k + 1)
+        return frac
+
+    def time(self, p: int) -> float:
+        if p <= 1:
+            return self.t1
+        frac = self.critical_path_fraction(p)
+        t_par = self.serial_frac * self.t1 + (1 - self.serial_frac) * self.t1 * frac
+        return t_par + comm_time(self.n, p, self.alpha, self.beta)
+
+    def speedup(self, p: int) -> float:
+        return self.t1 / self.time(p)
+
+    def efficiency(self, p: int) -> float:
+        return self.speedup(p) / p
+
+    def karp_flatt(self, p: int) -> float:
+        s = self.speedup(p)
+        return (1.0 / s - 1.0 / p) / (1.0 - 1.0 / p)
+
+
+# ---------------------------------------------------------------------------
+# §4 + §5 — critical-path SIMULATOR of the ATA-P process tree
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimParams:
+    """Per-multiplication throughput + comm constants (Galileo-class).
+
+    ``mem_contention``: Galileo nodes are 2x18-core Broadwell; when a node
+    is fully populated, shared memory bandwidth roughly halves the
+    per-process multiply-accumulate rate vs a lone process (STREAM-class
+    scaling). The serial baseline T(1) runs uncontended, so parallel runs
+    carry factor (1 + c*(min(P, cores)-1)/(cores-1)).
+    """
+    sec_per_mult: float = 6.7e-10   # fitted to Broadwell-node ATA serial rate
+    alpha: float = 2e-6            # per-message latency (s)
+    beta: float = 1.3e-9           # per-word transfer (s) ~6 GB/s fp64
+    overhead: float = 0.04         # per-level fork/join + imbalance fraction
+    mem_contention: float = 0.57   # full-node slowdown factor - 1
+    cores_per_node: int = 36
+    # paper §6.3.1: incomplete parallel levels leave ATA-P processes idle
+    # while HASA-P children finish ("highest time difference ... P=12, 18")
+    incomplete_overhead: float = 0.20
+    # Algorithm 1 line 5 "Initialize A_ij" + the cache-oblivious transposes
+    # of A12/A22 (§3) + C patching run in the parent BEFORE/AFTER forking —
+    # a serial per-level term (copies/elem * 8 B at node memory bandwidth,
+    # sharing the same contention factor). 6 copies/elem fitted; the three
+    # constants (contention, copies, incomplete idle) are fitted ONCE
+    # against {S(6), S(250), E(250)} and validated on everything else.
+    init_copies_per_elem: float = 6.0
+    mem_bw: float = 12e9
+
+
+def simulate_ata_p(n: int, p: int, sp: SimParams = SimParams(),
+                   leaf: int = 32, m: int | None = None) -> float:
+    """Critical-path execution time of ATA-P(n, P) per the paper's process
+    tree (§4): complete levels fan ATA->4xATA+2xHASA (6 procs) and
+    HASA->7xHASA, lefties pair onto the heaviest children (HASA first,
+    larger subproblems next); per ATA level 3 concurrent reductions + 2
+    sends of (n/2)^2 words; per HASA level 4 reductions + 3 sends.
+    """
+    m = n if m is None else m
+    memo: dict = {}
+    # ranks spread evenly over ceil(P/cores) nodes (SLURM default)
+    nodes = -(-p // sp.cores_per_node)
+    per_node = p / nodes
+    contention = 1.0 + sp.mem_contention * (per_node - 1) \
+        / max(sp.cores_per_node - 1, 1)
+    spm = sp.sec_per_mult * contention
+
+    def w_ata(mm, nn):
+        return ata_mults_exact(mm, nn, leaf, None, memo) * spm
+
+    def w_hasa(mm, kk, nn):
+        return strassen_mults_exact(mm, kk, nn, leaf, None, memo) * spm
+
+    def split_ata(g):
+        """Paper §4.1: ATA-P children get [npl(x)]*4 + [7^x]*2 processes
+        for the deepest complete level x = lmax(g)-1; lefties pair k-each
+        onto every process (multiplying each subtree), remainder goes to
+        HASA children first, then larger subproblems."""
+        level = lmax(g)
+        base = [npl(level - 1)] * 4 + [7 ** (level - 1)] * 2
+        total = npl(level)
+        lefties = g - total
+        k = lefties // total
+        alloc = [b * (1 + k) for b in base]
+        rem = lefties - k * total
+        for i in (4, 5, 0, 1, 2, 3):       # HASA first, then ATA children
+            take = min(rem, base[i])
+            alloc[i] += take
+            rem -= take
+            if rem <= 0:
+                break
+        return alloc
+
+    def split_hasa(g):
+        level = 0
+        while 7 ** (level + 1) <= g:
+            level += 1
+        base = [7 ** (level - 1) if level else 1] * 7
+        total = 7 ** level
+        lefties = g - total
+        k = lefties // total
+        alloc = [b * (1 + k) for b in base]
+        rem = lefties - k * total
+        for i in range(7):
+            take = min(rem, base[i])
+            alloc[i] += take
+            rem -= take
+        return alloc
+
+    def lpt_makespan(jobs, g):
+        """Whole-job LPT schedule of child subproblems on g processes —
+        the paper's processes own whole recursive calls, so with fewer
+        processes than children the binding constraint is the makespan,
+        not work/g."""
+        loads = [0.0] * g
+        for w in sorted(jobs, reverse=True):
+            loads[loads.index(min(loads))] += w
+        return max(loads)
+
+    def t_ata(mm, nn, g):
+        if g <= 1 or mm <= leaf or nn <= leaf:
+            return w_ata(mm, nn)
+        m1, m2 = (mm + 1) // 2, mm // 2
+        n1, n2 = (nn + 1) // 2, nn // 2
+        kids = [("a", m1, n1), ("a", m2, n1), ("a", m1, n2), ("a", m2, n2),
+                ("h", n2, m1, n1), ("h", n2, m2, n1)]
+        if g < 6:
+            # not enough for a complete level: whole child calls are
+            # packed onto the g processes (LPT makespan) + the paper's
+            # incomplete-level idle-wait penalty (§6.3.1)
+            return lpt_makespan([_w(kid) for kid in kids], g) \
+                * (1 + sp.overhead) * (1 + sp.incomplete_overhead)
+        alloc = split_ata(g)
+        t_kids = []
+        for kid, gk in zip(kids, alloc):
+            if kid[0] == "a":
+                t_kids.append(t_ata(kid[1], kid[2], gk))
+            else:
+                t_kids.append(t_hasa(kid[1], kid[2], kid[3], gk))
+        comm = 2 * sp.alpha + sp.beta * (nn / 2) ** 2   # 3 reduc + 2 sends,
+        init = mm * nn * sp.init_copies_per_elem * 8 / sp.mem_bw * contention
+        return (max(t_kids) + comm + init) * (1 + sp.overhead)
+
+    def t_hasa(mm, kk, nn, g):
+        if g <= 1 or min(mm, kk, nn) <= leaf:
+            return w_hasa(mm, kk, nn)
+        m2, k2, n2 = (mm + 1) // 2, (kk + 1) // 2, (nn + 1) // 2
+        if g < 7:
+            return lpt_makespan([w_hasa(m2, k2, n2)] * 7, g) \
+                * (1 + sp.overhead) * (1 + sp.incomplete_overhead)
+        alloc = split_hasa(g)
+        t_kids = [t_hasa(m2, k2, n2, gk) for gk in alloc]
+        comm = 3 * sp.alpha + sp.beta * (nn / 2) ** 2   # 4 reduc + 3 sends
+        init = (mm * kk + kk * nn) * sp.init_copies_per_elem * 8 \
+            / sp.mem_bw * contention
+        return (max(t_kids) + comm + init) * (1 + sp.overhead)
+
+    def _w(kid):
+        if kid[0] == "a":
+            return w_ata(kid[1], kid[2])
+        return w_hasa(kid[1], kid[2], kid[3])
+
+    return t_ata(m, n, p)
+
+
+def simulate_metrics(n: int, ps, sp: SimParams = SimParams()) -> dict:
+    """speedup / efficiency / Karp-Flatt across process counts."""
+    t1 = simulate_ata_p(n, 1, sp)
+    out = {"t1": t1, "rows": []}
+    for p in ps:
+        t = simulate_ata_p(n, p, sp)
+        s = t1 / t
+        e = s / p
+        kf = (1.0 / s - 1.0 / p) / (1.0 - 1.0 / p) if p > 1 else 0.0
+        out["rows"].append({"P": p, "time": t, "speedup": s,
+                            "efficiency": e, "karp_flatt": kf})
+    return out
+
+
+# TPU v5e hardware constants (roofline; see launch/dryrun + roofline pkg).
+TPU_V5E_BF16_FLOPS = 197e12       # per chip
+TPU_V5E_HBM_BW = 819e9            # bytes/s
+TPU_V5E_ICI_BW = 50e9             # bytes/s per link

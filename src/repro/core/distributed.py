@@ -1,0 +1,222 @@
+"""Distributed ATA — the paper's ATA-P mapped onto a JAX SPMD mesh.
+
+Paper (§4): a dynamic MPI process tree — each complete parallel level of
+ATA-P fans out to 6 processes (4x ATA + 2x HASA), communicators perform
+3 simultaneous MPI reductions (the two addends of C11, C22, C21), then
+point-to-point sends patch C together on the subtree root.
+
+TPU adaptation (DESIGN.md §2): TPU pods are SPMD machines — the process tree
+becomes a mesh decomposition and the reductions become axis collectives:
+
+* ``gram_allreduce`` — paper-faithful scheme. A is sharded by *rows* over
+  ``row_axis`` (the recursion over m: C = sum_r A_r^t A_r — exactly the
+  C11/C22 two-addend reduction generalized to P addends). Each device runs
+  the sequential ATA recursion on its shard; one ``psum`` realizes the
+  paper's reduction tree. Latency: one collective — matching the paper's
+  claim of minimal message count; bandwidth: n^2 words (the paper's
+  BW = (n/2)^2 per message, and like the paper it is independent of P).
+
+* ``gram_reducescatter`` — beyond-paper: same compute, but the reduction
+  emits C sharded by block-rows (``psum_scatter``), cutting the per-device
+  bandwidth term by P and never materializing C replicated.
+
+* ``gram_ring`` — beyond-paper: A sharded by rows *and* columns
+  (``row_axis`` x ``col_axis``). Diagonal blocks use ATA (half work);
+  off-diagonal blocks use Strassen — the exact ATA/HASA division of labor
+  of the paper — scheduled as a **half-ring**: because C is symmetric, only
+  floor(T/2)+1 ring steps are needed (vs T for a generic A^tB collective
+  matmul). Each step's ``ppermute`` overlaps with the previous step's block
+  product (collective-matmul pattern), turning the paper's blocking
+  Send/Recv into bandwidth-optimal, compute-overlapped ICI traffic.
+
+All three run inside ``shard_map``; ``distributed_gram`` is the pjit-level
+wrapper over a globally-sharded A.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .ata import ata, ata_full
+from .strassen import strassen_matmul
+from .symmetry import symmetrize_from_lower
+
+__all__ = [
+    "gram_allreduce", "gram_reducescatter", "gram_ring",
+    "distributed_gram", "ring_layout_coords",
+]
+
+
+# ---------------------------------------------------------------------------
+# shard_map bodies (take *local* shards, use collectives explicitly)
+# ---------------------------------------------------------------------------
+
+def gram_allreduce(a_local: jax.Array, row_axis: str, *,
+                   levels: int = 2, leaf: int = 256,
+                   variant: str = "strassen") -> jax.Array:
+    """Paper-faithful: local ATA + one all-reduce over the row axis.
+
+    Returns the full symmetric C, replicated over ``row_axis``.
+    """
+    c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant)
+    return jax.lax.psum(c_local, row_axis)
+
+
+def gram_reducescatter(a_local: jax.Array, row_axis: str, *,
+                       levels: int = 2, leaf: int = 256,
+                       variant: str = "strassen") -> jax.Array:
+    """Beyond-paper: local ATA + reduce-scatter (C sharded by rows over
+    ``row_axis``); bandwidth term / P, no replicated C."""
+    c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant)
+    return jax.lax.psum_scatter(c_local, row_axis, scatter_dimension=0,
+                                tiled=True)
+
+
+def gram_ring(a_local: jax.Array, col_axis: str,
+              row_axis: Optional[str] = None, *,
+              levels: int = 2, leaf: int = 256,
+              variant: str = "strassen") -> jax.Array:
+    """Half-ring symmetric collective gram (beyond-paper TPU schedule).
+
+    Device layout: ``a_local`` is the (rows/R, cols/T) shard of A.
+    Step 0 computes the diagonal block with ATA (the paper's symmetric
+    recursion, half work); step s rotates column blocks by one hop around
+    ``col_axis`` and computes one off-diagonal block with Strassen (the
+    paper's HASA role). Symmetry halves the ring: floor(T/2) hops.
+
+    Returns a stack of local blocks, shape (floor(T/2)+1, n_loc, n_loc):
+    entry s on device c is C[c, (c - s) % T] (lower-circulant layout; see
+    ``ring_layout_coords``), already reduced over ``row_axis`` if given.
+    """
+    T = jax.lax.axis_size(col_axis)
+    c = jax.lax.axis_index(col_axis)
+    n_loc = a_local.shape[1]
+    half = T // 2
+
+    perm = [(i, (i + 1) % T) for i in range(T)]
+
+    # Step 0: diagonal block — symmetric, use ATA (half the multiplications).
+    blocks = [ata_full(a_local, levels=levels, leaf=leaf, variant=variant)]
+
+    cur = a_local
+    for s in range(1, half + 1):
+        # Issue the rotate for this step; XLA's async collective-permute
+        # overlaps it with the *previous* iteration's block product because
+        # there is no data dependence between them.
+        cur = jax.lax.ppermute(cur, col_axis, perm)
+        # Device c now holds column block (c - s) % T.
+        blk = strassen_matmul(a_local.T, cur, levels=levels, leaf=leaf,
+                              variant=variant)
+        if s == half and T % 2 == 0:
+            # At the antipodal step each unordered pair {c, c-T/2} appears on
+            # both devices: keep it only on c < T/2 (SPMD runs the same
+            # program everywhere; masking is the "incomplete level" analogue).
+            keep = (c < half).astype(blk.dtype)
+            blk = blk * keep
+        blocks.append(blk)
+
+    out = jnp.stack(blocks)  # (half+1, n_loc, n_loc)
+    if row_axis is not None:
+        out = jax.lax.psum(out, row_axis)
+    return out
+
+
+def ring_layout_coords(T: int) -> list[tuple[int, int, int]]:
+    """(device, step, global_block_row, global_block_col) ownership map of
+    the half-ring layout, as (c, s, i, j) with (i, j) in the lower triangle."""
+    coords = []
+    half = T // 2
+    for dev in range(T):
+        for s in range(half + 1):
+            if s == half and T % 2 == 0 and dev >= half:
+                continue  # masked duplicate
+            j = (dev - s) % T
+            i, jj = (dev, j) if dev >= j else (j, dev)  # mirror wraps upper
+            coords.append((dev, s, i, jj))
+    return coords
+
+
+# ---------------------------------------------------------------------------
+# pjit-level wrapper
+# ---------------------------------------------------------------------------
+
+def distributed_gram(a: jax.Array, mesh: Mesh, *,
+                     scheme: str = "allreduce",
+                     row_axis: str = "data",
+                     col_axis: Optional[str] = None,
+                     levels: int = 2, leaf: int = 256,
+                     variant: str = "strassen",
+                     assemble: bool = True) -> jax.Array:
+    """Compute C = A^t A for a globally sharded A on ``mesh``.
+
+    scheme:
+      "allreduce"      — paper-faithful (rows sharded, psum).  C replicated.
+      "reducescatter"  — C sharded by rows over ``row_axis``.
+      "ring"           — rows x cols sharded, half-ring schedule. With
+                         ``assemble`` (testing/solvers) the dense C is
+                         rebuilt replicated; production keeps the circulant
+                         block layout (sharded over ``col_axis``) —
+                         n(n+1)/2-ish storage, zero post-processing.
+    """
+    from jax import shard_map
+
+    if scheme in ("allreduce", "reducescatter"):
+        body = {
+            "allreduce": gram_allreduce,
+            "reducescatter": gram_reducescatter,
+        }[scheme]
+        fn = functools.partial(body, row_axis=row_axis, levels=levels,
+                               leaf=leaf, variant=variant)
+        out_spec = P() if scheme == "allreduce" else P(row_axis)
+        return shard_map(
+            fn, mesh=mesh, in_specs=P(row_axis, None), out_specs=out_spec,
+        )(a)
+
+    if scheme == "ring":
+        if col_axis is None:
+            raise ValueError("ring scheme needs col_axis")
+        T = mesh.shape[col_axis]
+        n = a.shape[1]
+
+        def body(a_local):
+            return gram_ring(a_local, col_axis, row_axis,
+                             levels=levels, leaf=leaf, variant=variant)
+
+        stacks = shard_map(
+            body, mesh=mesh,
+            in_specs=P(row_axis, col_axis),
+            # stack: (half+1, n/T, n/T) per device -> gather cols of blocks
+            out_specs=P(None, None, col_axis),
+        )(a)
+        if not assemble:
+            return stacks        # production: circulant layout, sharded
+        # stacks: (half+1, n/T, n) — device c's column of blocks at slot c.
+        return assemble_ring_gram(stacks, T, n)
+
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def assemble_ring_gram(stacks: jax.Array, T: int, n: int) -> jax.Array:
+    """Assemble the dense symmetric C from half-ring output.
+
+    ``stacks``: (half+1, n_loc, n) where [:, :, c*n_loc:(c+1)*n_loc] is
+    device c's block stack (entry s = C[c, (c-s)%T] contribution).
+    """
+    n_loc = n // T
+    c = jnp.zeros((n, n), stacks.dtype)
+    half = T // 2
+    for dev in range(T):
+        for s in range(half + 1):
+            if s == half and T % 2 == 0 and dev >= half:
+                continue
+            blk = stacks[s, :, dev * n_loc:(dev + 1) * n_loc]  # C[dev, j]
+            j = (dev - s) % T
+            if dev >= j:
+                c = jax.lax.dynamic_update_slice(c, blk, (dev * n_loc, j * n_loc))
+            else:  # wrapped: this is C[dev, j] with j > dev — mirror it
+                c = jax.lax.dynamic_update_slice(c, blk.T, (j * n_loc, dev * n_loc))
+    return symmetrize_from_lower(jnp.tril(c))

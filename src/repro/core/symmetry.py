@@ -1,0 +1,88 @@
+"""Packed lower-triangular storage utilities.
+
+The paper stores only the lower triangle of C = A^t A — n(n+1)/2 words
+instead of n^2. On TPU we keep the same saving but at *block* granularity so
+every tile stays MXU-shaped: the packed representation is a stack of
+T(T+1)/2 blocks of shape (bn, bn), ordered row-major over the lower triangle
+((i, j) with i >= j, i major).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def tri_count(t: int) -> int:
+    return t * (t + 1) // 2
+
+
+def tri_index(i: int, j: int) -> int:
+    """Linear index of lower-triangular block (i, j), i >= j."""
+    if j > i:
+        raise ValueError(f"upper-triangular block ({i},{j}) is never stored")
+    return i * (i + 1) // 2 + j
+
+
+def tri_coords(t: int) -> np.ndarray:
+    """(tri_count(t), 2) int array of (i, j) for linear indices 0.. ."""
+    out = np.zeros((tri_count(t), 2), dtype=np.int32)
+    k = 0
+    for i in range(t):
+        for j in range(i + 1):
+            out[k] = (i, j)
+            k += 1
+    return out
+
+
+def pack_tril(c: jax.Array) -> jax.Array:
+    """Dense symmetric/lower (n, n) -> packed vector of n(n+1)/2 entries."""
+    n = c.shape[0]
+    idx = jnp.tril_indices(n)
+    return c[idx]
+
+
+def unpack_tril(packed: jax.Array, n: int, *, symmetrize: bool = True) -> jax.Array:
+    """Packed n(n+1)/2 vector -> dense (n, n); mirrors to the upper half when
+    ``symmetrize`` (C12 = C21^t, per the paper)."""
+    rows, cols = jnp.tril_indices(n)
+    c = jnp.zeros((n, n), packed.dtype).at[rows, cols].set(packed)
+    if symmetrize:
+        c = c + c.T - jnp.diag(jnp.diag(c))
+    return c
+
+
+def pack_tril_blocks(c: jax.Array, bn: int) -> jax.Array:
+    """Dense (n, n) with n % bn == 0 -> (tri_count(t)*bn, bn) block stack."""
+    n = c.shape[0]
+    if n % bn:
+        raise ValueError(f"n={n} not divisible by block {bn}")
+    t = n // bn
+    blocks = [c[i * bn:(i + 1) * bn, j * bn:(j + 1) * bn]
+              for i in range(t) for j in range(i + 1)]
+    return jnp.concatenate(blocks, axis=0)
+
+
+def unpack_tril_blocks(packed: jax.Array, n: int, bn: int,
+                       *, symmetrize: bool = True) -> jax.Array:
+    """Inverse of :func:`pack_tril_blocks`."""
+    t = n // bn
+    c = jnp.zeros((n, n), packed.dtype)
+    k = 0
+    for i in range(t):
+        for j in range(i + 1):
+            blk = jax.lax.dynamic_slice_in_dim(packed, k * bn, bn, axis=0)
+            c = jax.lax.dynamic_update_slice(c, blk, (i * bn, j * bn))
+            k += 1
+    if symmetrize:
+        # Diagonal blocks carry their own (symmetric) upper halves — drop
+        # them before mirroring so they are not double-counted.
+        c = jnp.tril(c)
+        c = c + jnp.tril(c, -1).T
+    return c
+
+
+def symmetrize_from_lower(c_lower: jax.Array) -> jax.Array:
+    """Mirror the strict lower triangle to the upper half (C12 = C21^t)."""
+    tri = jnp.tril(c_lower, -1)
+    return jnp.tril(c_lower) + tri.T

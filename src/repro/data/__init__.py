@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticStream, get_batch  # noqa: F401

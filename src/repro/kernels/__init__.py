@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the ATA hot spots (validated in interpret mode).
+
+- matmul:    tiled MXU matmul (ATA/HASA base case)
+- syrk:      lower-triangular-blocks-only gram (the paper's n(n+1)/2 saving)
+- combine:   fused Strassen recombination (HBM-traffic reduction)
+- transpose: tiled transpose (cache-oblivious transpose analogue)
+"""
+from . import ops, ref
+from .ops import (
+    matmul, syrk, syrk_packed, strassen_combine, transpose,
+    pallas_base_matmul, pallas_base_syrk,
+)
+
+__all__ = ["ops", "ref", "matmul", "syrk", "syrk_packed", "strassen_combine",
+           "transpose", "pallas_base_matmul", "pallas_base_syrk"]

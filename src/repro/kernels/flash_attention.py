@@ -1,0 +1,120 @@
+"""FlashAttention Pallas kernel (TPU target, interpret-mode validated).
+
+Scores never leave VMEM: the kv sweep is the innermost grid dim with an
+online-softmax carry (m, l, acc) in VMEM scratch, so HBM traffic per
+(batch, head) is q + k + v read once and o written once — vs the XLA
+lowering that materializes (Sq, Skv) fp32 score tensors in HBM (the
+dominant memory term of every prefill/train cell in the baseline roofline).
+
+Layout: q (B, H, Sq, D), k/v (B, Hkv, Skv, D) — GQA folds the group into
+the head index map (h -> h // group). Causal + sliding-window masking via
+block-position arithmetic; fully-masked kv blocks are SKIPPED (causal
+halves the work, window makes it O(S*W)).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, n_kv: int,
+                  bq: int, bk: int, softcap: float):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kv_pos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level skip: causal blocks strictly above the diagonal and
+    # blocks entirely below the sliding window do no work at all
+    work = (not causal) or (kv_i * bk <= q_i * bq + bq - 1)
+    if window > 0:
+        work = jnp.logical_and(
+            work, (q_i * bq) - (kv_i * bk + bk - 1) < window)
+
+    @pl.when(work)
+    def _work():
+        qb = q_ref[0, 0]                                       # (bq, d)
+        kb = k_ref[0, 0]                                       # (bk, d)
+        s = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (bq, bk)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window > 0:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                    # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                 # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                         # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, 1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, softcap: float = 0.0,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D); H % Hkv == 0.
+    Sq % block_q == 0, Skv % block_kv == 0 (ops.flash_mha pads).
+    Returns (B, H, Sq, D) in q.dtype."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq, bk = min(block_q, sq), min(block_kv, skv)
+    n_q, n_kv = sq // bq, skv // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window or 0,
+        n_kv=n_kv, bq=bq, bk=bk, softcap=softcap or 0.0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, qi, ki: (bh // h, (bh % h) // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, qi, ki: (bh // h, (bh % h) // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # m
+            pltpu.VMEM((bq, 1), jnp.float32),     # l
+            pltpu.VMEM((bq, d), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

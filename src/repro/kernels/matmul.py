@@ -1,0 +1,65 @@
+"""Tiled MXU matmul Pallas kernel — the ATA/HASA base case on TPU.
+
+The paper's base case (classical multiplication below size 32) becomes an
+explicitly VMEM-tiled MXU matmul: (bm, bk) x (bk, bn) tiles with an fp32
+VMEM accumulator, K innermost in the grid so the accumulator lives across
+the K sweep of one output tile. Block shapes default to 256 (multiples of
+the 128x128 systolic array; 8x128 lane/sublane aligned).
+
+Inputs must be padded to block multiples (done by ops.matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_padded(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 256,
+    bn: int = 256,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``a @ b`` for shapes already padded to (bm, bk) / (bk, bn) multiples."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        a.shape, b.shape, bm, bk, bn)
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,141 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle arbitrary shapes by zero-padding to block multiples (exact for
+matmul/syrk/transpose/combine) and slicing back. ``interpret`` defaults to
+True off-TPU so the same call sites validate on CPU and run compiled on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as _matmul
+from . import syrk as _syrk
+from . import combine as _combine
+from . import transpose as _transpose
+from ..core.symmetry import unpack_tril_blocks
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mults):
+    pads = [(-d) % m for d, m in zip(x.shape, mults)]
+    if any(pads):
+        x = jnp.pad(x, [(0, p) for p in pads])
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(a, b, *, bm=256, bk=256, bn=256, interpret=None):
+    """``a @ b`` via the tiled MXU kernel; any shapes, any float dtype."""
+    interpret = _auto_interpret(interpret)
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    out = _matmul.matmul_padded(ap, bp, bm=bm, bk=bk, bn=bn,
+                                interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "interpret"))
+def syrk_packed(a, *, bk=256, bn=256, interpret=None):
+    """Packed lower-tri block stack of ``a.T @ a`` (padded N -> caller keeps
+    block layout; use :func:`syrk` for a dense result at original size)."""
+    interpret = _auto_interpret(interpret)
+    ap = _pad_to(a, (bk, bn))
+    return _syrk.syrk_packed(ap, bk=bk, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "symmetrize", "interpret"))
+def syrk(a, *, bk=256, bn=256, symmetrize=False, interpret=None):
+    """Dense ``tril(a.T @ a)`` (or full symmetric) via the packed kernel."""
+    interpret = _auto_interpret(interpret)
+    n = a.shape[1]
+    ap = _pad_to(a, (bk, bn))
+    packed = _syrk.syrk_packed(ap, bk=bk, bn=bn, interpret=interpret)
+    dense = unpack_tril_blocks(packed, ap.shape[1], bn, symmetrize=symmetrize)
+    if not symmetrize:
+        # diagonal blocks are computed full (bn x bn) — drop their upper halves
+        dense = jnp.tril(dense)
+    return dense[:n, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def strassen_combine(m1, m2, m3, m4, m5, m6, m7, *, bm=256, bn=256,
+                     interpret=None):
+    """Fused Strassen recombination -> (c11, c12, c21, c22)."""
+    interpret = _auto_interpret(interpret)
+    m, n = m1.shape
+    ms = [_pad_to(x, (bm, bn)) for x in (m1, m2, m3, m4, m5, m6, m7)]
+    outs = _combine.strassen_combine(*ms, bm=bm, bn=bn, interpret=interpret)
+    return tuple(o[:m, :n] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def transpose(a, *, bm=256, bn=256, interpret=None):
+    """``a.T`` via the tiled transpose kernel."""
+    interpret = _auto_interpret(interpret)
+    m, n = a.shape
+    ap = _pad_to(a, (bm, bn))
+    return _transpose.transpose_padded(ap, bm=bm, bn=bn,
+                                       interpret=interpret)[:n, :m]
+
+
+# ---------------------------------------------------------------------------
+# Kernel-backed base cases for the core recursion (TPU hot path).
+# ---------------------------------------------------------------------------
+
+def pallas_base_matmul(bm=256, bk=256, bn=256, interpret=None):
+    """base_matmul hook for repro.core.strassen_matmul."""
+    def base(a, b):
+        return matmul(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return base
+
+
+def pallas_base_syrk(bk=256, bn=256, interpret=None):
+    """base_syrk hook for repro.core.ata (lower-tri-only leaf gram)."""
+    def base(a):
+        return syrk(a, bk=bk, bn=bn, symmetrize=False, interpret=interpret)
+    return base
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_kv", "interpret"))
+def flash_mha(q, k, v, *, causal=True, window=0, softcap=0.0,
+              block_q=512, block_kv=512, interpret=None):
+    """FlashAttention with (B, S, H, D) layout + arbitrary seq lengths
+    (pads to block multiples; padded kv is masked by causality/neg-inf)."""
+    from . import flash_attention as _fa
+    interpret = _auto_interpret(interpret)
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(block_q, max(sq, 16))
+    bk = min(block_kv, max(skv, 16))
+    pq, pk = (-sq) % bq, (-skv) % bk
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        # pad kv with zeros; give padded keys -inf via a window trick is
+        # not needed: padded q rows are sliced away, and padded kv columns
+        # are masked because causal q_pos < kv_pos for all real q ... only
+        # true for causal; for non-causal we mask via window=skv when
+        # padding. Handled by masking below through kv_len emulation:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        if not causal:
+            raise NotImplementedError(
+                "non-causal flash with ragged kv: pad kv to block multiple "
+                "at the call site")
+    o = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                            softcap=softcap, block_q=bq, block_kv=bk,
+                            interpret=interpret)
+    return o[:, :, :sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def syrk_packed_ref(a: jax.Array, bn: int, out_dtype=None) -> jax.Array:
+    """Packed lower-triangular block stack of a.T @ a (row-major tri order)."""
+    out_dtype = out_dtype or a.dtype
+    c = jnp.dot(a.T, a, preferred_element_type=jnp.float32).astype(out_dtype)
+    n = c.shape[0]
+    t = n // bn
+    blocks = [c[i * bn:(i + 1) * bn, j * bn:(j + 1) * bn]
+              for i in range(t) for j in range(i + 1)]
+    return jnp.concatenate(blocks, axis=0)
+
+
+def strassen_combine_ref(m1, m2, m3, m4, m5, m6, m7):
+    c11 = m1 + m4 - m5 + m7
+    c12 = m3 + m5
+    c21 = m2 + m4
+    c22 = m1 - m2 + m3 + m6
+    return c11, c12, c21, c22
+
+
+def transpose_ref(a: jax.Array) -> jax.Array:
+    return a.T
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
+                        softcap=0.0):
+    """Plain softmax attention; q (B,H,Sq,D), k/v (B,Hkv,Skv,D)."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = h // hkv
+    kf = jnp.repeat(k, g, axis=1)
+    vf = jnp.repeat(v, g, axis=1)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vf.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run process;
+# tests/benchmarks see the real single device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: sharding propagation succeeds, the collective schedule exists,
+and ``memory_analysis()`` shows the per-device footprint. Artifacts
+(memory, cost_analysis, collective census) land in artifacts/dryrun/ for
+the roofline analysis (benchmarks/bench_roofline.py, EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+  python -m repro.launch.dryrun --gram gram_64k            # paper's own op
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES
+from ..configs.registry import (ARCHS, get_arch, get_shape, input_specs,
+                                cell_runnable, all_cells)
+from ..configs.paper_ata import GRAM_CELLS
+from ..models import init_params, init_cache
+from ..models.model import forward, decode_step
+from ..optim import adamw
+from ..parallel.act import (ActivationSharding, use_activation_sharding,
+                            _fit_spec)
+from ..parallel.sharding import param_specs, cache_specs, to_named
+from ..roofline.hlo_census import collective_census, summarize
+from ..roofline.hlo_cost import analyze_hlo
+from ..runtime.trainer import make_train_step
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _mem_dict(mem) -> dict:
+    return {k: getattr(mem, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes")}
+
+
+def flash_kernel_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic GLOBAL FLOPs of the substituted flash-attention kernels
+    (the stub carries their HBM interface; FLOPs are added here).
+    Causal halves the score work (block skipping); sliding windows cap it;
+    train multiplies by 3 for the backward kernel (dq, dk, dv passes)."""
+    if cfg.family == "ssm":
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    hq = cfg.num_heads
+    d = dv = cfg.head_dim_
+    if cfg.mla is not None:
+        d = cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim
+        dv = cfg.mla.v_head_dim
+
+    def att(layers, sq, skv, causal=True, window=None):
+        eff = skv / 2 if causal else skv
+        if window and window < skv:
+            eff = min(eff, window)
+        return 2.0 * b * hq * sq * eff * (d + dv) * layers
+
+    total = 0.0
+    if cfg.family == "audio":
+        total += att(cfg.encoder_layers, cfg.encoder_seq, cfg.encoder_seq,
+                     causal=False)
+        total += att(cfg.num_layers, s, s)
+        total += att(cfg.num_layers, s, cfg.encoder_seq, causal=False)
+    elif cfg.family == "hybrid":
+        total += att(cfg.num_layers // max(cfg.hybrid_attn_every, 1), s, s)
+    elif cfg.alt_local_global and cfg.sliding_window:
+        total += att(cfg.num_layers // 2, s, s)
+        total += att(cfg.num_layers - cfg.num_layers // 2, s, s,
+                     window=cfg.sliding_window)
+    else:
+        total += att(cfg.num_layers, s, s)
+    if shape.kind == "train":
+        total *= 3.0
+    return total
+
+
+def _spec_leaf(s):
+    return isinstance(s, P)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               fsdp_axes=("data",), sp=True):
+    """Returns (fn_to_jit, abstract_args, in_shardings, out_shardings,
+    donate, policy)."""
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_s = jax.eval_shape(lambda k: init_params(cfg, k), key_s)
+    pspecs = param_specs(params_s, mesh, fsdp_axes=fsdp_axes,
+                         moe_stationary=shape.kind == "decode")
+    pshard = to_named(pspecs, mesh)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    specs = input_specs(cfg, shape)
+
+    def nsh(spec: P, shape_):
+        """Divisibility-checked NamedSharding (falls back per-dim)."""
+        return NamedSharding(mesh, _fit_spec(spec, shape_, mesh))
+
+    def batch_shard(sp):
+        return {k: nsh(P(dp, *([None] * (len(v.shape) - 1))), v.shape)
+                for k, v in sp.items()}
+
+    if shape.kind == "train":
+        # >100B params: bf16 Adam moments (2+2+2+2 B/param with grads) —
+        # fp32 moments for 480B/671B cannot fit a v5e pod's aggregate HBM
+        # no matter how they are sharded. Recorded in DESIGN.md §memory.
+        moment_dtype = jnp.bfloat16 if cfg.param_count() > 1e11 \
+            else jnp.float32
+        opt = adamw(1e-4, moment_dtype=moment_dtype)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        # Adam moments mirror the param tree: reuse its specs exactly
+        # (ZeRO-1: optimizer state sharded with the FSDP axes for free).
+        oshard = {"m": pshard, "v": pshard}
+        state_s = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                   "params": params_s, "opt_state": opt_s}
+        state_sh = {"step": NamedSharding(mesh, P()), "params": pshard,
+                    "opt_state": oshard}
+        bshard = batch_shard(specs)
+        fn = make_train_step(cfg, opt)
+        policy = ActivationSharding.for_training(mesh, sp=sp)
+        return (fn, (state_s, specs), (state_sh, bshard),
+                (state_sh, None), (0,), policy)
+
+    if shape.kind == "prefill":
+        cache_s = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cshard = to_named(cache_specs(cache_s, mesh), mesh)
+        bshard = batch_shard(specs)
+
+        def fn(params, inputs, cache):
+            logits, cache = forward(cfg, params, inputs["tokens"],
+                                    enc_inputs=inputs.get("enc_inputs"),
+                                    cache=cache, mode="prefill")
+            return logits[:, -1], cache
+
+        policy = ActivationSharding.for_training(mesh, sp=sp)
+        lsh = nsh(P(dp, "model"), (shape.global_batch, cfg.vocab_size))
+        return (fn, (params_s, specs, cache_s), (pshard, bshard, cshard),
+                (lsh, cshard), (2,), policy)
+
+    # decode
+    cache_s = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cshard = to_named(cache_specs(cache_s, mesh), mesh)
+    tok_sh = {"tokens": nsh(P(dp, None), (shape.global_batch, 1))}
+
+    def fn(params, inputs, cache):
+        return decode_step(cfg, params, inputs["tokens"], cache)
+
+    policy = ActivationSharding.for_decode(mesh, fsdp_axes=fsdp_axes)
+    lsh = nsh(P(dp, "model"), (shape.global_batch, cfg.vocab_size))
+    return (fn, (params_s, specs, cache_s), (pshard, tok_sh, cshard),
+            (lsh, cshard), (2,), policy)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod=False,
+             fsdp_axes=None, sp=True, out_dir=ARTIFACT_DIR,
+             skip_existing=False, tag="", overrides=None) -> dict:
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    path = os.path.join(out_dir, cell + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip] {cell}")
+        with open(path) as f:
+            return json.load(f)
+    if not cell_runnable(cfg, shape):
+        print(f"[n/a ] {cell} (long_500k needs sub-quadratic attention)")
+        return {"cell": cell, "status": "skipped_quadratic"}
+
+    if fsdp_axes is None:
+        # giant models: shard params/opt over every DP axis (ZeRO across
+        # pods) — required for the 400B+ archs to fit; costs cross-pod
+        # gathers, recorded honestly in the census.
+        big = cfg.param_count() > 3e10
+        fsdp_axes = ("pod", "data") if (multi_pod and big) else ("data",)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args_s, in_sh, out_sh, donate, policy = build_cell(
+        cfg, shape, mesh, fsdp_axes=fsdp_axes, sp=sp)
+
+    t0 = time.perf_counter()
+    with use_activation_sharding(policy):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args_s)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"[ok  ] {cell}: lower {t_lower:.1f}s compile {t_compile:.1f}s  "
+          f"args {mem.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp {mem.temp_size_in_bytes/2**30:.2f}GiB")
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    census = summarize(collective_census(hlo_text))
+    census_ops = census.pop("ops")
+    # trip-count-aware analysis (XLA's cost_analysis counts scan bodies once)
+    corrected = analyze_hlo(hlo_text)
+
+    artifact = {
+        "cell": cell, "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "mesh_shape": list(mesh.devices.shape),
+        "axes": list(mesh.axis_names), "kind": shape.kind,
+        "fsdp_axes": list(fsdp_axes), "sp": sp, "status": "ok",
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory": _mem_dict(mem),
+        "cost": {k: v for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "cost_corrected": {"flops": corrected["flops"],
+                           "bytes": corrected["bytes"],
+                           "unknown_trip_loops":
+                               corrected["unknown_trip_loops"]},
+        "collectives": census,
+        "collectives_corrected": corrected["collectives"],
+        "collective_op_count": len(census_ops),
+    }
+    if cfg.attn_impl == "stub":
+        artifact["kernel_substitution"] = {
+            "kernel": "kernels/flash_attention.py",
+            "flops_global": flash_kernel_flops(cfg, shape),
+            "note": "HBM interface traffic carried by the stub; FLOPs "
+                    "added analytically by roofline/analysis.py",
+        }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    return artifact
+
+
+def run_gram_cell(name: str, *, multi_pod=False, out_dir=ARTIFACT_DIR,
+                  skip_existing=False) -> dict:
+    """Dry-run the paper's own operation: distributed C = A^t A."""
+    from ..core.distributed import distributed_gram
+    gc = GRAM_CELLS[name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"gram__{name}__{mesh_name}"
+    path = os.path.join(out_dir, cell + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    row_axis = ("pod", "data") if multi_pod else "data"
+    col_axis = "model" if gc.scheme == "ring" else None
+    in_spec = P(row_axis, col_axis) if gc.scheme == "ring" \
+        else P(row_axis, None)
+
+    def fn(a):
+        # production path: ring keeps the sharded circulant block layout
+        return distributed_gram(a, mesh, scheme=gc.scheme,
+                                row_axis=row_axis, col_axis=col_axis,
+                                levels=gc.levels, assemble=False)
+
+    a_s = jax.ShapeDtypeStruct((gc.m, gc.n), jnp.dtype(gc.dtype))
+    t0 = time.perf_counter()
+    lowered = jax.jit(fn, in_shardings=NamedSharding(mesh, in_spec)).lower(a_s)
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    census = summarize(collective_census(compiled.as_text()))
+    census.pop("ops")
+    artifact = {
+        "cell": cell, "arch": f"gram:{gc.scheme}", "shape": name,
+        "mesh": mesh_name, "kind": "gram", "status": "ok",
+        "m": gc.m, "n": gc.n, "scheme": gc.scheme, "levels": gc.levels,
+        "compile_s": t_compile, "memory": _mem_dict(mem),
+        "cost": {k: v for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": census,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(f"[ok  ] {cell}: compile {t_compile:.1f}s")
+    return artifact
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--gram", choices=sorted(GRAM_CELLS), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--all-gram", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--flash-sub", action="store_true",
+                    help="flash-kernel substitution variant (attention at "
+                         "kernel-interface traffic; tag __flash): the "
+                         "optimized roofline table")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+    overrides = {"attn_impl": "stub"} if args.flash_sub else None
+    tag = "__flash" if args.flash_sub else ""
+
+    failures = []
+    def _try(fn, *a, **kw):
+        try:
+            fn(*a, **kw)
+        except Exception:
+            failures.append((a, kw))
+            traceback.print_exc()
+
+    if args.gram:
+        run_gram_cell(args.gram, multi_pod=args.multi_pod, out_dir=args.out,
+                      skip_existing=args.skip_existing)
+    elif args.all_gram:
+        for name in GRAM_CELLS:
+            for mp in (False, True):
+                _try(run_gram_cell, name, multi_pod=mp, out_dir=args.out,
+                     skip_existing=args.skip_existing)
+    elif args.all:
+        for arch, shape in all_cells():
+            if args.flash_sub and get_shape(shape).kind == "decode":
+                continue          # decode never materializes scores anyway
+            _try(run_cell, arch, shape, multi_pod=args.multi_pod,
+                 sp=not args.no_sp, out_dir=args.out,
+                 skip_existing=args.skip_existing, tag=tag,
+                 overrides=overrides)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 sp=not args.no_sp, out_dir=args.out,
+                 skip_existing=args.skip_existing, tag=tag,
+                 overrides=overrides)
+    if failures:
+        print(f"{len(failures)} FAILED cells")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

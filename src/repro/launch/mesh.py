@@ -1,0 +1,21 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (device count is locked on first jax init)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis
+    crosses DCI — keep only DP-style (per-step, overlappable) collectives
+    on it."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)

@@ -1,0 +1,14 @@
+"""10-architecture model zoo (pure JAX, parameter pytrees, scan-over-layers).
+
+Families: dense (GQA / sliding+softcap / qk-norm / QKV-bias), MoE (top-k +
+shared + dense-residual), MLA (DeepSeek), SSM (Mamba2-SSD), hybrid (Zamba2),
+enc-dec audio (Whisper backbone), early-fusion VLM backbone (Chameleon).
+"""
+from .model import (  # noqa: F401
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    prefill,
+    decode_step,
+)

@@ -1,0 +1,245 @@
+"""Transformer / MoE / SSM blocks: norms + residuals around the layer lib.
+
+Every block fn has the shape-stable signature
+    block(params, x, cfg, *, layer_idx, cache=None, pos_info, ...)
+      -> (x, new_cache)
+so stacks can run under ``lax.scan`` (params stacked on a leading L axis,
+cache stacked likewise). ``cache`` is a dict or None; ``pos_info`` carries
+(positions, q_pos, kv_pos, kv_len) so train/prefill/decode share one code
+path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+
+class PosInfo(NamedTuple):
+    positions: jax.Array          # (B, S) or (S,) absolute positions of x
+    q_pos: jax.Array              # (S,) query positions for masking
+    kv_pos: jax.Array             # (Skv,) kv positions
+    kv_len: Optional[jax.Array]   # scalar: valid kv slots (decode) or None
+
+
+def _window_for_layer(cfg: ModelConfig, layer_idx):
+    """Gemma-2 alternating local/global: even layers slide, odd are global.
+    ``layer_idx`` may be traced (scan) — the window becomes a traced scalar.
+    """
+    if cfg.sliding_window is None:
+        return None
+    if not cfg.alt_local_global:
+        return cfg.sliding_window
+    big = jnp.int32(2**30)
+    return jnp.where(layer_idx % 2 == 0, jnp.int32(cfg.sliding_window), big)
+
+
+# ---------------------------------------------------------------------------
+# Attention (+MLP) block — dense families, gemma2, chameleon, qwen, whisper
+# ---------------------------------------------------------------------------
+
+def init_attn_block(cfg: ModelConfig, key, *, cross: bool = False,
+                    d_ff: Optional[int] = None):
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln_attn": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(cfg, ks[0]),
+        "ln_mlp": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(cfg, ks[1], d_ff=d_ff),
+    }
+    if cfg.post_norms:
+        p["post_attn"] = L.init_norm(cfg, cfg.d_model)
+        p["post_mlp"] = L.init_norm(cfg, cfg.d_model)
+    if cross:
+        p["ln_cross"] = L.init_norm(cfg, cfg.d_model)
+        p["cross"] = L.init_attention(cfg, ks[2], cross=True)
+    return p
+
+
+def attn_block(p, x, cfg: ModelConfig, *, layer_idx, pos: PosInfo,
+               cache=None, enc_out=None, causal=True):
+    """Pre-norm attention + MLP block (optional gemma2 post-norms, optional
+    whisper cross-attention). cache: {"k","v"[,"ck","cv"]} or None."""
+    window = _window_for_layer(cfg, layer_idx)
+
+    h = L.apply_norm(p["ln_attn"], x, cfg)
+    q, k, v = L.attention_qkv(p["attn"], h, cfg, positions=pos.positions)
+    new_cache = None
+    if cache is not None:
+        if k.shape[1] == cache["k"].shape[1]:      # prefill fills the cache
+            ck, cv = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        else:                                       # decode: write one slot
+            idx = pos.q_pos[0]
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+    o = L.attention(q, k, v, q_pos=pos.q_pos, kv_pos=pos.kv_pos,
+                    causal=causal, window=window, kv_len=pos.kv_len,
+                    attn_softcap=cfg.attn_logit_softcap,
+                    chunk_q=cfg.attn_chunk_q if x.shape[1] > cfg.attn_chunk_q
+                    else 0,
+                    chunk_kv=cfg.attn_chunk_kv, impl=cfg.attn_impl)
+    o = L.attention_out(p["attn"], o, cfg)
+    if cfg.post_norms:
+        o = L.apply_norm(p["post_attn"], o, cfg)
+    x = x + o
+
+    if "cross" in p:
+        h = L.apply_norm(p["ln_cross"], x, cfg)
+        qc = L.attention_qkv(p["cross"], h, cfg)[0]   # q only (no rope: learned pos)
+        if cache is not None and "ck" in cache and enc_out is None:
+            kc, vc = cache["ck"], cache["cv"]          # decode: cached cross K/V
+        else:
+            _, kc, vc = L.attention_qkv(p["cross"], h, cfg, kv_src=enc_out)
+        if new_cache is not None:
+            new_cache["ck"], new_cache["cv"] = kc, vc
+        enc_pos = jnp.arange(kc.shape[1])
+        oc = L.attention(qc, kc, vc, q_pos=pos.q_pos, kv_pos=enc_pos,
+                         causal=False)
+        x = x + L.attention_out(p["cross"], oc, cfg)
+
+    h = L.apply_norm(p["ln_mlp"], x, cfg)
+    o = L.apply_mlp(p["mlp"], h, cfg)
+    if cfg.post_norms:
+        o = L.apply_norm(p["post_mlp"], o, cfg)
+    x = x + o
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla_block(cfg: ModelConfig, key, *, moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln_attn": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_mla(cfg, k1),
+        "ln_mlp": L.init_norm(cfg, cfg.d_model),
+    }
+    if moe:
+        p["moe"] = L.init_moe(cfg, k2)
+    else:
+        p["mlp"] = L.init_mlp(cfg, k2, d_ff=cfg.moe.dense_d_ff or cfg.d_ff)
+    return p
+
+
+def mla_block(p, x, cfg: ModelConfig, *, layer_idx, pos: PosInfo, cache=None):
+    del layer_idx
+    h = L.apply_norm(p["ln_attn"], x, cfg)
+    c_kv = k_rope = None
+    new_cache = None
+    absorbed = False
+    if cache is not None:
+        if x.shape[1] == cache["ckv"].shape[1]:    # prefill
+            c_kv, k_rope = L.mla_compress(p["attn"], h, cfg, pos.positions)
+            new_cache = {"ckv": c_kv.astype(cache["ckv"].dtype),
+                         "krope": k_rope.astype(cache["krope"].dtype)}
+        else:                                       # decode (absorbed)
+            absorbed = True
+            c_new, kr_new = L.mla_compress(p["attn"], h, cfg, pos.positions)
+            idx = pos.q_pos[0]
+            ckv = jax.lax.dynamic_update_slice(
+                cache["ckv"], c_new.astype(cache["ckv"].dtype), (0, idx, 0))
+            krope = jax.lax.dynamic_update_slice(
+                cache["krope"], kr_new.astype(cache["krope"].dtype),
+                (0, idx, 0))
+            new_cache = {"ckv": ckv, "krope": krope}
+            c_kv, k_rope = ckv, krope
+    o, _ = L.mla_attention(p["attn"], h, cfg, positions=pos.positions,
+                           q_pos=pos.q_pos, kv_pos=pos.kv_pos,
+                           c_kv=c_kv, k_rope=k_rope, kv_len=pos.kv_len,
+                           absorbed=absorbed,
+                           chunk_q=cfg.attn_chunk_q if x.shape[1] > cfg.attn_chunk_q else 0,
+                           chunk_kv=cfg.attn_chunk_kv, impl=cfg.attn_impl)
+    x = x + o
+
+    h = L.apply_norm(p["ln_mlp"], x, cfg)
+    if "moe" in p:
+        o, aux = L.apply_moe(p["moe"], h, cfg)
+    else:
+        o, aux = L.apply_mlp(p["mlp"], h, cfg), jnp.float32(0)
+    return x + o, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# MoE attention block (Arctic: GQA attn + 128e top-2 MoE + dense residual)
+# ---------------------------------------------------------------------------
+
+def init_moe_block(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln_attn": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(cfg, ks[0]),
+        "ln_mlp": L.init_norm(cfg, cfg.d_model),
+        "moe": L.init_moe(cfg, ks[1]),
+    }
+    if cfg.moe.dense_residual:
+        p["ln_dense"] = L.init_norm(cfg, cfg.d_model)
+        p["dense"] = L.init_mlp(cfg, ks[2], d_ff=cfg.moe.dense_d_ff)
+    return p
+
+
+def moe_block(p, x, cfg: ModelConfig, *, layer_idx, pos: PosInfo, cache=None):
+    window = _window_for_layer(cfg, layer_idx)
+    h = L.apply_norm(p["ln_attn"], x, cfg)
+    q, k, v = L.attention_qkv(p["attn"], h, cfg, positions=pos.positions)
+    new_cache = None
+    if cache is not None:
+        if k.shape[1] == cache["k"].shape[1]:
+            ck, cv = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        else:
+            idx = pos.q_pos[0]
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+    o = L.attention(q, k, v, q_pos=pos.q_pos, kv_pos=pos.kv_pos, causal=True,
+                    window=window, kv_len=pos.kv_len,
+                    chunk_q=cfg.attn_chunk_q if x.shape[1] > cfg.attn_chunk_q else 0,
+                    chunk_kv=cfg.attn_chunk_kv, impl=cfg.attn_impl)
+    x = x + L.attention_out(p["attn"], o, cfg)
+
+    h = L.apply_norm(p["ln_mlp"], x, cfg)
+    o, aux = L.apply_moe(p["moe"], h, cfg)
+    if "dense" in p:   # Arctic: dense FFN residual in parallel with MoE
+        o = o + L.apply_mlp(p["dense"], L.apply_norm(p["ln_dense"], x, cfg), cfg)
+    return x + o, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# SSM block (Mamba2) — norm + SSD + residual (no MLP when d_ff == 0)
+# ---------------------------------------------------------------------------
+
+def init_ssm_block(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    p = {"ln": L.init_norm(cfg, cfg.d_model), "ssm": L.init_ssm(cfg, k1)}
+    if cfg.d_ff:
+        p["ln_mlp"] = L.init_norm(cfg, cfg.d_model)
+        p["mlp"] = L.init_mlp(cfg, k2)
+    return p
+
+
+def ssm_block(p, x, cfg: ModelConfig, *, layer_idx, cache=None, decode=False):
+    del layer_idx
+    h = L.apply_norm(p["ln"], x, cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    ssm_state = cache["ssm"] if cache is not None else None
+    o, (new_conv, new_ssm) = L.apply_ssm(p["ssm"], h, cfg,
+                                         conv_state=conv_state,
+                                         ssm_state=ssm_state, decode=decode)
+    x = x + o
+    new_cache = ({"conv": new_conv, "ssm": new_ssm}
+                 if cache is not None else None)
+    if "mlp" in p:
+        x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln_mlp"], x, cfg), cfg)
+    return x, new_cache

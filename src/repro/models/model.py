@@ -1,0 +1,436 @@
+"""Model assembly: init / forward / loss / cache for all 10 architectures.
+
+One ``forward`` serves train, prefill and decode (mode-switched), so the
+dry-run lowers exactly what the trainer/server run. Layer stacks run under
+``lax.scan`` (stacked params) to keep HLO size independent of depth;
+heterogeneous structures (DeepSeek first-dense, Zamba2 hybrid groups,
+Whisper enc-dec) are small Python compositions of scanned stacks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.act import constrain
+from . import blocks as B
+from . import layers as L
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dt),
+        "ln_f": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(keys[1],
+                                          (cfg.d_model, cfg.vocab_size))
+                        * 0.02).astype(dt)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = _stack_init(lambda k: B.init_attn_block(cfg, k),
+                                  keys[2], cfg.num_layers)
+    elif fam == "moe" and cfg.mla is not None:        # DeepSeek-V3
+        nd = cfg.moe.first_dense_layers
+        if nd:
+            p["mla_dense"] = _stack_init(
+                lambda k: B.init_mla_block(cfg, k, moe=False), keys[2], nd)
+        p["mla_moe"] = _stack_init(
+            lambda k: B.init_mla_block(cfg, k, moe=True), keys[3],
+            cfg.num_layers - nd)
+        if cfg.mtp:
+            p["mtp"] = {
+                "proj": (jax.random.normal(keys[4],
+                                           (2 * cfg.d_model, cfg.d_model))
+                         * 0.02).astype(dt),
+                "block": B.init_mla_block(cfg, keys[5], moe=False),
+                "ln": L.init_norm(cfg, cfg.d_model),
+            }
+    elif fam == "moe":                                 # Arctic
+        p["blocks"] = _stack_init(lambda k: B.init_moe_block(cfg, k),
+                                  keys[2], cfg.num_layers)
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(lambda k: B.init_ssm_block(cfg, k),
+                                  keys[2], cfg.num_layers)
+    elif fam == "hybrid":
+        p["blocks"] = _stack_init(lambda k: B.init_ssm_block(cfg, k),
+                                  keys[2], cfg.num_layers)
+        p["shared_attn"] = B.init_attn_block(cfg, keys[3])   # ONE weight set
+    elif fam == "audio":                               # Whisper backbone
+        p["enc_blocks"] = _stack_init(lambda k: B.init_attn_block(cfg, k),
+                                      keys[2], cfg.encoder_layers)
+        p["blocks"] = _stack_init(
+            lambda k: B.init_attn_block(cfg, k, cross=True), keys[3],
+            cfg.num_layers)
+        p["ln_enc"] = L.init_norm(cfg, cfg.d_model)
+        p["enc_pos"] = (jax.random.normal(keys[4],
+                                          (cfg.encoder_seq, cfg.d_model))
+                        * 0.02).astype(dt)
+        p["dec_pos"] = (jax.random.normal(keys[5], (cfg.max_pos, cfg.d_model))
+                        * 0.02).astype(dt)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    """Zeroed decoding cache sized for ``max_seq`` context."""
+    dt = jnp.dtype(cfg.dtype)
+    hd, hkv = cfg.head_dim_, cfg.num_kv_heads
+
+    def kv(layers, seq=max_seq, heads=hkv, dim=hd):
+        return {"k": jnp.zeros((layers, batch, seq, heads, dim), dt),
+                "v": jnp.zeros((layers, batch, seq, heads, dim), dt)}
+
+    def ssm_state(layers):
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        h = d_in // s.head_dim
+        conv_dim = d_in + 2 * s.n_groups * s.state_dim
+        return {
+            "conv": jnp.zeros((layers, batch, s.conv_width - 1, conv_dim), dt),
+            "ssm": jnp.zeros((layers, batch, h, s.head_dim, s.state_dim),
+                             jnp.float32),
+        }
+
+    fam = cfg.family
+    cache: Dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "vlm"):
+        cache["blocks"] = kv(cfg.num_layers)
+    elif fam == "moe" and cfg.mla is not None:
+        m = cfg.mla
+        nd = cfg.moe.first_dense_layers
+
+        def mla(layers):
+            return {"ckv": jnp.zeros((layers, batch, max_seq,
+                                      m.kv_lora_rank), dt),
+                    "krope": jnp.zeros((layers, batch, max_seq,
+                                        m.qk_rope_dim), dt)}
+        if nd:
+            cache["mla_dense"] = mla(nd)
+        cache["mla_moe"] = mla(cfg.num_layers - nd)
+    elif fam == "moe":
+        cache["blocks"] = kv(cfg.num_layers)
+    elif fam == "ssm":
+        cache["blocks"] = ssm_state(cfg.num_layers)
+    elif fam == "hybrid":
+        cache["blocks"] = ssm_state(cfg.num_layers)
+        n_groups = cfg.num_layers // cfg.hybrid_attn_every
+        cache["shared_attn"] = kv(n_groups)
+    elif fam == "audio":
+        cache["blocks"] = kv(cfg.num_layers)
+        cache["blocks"]["ck"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.encoder_seq, hkv, hd), dt)
+        cache["blocks"]["cv"] = jnp.zeros_like(cache["blocks"]["ck"])
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Scanned stacks
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _scan_stack(block_fn, stack, x, cache, cfg, n_layers, idx0=0):
+    """Run ``block_fn`` over a stacked param group under lax.scan.
+
+    block_fn(lp, x, layer_idx, cache_l) -> (x, new_cache_l, aux)
+    Returns (x, new_cache_stack, aux_sum).
+    """
+    idxs = jnp.arange(idx0, idx0 + n_layers)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, li, cache_l = xs
+        x = constrain(x, "residual")
+        x, new_cache_l, a = block_fn(lp, x, li, cache_l)
+        return (x, aux + a), new_cache_l
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0)),
+                                       (stack, idxs, cache))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _pos_info(cfg: ModelConfig, seq: int, max_seq: int, index=None) -> B.PosInfo:
+    if index is None:                       # train / prefill: positions 0..S
+        pos = jnp.arange(seq)
+        return B.PosInfo(pos, pos, jnp.arange(max_seq), None)
+    pos = jnp.full((seq,), index, jnp.int32)   # decode: one token at `index`
+    return B.PosInfo(pos, pos, jnp.arange(max_seq), index + 1)
+
+
+def _embed(cfg: ModelConfig, p, tokens):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _unembed(cfg: ModelConfig, p, x):
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = x @ w
+    if cfg.final_logit_softcap:
+        logits = L.softcap(logits, cfg.final_logit_softcap)
+    return constrain(logits, "logits")
+
+
+def forward(cfg: ModelConfig, params: PyTree, tokens: jax.Array, *,
+            enc_inputs: Optional[jax.Array] = None,
+            cache: Optional[PyTree] = None,
+            mode: str = "train"):
+    """Run the model.
+
+    mode="train":   tokens (B, S) -> logits (B, S, V). cache must be None.
+    mode="prefill": tokens (B, S) -> (logits (B, S, V), filled cache).
+    mode="decode":  tokens (B, 1) -> (logits (B, 1, V), updated cache);
+                    position taken from cache["index"].
+    enc_inputs: (B, S_enc, D) precomputed frame/patch embeddings
+                (whisper stub frontend).
+    """
+    assert mode in ("train", "prefill", "decode")
+    b, seq = tokens.shape
+    decode = mode == "decode"
+    use_cache = cache is not None
+    max_seq = seq
+    index = None
+    if use_cache:
+        index = cache["index"] if decode else None
+        max_seq = _cache_seq(cfg, cache)
+    pos = _pos_info(cfg, seq, max_seq, index)
+
+    x = _embed(cfg, params, tokens)
+    x = constrain(x, "residual")
+    fam = cfg.family
+    aux = jnp.float32(0)
+    new_cache = dict(cache) if use_cache else None
+
+    if fam in ("dense", "vlm"):
+        def blk(lp, x, li, cache_l):
+            x, nc = B.attn_block(lp, x, cfg, layer_idx=li, pos=pos,
+                                 cache=cache_l)
+            return x, nc, jnp.float32(0)
+        x, nc, _ = _scan_stack(blk, params["blocks"], x,
+                               cache["blocks"] if use_cache else None,
+                               cfg, cfg.num_layers)
+        if use_cache:
+            new_cache["blocks"] = nc
+
+    elif fam == "moe" and cfg.mla is not None:         # DeepSeek-V3
+        nd = cfg.moe.first_dense_layers
+        if nd:
+            def blk_d(lp, x, li, cache_l):
+                return B.mla_block(lp, x, cfg, layer_idx=li, pos=pos,
+                                   cache=cache_l)
+            x, nc, a = _scan_stack(blk_d, params["mla_dense"], x,
+                                   cache["mla_dense"] if use_cache else None,
+                                   cfg, nd)
+            aux += a
+            if use_cache:
+                new_cache["mla_dense"] = nc
+
+        def blk_m(lp, x, li, cache_l):
+            return B.mla_block(lp, x, cfg, layer_idx=li, pos=pos,
+                               cache=cache_l)
+        x, nc, a = _scan_stack(blk_m, params["mla_moe"], x,
+                               cache["mla_moe"] if use_cache else None,
+                               cfg, cfg.num_layers - nd, idx0=nd)
+        aux += a
+        if use_cache:
+            new_cache["mla_moe"] = nc
+
+    elif fam == "moe":                                  # Arctic
+        def blk(lp, x, li, cache_l):
+            return B.moe_block(lp, x, cfg, layer_idx=li, pos=pos,
+                               cache=cache_l)
+        x, nc, a = _scan_stack(blk, params["blocks"], x,
+                               cache["blocks"] if use_cache else None,
+                               cfg, cfg.num_layers)
+        aux += a
+        if use_cache:
+            new_cache["blocks"] = nc
+
+    elif fam == "ssm":
+        def blk(lp, x, li, cache_l):
+            x, nc = B.ssm_block(lp, x, cfg, layer_idx=li, cache=cache_l,
+                                decode=decode)
+            return x, nc, jnp.float32(0)
+        x, nc, _ = _scan_stack(blk, params["blocks"], x,
+                               cache["blocks"] if use_cache else None,
+                               cfg, cfg.num_layers)
+        if use_cache:
+            new_cache["blocks"] = nc
+
+    elif fam == "hybrid":                               # Zamba2
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.num_layers // every
+        ssm_stack = params["blocks"]
+        nc_ssm, nc_attn = [], []
+        for g in range(n_groups):
+            sl = lambda t: jax.tree.map(lambda a: a[g * every:(g + 1) * every], t)
+            def blk(lp, x, li, cache_l):
+                x, nc = B.ssm_block(lp, x, cfg, layer_idx=li, cache=cache_l,
+                                    decode=decode)
+                return x, nc, jnp.float32(0)
+            x, nc, _ = _scan_stack(
+                blk, sl(ssm_stack), x,
+                sl(cache["blocks"]) if use_cache else None, cfg, every,
+                idx0=g * every)
+            if use_cache:
+                nc_ssm.append(nc)
+            # shared (weight-tied) attention block, per-group KV cache
+            attn_cache = (jax.tree.map(lambda a: a[g], cache["shared_attn"])
+                          if use_cache else None)
+            shared = _maybe_remat(
+                lambda px, ac: B.attn_block(params["shared_attn"], px, cfg,
+                                            layer_idx=g, pos=pos, cache=ac),
+                cfg)
+            x, ac_new = shared(x, attn_cache)
+            if use_cache:
+                nc_attn.append(ac_new)
+        if use_cache:
+            new_cache["blocks"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *nc_ssm)
+            new_cache["shared_attn"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *nc_attn)
+
+    elif fam == "audio":                                # Whisper backbone
+        assert enc_inputs is not None or (use_cache and decode), \
+            "whisper needs enc_inputs (stub frontend) except in decode"
+        start = jnp.int32(0) if index is None else index
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], start, seq, axis=0).astype(x.dtype)
+        enc_out = None
+        if enc_inputs is not None:
+            e = enc_inputs.astype(x.dtype) + params["enc_pos"][None].astype(x.dtype)
+            enc_pos_info = B.PosInfo(jnp.arange(cfg.encoder_seq),
+                                     jnp.arange(cfg.encoder_seq),
+                                     jnp.arange(cfg.encoder_seq), None)
+
+            def eblk(lp, e, li, cache_l):
+                e, _ = B.attn_block(lp, e, cfg, layer_idx=li,
+                                    pos=enc_pos_info, cache=None,
+                                    causal=False)
+                return e, 0, jnp.float32(0)
+            e, _, _ = _scan_stack(eblk, params["enc_blocks"], e,
+                                  None, cfg, cfg.encoder_layers)
+            enc_out = L.apply_norm(params["ln_enc"], e, cfg)
+
+        def dblk(lp, x, li, cache_l):
+            x, nc = B.attn_block(lp, x, cfg, layer_idx=li, pos=pos,
+                                 cache=cache_l, enc_out=enc_out)
+            return x, nc, jnp.float32(0)
+        x, nc, _ = _scan_stack(dblk, params["blocks"], x,
+                               cache["blocks"] if use_cache else None,
+                               cfg, cfg.num_layers)
+        if use_cache:
+            new_cache["blocks"] = nc
+
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = _unembed(cfg, params, x)
+
+    if use_cache:
+        new_cache["index"] = (cache["index"] + seq) if decode else \
+            jnp.asarray(seq, jnp.int32)
+        return (logits, new_cache, aux) if mode == "train" else \
+            (logits, new_cache)
+    return logits, aux, x
+
+
+def _cache_seq(cfg: ModelConfig, cache) -> int:
+    if cfg.family in ("ssm",):
+        return 0
+    if cfg.mla is not None:
+        return cache["mla_moe"]["ckv"].shape[2]
+    if cfg.family == "hybrid":
+        return cache["shared_attn"]["k"].shape[2]
+    return cache["blocks"]["k"].shape[2]
+
+
+# ---------------------------------------------------------------------------
+# Loss / prefill / decode entry points
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, *, z_loss: float = 1e-4):
+    """Token-mean CE in fp32 with z-loss; logits (B,S,V), labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    loss = jnp.mean(ce)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def loss_fn(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
+            *, aux_weight: float = 1e-2, mtp_weight: float = 0.3):
+    """Next-token CE (+ MoE aux + optional MTP). batch: inputs, labels
+    (B, S) int32 [+ enc_inputs (B, S_enc, D)]."""
+    logits, aux, h = forward(cfg, params, batch["inputs"],
+                             enc_inputs=batch.get("enc_inputs"), mode="train")
+    loss = cross_entropy(logits, batch["labels"])
+    metrics = {"ce": loss, "moe_aux": aux}
+    if cfg.moe is not None:
+        loss = loss + aux_weight * aux
+    if cfg.mtp and "mtp" in params:
+        # depth-1 multi-token prediction: combine h_t with emb(x_{t+1})
+        # to predict label_{t+1} (= token t+2).
+        emb_next = _embed(cfg, params, batch["inputs"][:, 1:])
+        hcat = jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+        hm = L.apply_norm(params["mtp"]["ln"],
+                          hcat @ params["mtp"]["proj"], cfg)
+        pos = _pos_info(cfg, hm.shape[1], hm.shape[1])
+        hm, _, _ = B.mla_block(params["mtp"]["block"], hm, cfg,
+                               layer_idx=0, pos=pos)
+        mtp_logits = _unembed(cfg, params, hm)
+        mtp_loss = cross_entropy(mtp_logits, batch["labels"][:, 1:])
+        metrics["mtp_ce"] = mtp_loss
+        loss = loss + mtp_weight * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, enc_inputs=None):
+    """Fill ``cache`` from a (B, S) prompt; returns (last_logits, cache)."""
+    logits, cache = forward(cfg, params, tokens, cache=cache,
+                            enc_inputs=enc_inputs, mode="prefill")
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache):
+    """One decode step: tokens (B, 1) at position cache["index"]."""
+    logits, cache = forward(cfg, params, tokens, cache=cache, mode="decode")
+    return logits[:, -1], cache

@@ -1,0 +1,14 @@
+"""Optimizers: AdamW + ATA-powered distributed Shampoo (+schedules,
+gradient compression). Functional optax-like API:
+
+    opt = adamw(cfg) | shampoo(cfg)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+"""
+from .adamw import adamw, apply_updates, global_norm, clip_by_global_norm  # noqa: F401
+from .shampoo import shampoo  # noqa: F401
+from .schedules import warmup_cosine, warmup_linear, constant  # noqa: F401
+from .grad_compress import (  # noqa: F401
+    int8_quantize, int8_dequantize, compressed_psum, ErrorFeedback,
+)

@@ -1,0 +1,78 @@
+"""AdamW (decoupled weight decay), functional, pytree-generic.
+
+Moments are stored in fp32 regardless of param dtype (bf16 moments lose
+too many bits at lr ~ 1e-4); the optional ``moment_dtype`` lets the giant
+MoE configs trade precision for HBM (see DESIGN.md memory table).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable        # (grads, state, params, step) -> (updates, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def adamw(lr: Callable | float, *, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1, grad_clip: Optional[float] = 1.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gnorm = global_norm(grads)
+        t = step + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        new_m = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g)
+            .astype(moment_dtype), state["m"], grads)
+        new_v = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * g * g)
+            .astype(moment_dtype), state["v"], grads)
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            mh = m.astype(jnp.float32) / bc1
+            vh = v.astype(jnp.float32) / bc2
+            u = mh / (jnp.sqrt(vh) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return -lr_t * u
+
+        updates = jax.tree.map(upd, params, new_m, new_v)
+        state = {"m": new_m, "v": new_v}
+        return updates, state, {"grad_norm": gnorm}
+
+    return Optimizer(init, update)

@@ -1,0 +1,68 @@
+"""int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 2+ pods the inter-pod links are the scarcest bandwidth. ``compressed
+psum`` quantizes each gradient leaf to int8 with a per-leaf fp32 scale
+before the cross-pod reduction (4x fewer bytes on the slow links), keeps
+the quantization residual in an error-feedback buffer (added back before
+the next quantization — Seide et al. 1-bit-SGD style, so the *accumulated*
+error stays bounded and convergence is preserved), and dequantizes after.
+
+Used by the trainer inside ``shard_map`` over the 'pod' axis only; the
+intra-pod reduction stays full-precision (fast ICI).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    residual: object            # pytree matching grads, fp32
+
+    @staticmethod
+    def init(grads_like):
+        return ErrorFeedback(jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def int8_quantize(x: jax.Array):
+    """fp -> (int8 values, fp32 scale). Symmetric per-tensor quantization."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis: str, ef: ErrorFeedback):
+    """Error-feedback int8 all-reduce over mesh axis ``axis``.
+
+    Wire payload is the int8 tensor (+one fp32 scale) per participant —
+    an ``all_gather`` of int8 then a local dequantized sum, exact w.r.t.
+    the quantized values (scales differ per pod, so a plain psum of int8
+    would be wrong). Must run inside shard_map with ``axis`` in scope.
+    Returns (mean-reduced fp32 grads, new ErrorFeedback).
+    """
+    n = jax.lax.axis_size(axis)
+
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = int8_quantize(gf)
+        new_r = gf - int8_dequantize(q, scale)        # residual stays local
+        qg = jax.lax.all_gather(q, axis)              # (n, ...) int8 on wire
+        sg = jax.lax.all_gather(scale, axis)          # (n,) fp32
+        total = jnp.einsum("n,n...->...", sg, qg.astype(jnp.float32))
+        return total / n, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    reduced = treedef.unflatten([o[0] for o in outs])
+    new_res = treedef.unflatten([o[1] for o in outs])
+    return reduced, ErrorFeedback(new_res)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (callables of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_linear(lr: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(s < warmup, warm, lr + (floor - lr) * frac)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor_ratio=0.1):
+    floor = lr * floor_ratio
+
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

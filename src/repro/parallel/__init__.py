@@ -1,0 +1,8 @@
+"""Parallelism: mesh-aware parameter sharding rules + activation constraints.
+
+DP over ('pod','data') (hierarchical across pods), FSDP parameter sharding
+over 'data', TP (Megatron column/row) over 'model', EP (experts -> 'model')
+for MoE, SP (sequence/activation sharding over 'model') for long context.
+"""
+from .act import ActivationSharding, constrain, use_activation_sharding  # noqa: F401
+from .sharding import param_specs, batch_spec, cache_specs  # noqa: F401

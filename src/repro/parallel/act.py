@@ -1,0 +1,102 @@
+"""Activation-sharding constraints, decoupled from model code.
+
+Model code calls ``constrain(x, "residual")`` etc.; the launcher installs an
+:class:`ActivationSharding` policy (mesh + name->PartitionSpec) via
+``use_activation_sharding``. With no policy installed the call is a no-op,
+so unit tests and single-device runs never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+
+@dataclass
+class ActivationSharding:
+    mesh: Mesh
+    specs: Dict[str, P] = field(default_factory=dict)
+    # MoE decode: keep expert weights STATIONARY (experts -> tp, FFN dim ->
+    # fsdp axes); replicate the (tiny) token set into the MoE block and
+    # psum the partial outputs — removes the per-step expert-bank gather.
+    moe_stationary: bool = False
+    fsdp_axes: tuple = ("data",)
+
+    @classmethod
+    def for_training(cls, mesh: Mesh, *, dp_axes=("pod", "data"),
+                     tp_axis="model", sp: bool = True,
+                     fsdp_axes=("data",)):
+        """Standard policy: batch -> DP axes; residual embed dim unsharded;
+        sequence -> TP axis between blocks (SP) when ``sp``; logits vocab ->
+        TP axis."""
+        dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+        specs = {
+            "residual": P(dp, tp_axis if sp else None, None),
+            "logits": P(dp, None, tp_axis),
+        }
+        return cls(mesh, specs, fsdp_axes=tuple(
+            a for a in fsdp_axes if a in mesh.axis_names))
+
+    @classmethod
+    def for_decode(cls, mesh: Mesh, *, dp_axes=("pod", "data"),
+                   tp_axis="model", fsdp_axes=("data",),
+                   moe_stationary: bool = True):
+        """Decode: seq dim is 1 — batch -> DP, no SP; logits vocab -> TP;
+        stationary expert weights (see class docstring)."""
+        dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+        specs = {
+            "residual": P(dp, None, None),
+            "logits": P(dp, None, tp_axis),
+        }
+        return cls(mesh, specs, moe_stationary=moe_stationary,
+                   fsdp_axes=tuple(a for a in fsdp_axes
+                                   if a in mesh.axis_names))
+
+
+@contextlib.contextmanager
+def use_activation_sharding(policy: Optional[ActivationSharding]):
+    prev = getattr(_tls, "policy", None)
+    _tls.policy = policy
+    try:
+        yield
+    finally:
+        _tls.policy = prev
+
+
+def current_policy() -> Optional[ActivationSharding]:
+    return getattr(_tls, "policy", None)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the installed sharding constraint for logical tensor ``name``.
+
+    Divisibility-checked: a dim whose size does not divide by its assigned
+    axes is left unsharded (e.g. seq=1 in decode, tiny smoke shapes).
+    """
+    pol = current_policy()
+    if pol is None or name not in pol.specs:
+        return x
+    spec = pol.specs[name]
+    fixed = _fit_spec(spec, x.shape, pol.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, fixed))
+
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    out = []
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(part if dim % size == 0 and dim >= size else None)
+    return P(*out)

@@ -1,0 +1,160 @@
+"""Parameter / batch / cache sharding rules (DP + FSDP + TP + EP).
+
+``param_specs`` walks a parameter pytree and assigns a PartitionSpec per
+leaf from name-based rules (Megatron column/row TP over 'model', FSDP over
+'data' (optionally +'pod'), EP: experts over 'model'). Every assignment is
+divisibility-checked — a dim that does not divide evenly falls back to
+replicated, so the same rules serve full production configs and tiny smoke
+configs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+# Stacked (scan-over-layers) param groups: leaves carry a leading L dim.
+STACKED_GROUPS = {"blocks", "mla_dense", "mla_moe", "enc_blocks"}
+
+# name -> (spec for 2-D [in, out]) with 'fsdp' / 'tp' placeholders
+_COL = ("fsdp", "tp")     # column-parallel: output dim sharded over model
+_ROW = ("tp", "fsdp")     # row-parallel: input dim sharded over model
+RULES_2D = {
+    "embed": ("tp", "fsdp"),
+    "unembed": _COL,
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "w_gate": _COL, "w_up": _COL, "w_in": _COL,
+    "w_down": _ROW, "w_out": _ROW,
+    "w_dq": _COL, "w_uq": _COL, "w_dkv": _COL, "w_uk": _COL, "w_uv": _COL,
+    "router": ("fsdp", None),
+    "proj": _COL,
+    "conv_w": (None, "tp"),
+    "enc_pos": (None, None), "dec_pos": (None, None),
+}
+# MoE expert weights are 3-D (E, d, f): EP shards E over 'model'.
+# Training: FSDP over the d dim (gathered on use, grads reduce-scatter).
+RULES_MOE_3D = {
+    "w_gate": ("ep", "fsdp", None),
+    "w_up": ("ep", "fsdp", None),
+    "w_down": ("ep", None, "fsdp"),
+}
+# Decode: STATIONARY layout — FFN dim over fsdp so the weights are consumed
+# exactly as stored by the stationary-EP shard_map (no per-step gather).
+RULES_MOE_3D_STATIONARY = {
+    "w_gate": ("ep", None, "fsdp"),
+    "w_up": ("ep", None, "fsdp"),
+    "w_down": ("ep", "fsdp", None),
+}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _check(spec_dims, shape, mesh) -> P:
+    out = []
+    for dim, part in zip(shape, spec_dims):
+        if part is not None and dim % _axis_size(mesh, part) == 0 \
+                and dim >= _axis_size(mesh, part):
+            out.append(part)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(params, mesh: Mesh, *,
+                fsdp_axes: Tuple[str, ...] = ("data",),
+                tp_axis: str = "model",
+                moe_stationary: bool = False) -> object:
+    """PartitionSpec pytree matching ``params`` (same structure)."""
+    fsdp = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+    fsdp = fsdp if len(fsdp) != 1 else fsdp[0]
+    subst = {"fsdp": fsdp, "tp": tp_axis, "ep": tp_axis, None: None}
+    moe_rules = RULES_MOE_3D_STATIONARY if moe_stationary else RULES_MOE_3D
+
+    def leaf_spec(path, leaf):
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        name = keys[-1] if keys else ""
+        stacked = bool(keys) and keys[0] in STACKED_GROUPS
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        in_moe = "moe" in keys
+
+        if name in moe_rules and in_moe and len(shape) == 3:
+            dims = [subst[d] for d in moe_rules[name]]
+        elif name in RULES_2D and len(shape) == 2:
+            dims = [subst[d] for d in RULES_2D[name]]
+        elif len(shape) >= 2:
+            dims = [subst["fsdp"]] + [None] * (len(shape) - 1)
+        else:
+            dims = [None] * len(shape)
+        spec = _check(dims, shape, mesh)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return tree_map_with_path(leaf_spec, params)
+
+
+def batch_spec(mesh: Mesh, *, dp_axes=("pod", "data")) -> P:
+    """(B, S) token batches: batch over all DP axes."""
+    dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+    return P(dp, None)
+
+
+def _greedy(shape, mesh, prefs):
+    """Assign axis groups to dims greedily with divisibility fallback.
+
+    prefs: list of (axes, [dim indices in priority order]).
+    """
+    assigned = {}
+    used_dims = set()
+    for axes, candidates in prefs:
+        size = _axis_size(mesh, axes)
+        for d in candidates:
+            if d in used_dims or d >= len(shape):
+                continue
+            if shape[d] % size == 0 and shape[d] >= size:
+                assigned[d] = axes
+                used_dims.add(d)
+                break
+    return P(*[assigned.get(i) for i in range(len(shape))])
+
+
+def cache_specs(cache, mesh: Mesh, *, dp_axes=("pod", "data"),
+                tp_axis: str = "model") -> object:
+    """Decode-cache sharding: batch -> DP (falling back to seq for B=1 long
+    contexts), heads/state -> TP (falling back to seq)."""
+    dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+
+    def leaf_spec(path, leaf):
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        name = keys[-1] if keys else ""
+        sh = leaf.shape
+        if name in ("k", "v", "ck", "cv"):       # (L, B, S, H, D)
+            return _greedy(sh, mesh, [(dp, [1, 2]), (tp_axis, [3, 2, 4])])
+        if name in ("ckv", "krope"):             # (L, B, S, r)
+            # shard the SEQ dim over tp (flash-decode: local partial scores
+            # + small softmax-stat psums) — never the latent r dim, which
+            # would force a full cache gather per step.
+            return _greedy(sh, mesh, [(dp, [1]), (tp_axis, [2])])
+        if name == "ssm":                        # (L, B, H, P, N)
+            return _greedy(sh, mesh, [(dp, [1]), (tp_axis, [2, 3, 4])])
+        if name == "conv":                       # (L, B, W-1, C)
+            return _greedy(sh, mesh, [(dp, [1]), (tp_axis, [3])])
+        return P()                               # index & anything scalar
+
+    return tree_map_with_path(leaf_spec, cache)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,149 @@
+"""Collective census over post-SPMD compiled HLO text.
+
+``cost_analysis`` has no collective figures, so we parse
+``compiled.as_text()`` and sum bytes per collective kind. Shapes in
+post-partitioning HLO are PER-DEVICE, so the census yields per-device
+collective traffic directly.
+
+Wire-byte model per device for a group of size P (ring algorithms):
+  all-reduce:          2 (P-1)/P * result_bytes
+  all-gather:            (P-1)/P * result_bytes  (result = P * shard)
+  reduce-scatter:        (P-1)/P * operand_bytes = (P-1) * result_bytes
+  all-to-all:            (P-1)/P * result_bytes
+  collective-permute:              result_bytes
+
+CPU-backend caveat: XLA:CPU legalizes bf16 dots to f32 and sometimes hoists
+the convert ABOVE a collective, inflating its dtype to f32 (2x bytes vs the
+TPU lowering). Ops whose operand chain is a convert-from-bf16 are flagged
+and an adjusted (halved) byte count is reported alongside the raw one.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, List
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+_OP = re.compile(
+    r"=\s*(?:\(?[a-z0-9]+\[[\d,]*\][^ ]*,?\s*)+\s*"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERANDS = re.compile(r"\(\s*(%?[\w.\-]+)")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    elements: int
+    result_bytes: int
+    group_size: int
+    wire_bytes: float            # per-device, ring model
+    bf16_inflated: bool          # CPU legalization hoisted a bf16->f32 convert
+    name: str = ""
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _wire_bytes(kind: str, result_bytes: int, p: int) -> float:
+    if kind == "collective-permute":     # no replica_groups attr: p-free
+        return float(result_bytes)
+    if p <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (p - 1) / p * result_bytes
+    if kind == "all-gather":
+        return (p - 1) / p * result_bytes
+    if kind == "reduce-scatter":
+        return float((p - 1) * result_bytes)
+    if kind == "all-to-all":
+        return (p - 1) / p * result_bytes
+    return float(result_bytes)   # collective-permute
+
+
+def collective_census(hlo_text: str) -> List[CollectiveOp]:
+    # first pass: instruction table name -> (dtype, opcode-ish line)
+    instr: Dict[str, tuple] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR.match(line)
+        if m:
+            instr[m.group(1)] = (m.group(2), line)
+
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        om = _OP.search(line)
+        if not om:
+            continue
+        kind = om.group(1).replace("-start", "")
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, dtype, dims = im.group(1), im.group(2), im.group(3)
+        elems = _shape_elems(dims)
+        nbytes = elems * DTYPE_BYTES.get(dtype, 4)
+
+        g = _GROUPS_IOTA.search(line)
+        if g:
+            group_size = int(g.group(2))
+        else:
+            g2 = _GROUPS_LIST.search(line)
+            group_size = (g2.group(1).count(",") + 1) if g2 else 1
+
+        # detect convert-inflation: operand instruction is a convert (or a
+        # convert fusion) — the TPU lowering would move bf16 on the wire.
+        inflated = False
+        after = line[om.end():]
+        opm = _OPERANDS.match("(" + after)
+        if opm and dtype == "f32":
+            op_name = opm.group(1).lstrip("%")
+            src = instr.get(op_name)
+            if src and "convert" in op_name:
+                inflated = True
+            elif src and "convert" in src[1][:200]:
+                inflated = True
+
+        ops.append(CollectiveOp(
+            kind=kind, dtype=dtype, elements=elems, result_bytes=nbytes,
+            group_size=group_size,
+            wire_bytes=_wire_bytes(kind, nbytes, group_size),
+            bf16_inflated=inflated, name=name))
+    return ops
+
+
+def summarize(ops: List[CollectiveOp]) -> Dict:
+    by_kind: Dict[str, Dict] = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "result_bytes": 0,
+                                         "wire_bytes": 0.0,
+                                         "wire_bytes_bf16adj": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += op.result_bytes
+        d["wire_bytes"] += op.wire_bytes
+        d["wire_bytes_bf16adj"] += (op.wire_bytes / 2 if op.bf16_inflated
+                                    else op.wire_bytes)
+    total = sum(d["wire_bytes"] for d in by_kind.values())
+    total_adj = sum(d["wire_bytes_bf16adj"] for d in by_kind.values())
+    return {"by_kind": by_kind,
+            "wire_bytes_total": total,
+            "wire_bytes_total_bf16adj": total_adj,
+            "ops": [asdict(o) for o in ops]}

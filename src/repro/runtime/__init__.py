@@ -1,0 +1,5 @@
+from .trainer import (  # noqa: F401
+    Trainer, TrainState, make_train_step, make_optimizer,
+    StragglerWatchdog, FailureInjector, SimulatedFailure,
+)
+from .serving import ServingEngine, Request  # noqa: F401

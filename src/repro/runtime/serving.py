@@ -1,0 +1,161 @@
+"""Batched KV-cache serving engine (slot-based continuous batching).
+
+Fixed ``slots`` request slots, each owning a B=1 cache stacked on a leading
+slot axis. Prefill runs per request at bucketed prompt lengths (bounded
+recompiles); decode runs one vmapped step over all slots per tick —
+requests at different positions decode together (per-slot index lives
+inside its vmapped cache). Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import init_cache, prefill, decode_step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int) -> int:
+    return 1 << max(4, math.ceil(math.log2(max(n, 1))))
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_seq = slots, max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._uid = itertools.count()
+        # slot caches stacked on a leading axis: (slots, ...) of B=1 caches
+        one = init_cache(cfg, 1, max_seq)
+        self.cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (slots, *x.shape)).copy(), one)
+        self.active: Dict[int, Optional[Request]] = {i: None
+                                                     for i in range(slots)}
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+        self._done_now: List[Request] = []
+        self._prefill_cache: Dict[int, object] = {}
+        self._decode = jax.jit(
+            jax.vmap(lambda t, c: decode_step(cfg, self.params, t, c),
+                     in_axes=(0, 0)))
+
+    # -- request intake ----------------------------------------------------
+    def add_request(self, prompt: List[int], *, max_new_tokens: int = 16,
+                    eos_id: Optional[int] = None) -> int:
+        r = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
+        self.waiting.append(r)
+        return r.uid
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg = self.cfg
+            from ..models import forward
+
+            def pf(p, t, c):
+                logits, c = forward(cfg, p, t, cache=c, mode="prefill")
+                return logits, c                    # ALL positions' logits
+            self._prefill_cache[plen] = jax.jit(pf)
+        return self._prefill_cache[plen]
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            return np.asarray(jax.random.categorical(
+                sub, logits / self.temperature, axis=-1))
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    def _admit(self):
+        for slot, occ in self.active.items():
+            if occ is not None or not self.waiting:
+                continue
+            r = self.waiting.pop(0)
+            plen = _bucket(len(r.prompt))
+            toks = np.full((1, plen), 0, np.int32)
+            toks[0, :len(r.prompt)] = r.prompt
+            cache1 = jax.tree.map(lambda x: x[slot], self.cache)
+            cache1 = jax.tree.map(jnp.zeros_like, cache1)
+            logits, cache1 = self._prefill_fn(plen)(self.params,
+                                                    jnp.asarray(toks), cache1)
+            # bucket-padded on the RIGHT: the true last position is
+            # len(prompt)-1; rewind index to the true length so decode
+            # writes the next token at position len(prompt).
+            cache1["index"] = jnp.asarray(len(r.prompt), jnp.int32)
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[slot].set(one), self.cache, cache1)
+            # first generated token comes from the prefill logits
+            first = int(self._sample(logits[0, len(r.prompt) - 1][None])[0])
+            r.generated = [first]
+            self.active[slot] = r
+
+    # -- decode tick ---------------------------------------------------------
+    def step(self) -> List[Request]:
+        """One engine tick: admit waiting requests, decode all active slots,
+        collect finished requests. Returns newly finished."""
+        self._admit()
+        self._collect()          # requests satisfied by prefill alone
+        live = [s for s, r in self.active.items() if r is not None]
+        if not live:
+            return self._drain_done()
+        # feed the latest generated token per slot at its cache position
+        toks = np.zeros((self.slots, 1, 1), np.int32)
+        for s, r in self.active.items():
+            if r is not None:
+                toks[s, 0, 0] = r.generated[-1]
+        logits, new_cache = self._decode(jnp.asarray(toks), self.cache)
+        nxt = self._sample(logits[:, 0])
+        # only live slots advance their cache
+        live_mask = np.zeros((self.slots,), bool)
+        live_mask[live] = True
+        mask = jnp.asarray(live_mask)
+
+        def select(new, old):
+            m = mask.reshape((self.slots,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+        self.cache = jax.tree.map(select, new_cache, self.cache)
+
+        for s in live:
+            self.active[s].generated.append(int(nxt[s]))
+        self._collect()
+        return self._drain_done()
+
+    def _collect(self):
+        for s, r in self.active.items():
+            if r is None:
+                continue
+            if (len(r.generated) >= r.max_new_tokens
+                    or (r.eos_id is not None and r.generated
+                        and r.generated[-1] == r.eos_id)):
+                r.done = True
+                self.finished.append(r)
+                self._done_now.append(r)
+                self.active[s] = None
+
+    def _drain_done(self) -> List[Request]:
+        out, self._done_now = self._done_now, []
+        return out
+
+    def run_to_completion(self, max_ticks: int = 1000) -> List[Request]:
+        for _ in range(max_ticks):
+            self.step()
+            if not self.waiting and all(v is None
+                                        for v in self.active.values()):
+                break
+        return self.finished

@@ -1,0 +1,185 @@
+"""Training runtime: jitted train step (grad accumulation, sharded),
+fault-tolerant loop (checkpoint/restart, failure injection), straggler
+watchdog.
+
+The train step is a pure function of (state, batch); the Trainer owns the
+impure parts — data stream position, checkpoint cadence, wall-clock
+watchdog — all of which are reconstructed exactly on restart (the stream is
+a pure function of the step, checkpoints carry the step).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..data.pipeline import DataConfig, get_batch
+from ..checkpoint.manager import CheckpointManager
+from ..models import init_params, loss_fn
+from ..optim import adamw, shampoo, apply_updates, warmup_cosine
+
+log = logging.getLogger("repro.trainer")
+
+TrainState = Dict[str, Any]          # {"step", "params", "opt_state"}
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests/fault-drills)."""
+
+
+@dataclass
+class FailureInjector:
+    at_step: int = -1
+
+    def check(self, step: int):
+        if step == self.at_step:
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor. At scale this signal triggers hot-spare
+    swap / grouped restart; in-container we surface the detection."""
+    alpha: float = 0.1
+    threshold: float = 2.0
+    warmup: int = 3
+    ewma: float = 0.0
+    count: int = 0
+    flagged: list = field(default_factory=list)
+
+    def observe(self, dt: float) -> bool:
+        self.count += 1
+        if self.count <= self.warmup:
+            self.ewma = dt if self.ewma == 0 else 0.5 * (self.ewma + dt)
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.flagged.append((self.count, dt, self.ewma))
+            log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
+                        self.count, dt, self.ewma)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+def make_optimizer(tc: TrainConfig):
+    sched = warmup_cosine(tc.learning_rate, tc.warmup_steps, tc.total_steps)
+    if tc.optimizer == "shampoo":
+        return shampoo(sched, block_size=tc.shampoo_block_size,
+                       stat_interval=tc.shampoo_update_interval,
+                       precond_interval=tc.shampoo_precond_interval,
+                       ata_levels=tc.ata_levels,
+                       weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+    return adamw(sched, weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *,
+                    microbatch: int = 0) -> Callable:
+    """(state, batch) -> (state, metrics). Pure; jit at the call site with
+    shardings (or plain jit on one device)."""
+
+    def compute_grads(params, batch):
+        def lf(p, b):
+            return loss_fn(cfg, p, b)
+        if not microbatch:
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        # gradient accumulation: batch (B, ...) -> (k, B/k, ...), scan
+        def resh(x):
+            return x.reshape(microbatch, x.shape[0] // microbatch,
+                             *x.shape[1:])
+        mbatch = jax.tree.map(resh, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+
+        def body(carry, mb):
+            g_acc, l_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                lf, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + loss), metrics
+
+        (g_acc, l_sum), ms = jax.lax.scan(body, (zeros, jnp.float32(0)),
+                                          mbatch)
+        grads = jax.tree.map(lambda g: g / microbatch, g_acc)
+        metrics = jax.tree.map(lambda m: m[-1], ms)
+        return l_sum / microbatch, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        updates, opt_state, om = optimizer.update(
+            grads, state["opt_state"], state["params"], state["step"])
+        params = apply_updates(state["params"], updates)
+        new_state = {"step": state["step"] + 1, "params": params,
+                     "opt_state": opt_state}
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss_mean"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Fault-tolerant training loop over the synthetic stream."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, dc: DataConfig,
+                 workdir: str, *,
+                 failure: Optional[FailureInjector] = None,
+                 donate: bool = True):
+        self.cfg, self.tc, self.dc = cfg, tc, dc
+        self.opt = make_optimizer(tc)
+        self.ckpt = CheckpointManager(workdir, keep=tc.keep_checkpoints)
+        self.failure = failure or FailureInjector()
+        self.watchdog = StragglerWatchdog()
+        step_fn = make_train_step(cfg, self.opt, microbatch=tc.microbatch)
+        self.step_fn = jax.jit(step_fn,
+                               donate_argnums=(0,) if donate else ())
+        self.state = self._init_or_restore()
+        self.metrics_history: list = []
+
+    def _init_or_restore(self) -> TrainState:
+        state, meta = self.ckpt.restore()
+        if state is not None:
+            log.info("restored checkpoint at step %d", meta["step"])
+            state["step"] = jnp.asarray(state["step"])
+            return state
+        params = jax.jit(lambda k: init_params(self.cfg, k))(
+            jax.random.PRNGKey(self.tc.seed))
+        return {"step": jnp.zeros((), jnp.int32), "params": params,
+                "opt_state": self.opt.init(params)}
+
+    @property
+    def step(self) -> int:
+        return int(self.state["step"])
+
+    def run(self, num_steps: int):
+        """Run until ``self.step == num_steps`` (absolute), checkpointing
+        every tc.checkpoint_every; resumable after any crash."""
+        while self.step < num_steps:
+            step = self.step
+            batch = get_batch(self.dc, step)   # pure fn of step: resumable
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.watchdog.observe(dt)
+            self.metrics_history.append(
+                {k: float(v) for k, v in metrics.items()})
+            new_step = step + 1
+            if new_step % self.tc.checkpoint_every == 0 \
+                    or new_step == num_steps:
+                self.ckpt.save(new_step, self.state)
+            # failure injection AFTER the optimizer step, BEFORE the next
+            # checkpoint boundary — the worst-case crash point.
+            self.failure.check(new_step)
+        self.ckpt.wait()
+        return self.metrics_history

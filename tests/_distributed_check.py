@@ -1,0 +1,55 @@
+"""Child script for distributed-gram tests. Run with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the parent test
+via subprocess so the main pytest process keeps 1 device)."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P, NamedSharding  # noqa: E402
+
+from repro.core import distributed_gram  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    m, n = 128, 64
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, n), dtype=jnp.float32)
+    want = np.asarray(a.T @ a, np.float64)
+
+    # 1D mesh: paper-faithful all-reduce + beyond-paper reduce-scatter.
+    mesh1 = jax.make_mesh((8,), ("data",))
+    for scheme in ("allreduce", "reducescatter"):
+        got = distributed_gram(a, mesh1, scheme=scheme, row_axis="data",
+                               levels=2, leaf=8)
+        got = np.asarray(jax.device_get(got), np.float64)
+        err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+        assert err < 1e-4, (scheme, err)
+        print(f"OK {scheme} rel_err={err:.2e}")
+
+    # 2D mesh: half-ring schedule (rows x cols).
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+    got = distributed_gram(a, mesh2, scheme="ring", row_axis="data",
+                           col_axis="model", levels=1, leaf=8)
+    got = np.asarray(jax.device_get(got), np.float64)
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 1e-4, ("ring", err)
+    print(f"OK ring rel_err={err:.2e}")
+
+    # odd ring size (no antipodal masking path)
+    mesh3 = jax.make_mesh((1, 8), ("data", "model"))
+    got = distributed_gram(a, mesh3, scheme="ring", row_axis="data",
+                           col_axis="model", levels=0, leaf=8)
+    got = np.asarray(jax.device_get(got), np.float64)
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 1e-4, ("ring8", err)
+    print(f"OK ring8 rel_err={err:.2e}")
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

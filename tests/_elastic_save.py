@@ -1,0 +1,65 @@
+"""Child A: train 3 steps on an 8-device mesh, checkpoint, dump a logit
+fingerprint. Usage: _elastic_save.py <workdir>"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=8"
+
+import numpy as np                      # noqa: E402
+import jax                              # noqa: E402
+import jax.numpy as jnp                 # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.registry import reduced_arch  # noqa: E402
+from repro.configs.base import TrainConfig  # noqa: E402
+from repro.data.pipeline import DataConfig, get_batch  # noqa: E402
+from repro.models import init_params, forward  # noqa: E402
+from repro.optim import adamw, apply_updates  # noqa: E402
+from repro.models import loss_fn  # noqa: E402
+from repro.checkpoint.manager import CheckpointManager  # noqa: E402
+from repro.parallel.sharding import param_specs, to_named  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+WORKDIR = sys.argv[1]
+
+
+def main():
+    assert len(jax.devices()) == 8
+    cfg = reduced_arch("yi-9b", num_layers=2, d_model=128, num_heads=4,
+                       num_kv_heads=4, d_ff=256, vocab_size=512, head_dim=32)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pshard = to_named(param_specs(params, mesh), mesh)
+    params = jax.device_put(params, pshard)
+    opt = adamw(1e-3)
+    state = {"step": jnp.zeros((), jnp.int32), "params": params,
+             "opt_state": opt.init(params)}
+    dc = DataConfig(vocab_size=512, seq_len=16, global_batch=8, seed=3)
+
+    @jax.jit
+    def step(state, batch):
+        (_, m), g = jax.value_and_grad(
+            lambda p, b: loss_fn(cfg, p, b), has_aux=True)(
+            state["params"], batch)
+        u, os_, _ = opt.update(g, state["opt_state"], state["params"],
+                               state["step"])
+        return {"step": state["step"] + 1,
+                "params": apply_updates(state["params"], u),
+                "opt_state": os_}
+
+    for i in range(3):
+        state = step(state, get_batch(dc, i))
+    mgr = CheckpointManager(WORKDIR, async_save=False)
+    mgr.save(3, state)
+
+    logits = forward(cfg, state["params"],
+                     jnp.asarray(get_batch(dc, 99)["inputs"]),
+                     mode="train")[0]
+    np.save(os.path.join(WORKDIR, "fingerprint.npy"),
+            np.asarray(logits, np.float32))
+    print("SAVE_OK")
+
+
+if __name__ == "__main__":
+    main()

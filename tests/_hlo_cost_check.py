@@ -1,0 +1,51 @@
+"""Child: validate the trip-count-aware HLO analyzer against a known scan
+program on an 8-device host platform."""
+import os
+
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.roofline.hlo_cost import analyze_hlo  # noqa: E402
+
+
+def main():
+    L, B, D = 48, 64, 128
+
+    def f(xs, w):
+        def body(c, _):
+            c = jnp.tanh(c @ w)
+            return c, ()
+        c, _ = jax.lax.scan(body, xs, None, length=L)
+        return jnp.sum(c)
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = NamedSharding(mesh, P("data", None))
+    c = jax.jit(f, in_shardings=(sh, None),
+                out_shardings=NamedSharding(mesh, P())).lower(
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+        jax.ShapeDtypeStruct((D, D), jnp.float32)).compile()
+    r = analyze_hlo(c.as_text())
+
+    dot_flops = L * 2 * (B // 8) * D * D           # per-device
+    assert 0.95 * dot_flops < r["flops"] < 1.3 * dot_flops, (
+        r["flops"], dot_flops)
+    xla_flops = c.cost_analysis()["flops"]
+    assert xla_flops < dot_flops / 10, "xla undercounts (expected)"
+    # bytes: per iteration ~ w (D*D*4) + 3x carry; x L
+    per_iter = D * D * 4 + 3 * (B // 8) * D * 4
+    assert r["bytes"] > 0.8 * L * per_iter * 0.5, (r["bytes"],
+                                                   L * per_iter)
+    assert r["unknown_trip_loops"] == 0
+    # collective: the final psum of a scalar
+    assert r["collectives"]["by_kind"].get("all-reduce", {}).get("count", 0) \
+        >= 1
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

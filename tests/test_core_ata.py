@@ -1,0 +1,91 @@
+"""Oracle tests for the core ATA / Strassen recursions."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import ata, ata_full, strassen_matmul
+from repro.core.symmetry import (
+    pack_tril, unpack_tril, pack_tril_blocks, unpack_tril_blocks,
+    symmetrize_from_lower,
+)
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (16, 16, 16), (64, 64, 64),
+    (33, 17, 9), (100, 50, 70), (128, 256, 64), (1, 5, 3), (65, 65, 65),
+])
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+@pytest.mark.parametrize("variant", ["strassen", "winograd"])
+def test_strassen_matches_dot(m, k, n, levels, variant):
+    a, b = _rand((m, k), seed=1), _rand((k, n), seed=2)
+    got = strassen_matmul(a, b, levels=levels, leaf=4, variant=variant)
+    want = a @ b
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,n", [
+    (8, 8), (32, 32), (64, 64), (33, 17), (17, 33), (100, 70),
+    (128, 96), (1, 7), (7, 1), (129, 65),
+])
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+def test_ata_matches_tril(m, n, levels):
+    a = _rand((m, n), seed=3)
+    got = ata(a, levels=levels, leaf=4)
+    want = jnp.tril(a.T @ a)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+    # strictly upper triangle is exactly zero
+    assert np.allclose(np.triu(np.asarray(got), 1), 0.0)
+
+
+def test_ata_full_symmetric_psd():
+    a = _rand((96, 48), seed=4)
+    c = ata_full(a, levels=2, leaf=8)
+    np.testing.assert_allclose(c, c.T, rtol=0, atol=0)
+    evals = np.linalg.eigvalsh(np.asarray(c, np.float64))
+    assert evals.min() > -1e-3  # PSD up to fp error
+
+
+def test_ata_bf16_accumulates_fp32():
+    a = _rand((256, 128), dtype=jnp.bfloat16, seed=5)
+    got = ata(a, levels=2, leaf=16)
+    want = jnp.tril(a.astype(jnp.float32).T @ a.astype(jnp.float32))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32), want, rtol=5e-2, atol=5e-1)
+
+
+def test_strassen_classical_variant():
+    a, b = _rand((31, 19), seed=6), _rand((19, 23), seed=7)
+    got = strassen_matmul(a, b, levels=3, variant="classical")
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_pack_unpack_roundtrip():
+    a = _rand((40, 24), seed=8)
+    c = jnp.tril(a.T @ a)
+    full = symmetrize_from_lower(c)
+    packed = pack_tril(full)
+    assert packed.shape == (24 * 25 // 2,)
+    np.testing.assert_allclose(unpack_tril(packed, 24), full, rtol=1e-6)
+
+
+def test_pack_unpack_blocks_roundtrip():
+    a = _rand((64, 32), seed=9)
+    full = symmetrize_from_lower(jnp.tril(a.T @ a))
+    packed = pack_tril_blocks(full, 8)
+    assert packed.shape == (4 * 5 // 2 * 8, 8)
+    np.testing.assert_allclose(unpack_tril_blocks(packed, 32, 8), full, rtol=1e-6)
+
+
+def test_ata_jit_and_grad():
+    a = _rand((32, 16), seed=10)
+    f = jax.jit(lambda x: ata_full(x, levels=1, leaf=4).sum())
+    g = jax.grad(lambda x: ata_full(x, levels=1, leaf=4).sum())(a)
+    # d/dA sum(A^T A) = A @ (ones + ones^T)
+    ones = jnp.ones((16, 16))
+    np.testing.assert_allclose(g, a @ (ones + ones.T), rtol=1e-4, atol=1e-4)
+    assert np.isfinite(float(f(a)))

@@ -1,0 +1,105 @@
+"""Data pipeline determinism/resumability + checkpoint manager semantics."""
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, SyntheticStream, get_batch
+from repro.checkpoint.manager import (CheckpointManager, save_pytree,
+                                      load_pytree)
+
+
+def _dc(**kw):
+    base = dict(vocab_size=64, seq_len=16, global_batch=4, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_batches_deterministic_and_distinct():
+    dc = _dc()
+    a = get_batch(dc, 3)
+    b = get_batch(dc, 3)
+    c = get_batch(dc, 4)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    assert not np.array_equal(a["inputs"], c["inputs"])
+    assert a["inputs"].shape == (4, 16)
+    assert a["inputs"].min() >= 0 and a["inputs"].max() < 64
+
+
+def test_markov_structure_learnable():
+    """labels must be mostly the affine successor of inputs (low noise)."""
+    dc = _dc(noise=0.0, vocab_size=97)
+    b = get_batch(dc, 0)
+    # consecutive positions follow x_{t+1} = (a x_t + c) % V per sequence:
+    # check labels == inputs shifted by one (construction invariant)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+
+
+def test_stream_resume_exact():
+    dc = _dc()
+    s1 = SyntheticStream(dc)
+    batches = [next(s1) for _ in range(5)]
+    s2 = SyntheticStream(dc).restore(3)
+    np.testing.assert_array_equal(next(s2)["inputs"], batches[3]["inputs"])
+
+
+def test_enc_inputs_emitted():
+    dc = _dc(enc_seq=10, enc_dim=8)
+    b = get_batch(dc, 0)
+    assert b["enc_inputs"].shape == (4, 10, 8)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state(x=1.0):
+    return {
+        "step": np.int32(5),
+        "params": {"w": np.full((4, 4), x, np.float32),
+                   "b16": jnp.full((3,), x, jnp.bfloat16),
+                   "blocks": [{"k": np.arange(6).reshape(2, 3)},
+                              {"k": np.arange(6).reshape(2, 3) + 1}]},
+    }
+
+
+def test_pytree_roundtrip(tmp_path):
+    f = str(tmp_path / "s.npz")
+    save_pytree(_state(2.5), f)
+    got = load_pytree(f)
+    assert got["params"]["b16"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got["params"]["b16"], np.float32),
+                               2.5)
+    np.testing.assert_array_equal(got["params"]["blocks"][1]["k"],
+                                  np.arange(6).reshape(2, 3) + 1)
+    assert int(got["step"]) == 5
+
+
+def test_manager_save_restore_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for step in (10, 20, 30):
+        mgr.save(step, _state(float(step)))
+    assert mgr.all_steps() == [20, 30]           # keep-K gc
+    state, meta = mgr.restore()
+    assert meta["step"] == 30
+    np.testing.assert_allclose(state["params"]["w"], 30.0)
+    state, meta = mgr.restore(20)
+    np.testing.assert_allclose(state["params"]["w"], 20.0)
+
+
+def test_manager_async_and_atomic(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, _state(1.0))
+    mgr.wait()
+    # no .tmp dirs left behind (atomic rename committed)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+    state, meta = mgr.restore()
+    assert meta["step"] == 1
+
+
+def test_manager_restore_empty(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state, meta = mgr.restore()
+    assert state is None and meta is None

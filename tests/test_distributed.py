@@ -1,0 +1,24 @@
+"""Distributed ATA-P (shard_map) == sequential, via an 8-device subprocess.
+
+The multi-device run happens in a child process so that the main pytest
+process keeps the default 1-device CPU platform (see system constraints:
+XLA_FLAGS must not be set globally)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+REPO = HERE.parent
+
+
+def test_distributed_gram_schemes_match_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(HERE / "_distributed_check.py")],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL_OK" in out.stdout

@@ -1,0 +1,28 @@
+"""Elastic restart: checkpoint written on an 8-device (4,2) mesh restores
+onto a 4-device (2,2) mesh (reshard-on-load) with identical model output.
+Two subprocesses — jax locks the device count per process."""
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+REPO = HERE.parent
+
+
+def _run(script, workdir):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, str(HERE / script), str(workdir)],
+        env=env, capture_output=True, text=True, timeout=900)
+
+
+def test_elastic_reshard_across_device_counts(tmp_path):
+    out = _run("_elastic_save.py", tmp_path)
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    assert "SAVE_OK" in out.stdout
+    out = _run("_elastic_restore.py", tmp_path)
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    assert "RESTORE_OK" in out.stdout

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.core.symmetry import unpack_tril_blocks
+
+
+def _rand(shape, dtype, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-1) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+SHAPES_MM = [
+    (32, 32, 32), (64, 128, 32), (100, 70, 50), (256, 256, 256),
+    (257, 129, 65),  # non-divisible edge tiles
+    (16, 512, 16),
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_MM)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel(m, k, n, dtype):
+    a, b = _rand((m, k), dtype, 1), _rand((k, n), dtype, 2)
+    got = ops.matmul(a, b, bm=32, bk=32, bn=32, interpret=True)
+    want = ref.matmul_ref(a, b)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+SHAPES_SYRK = [(64, 64), (128, 32), (96, 96), (100, 40), (33, 65), (256, 128)]
+
+
+@pytest.mark.parametrize("m,n", SHAPES_SYRK)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_syrk_kernel_packed(m, n, dtype):
+    bn = bk = 32
+    a = _rand((m, n), dtype, 3)
+    got = ops.syrk_packed(a, bk=bk, bn=bn, interpret=True)
+    ap = jnp.pad(a, (((-m) % bk and (0, (-m) % bk)) or (0, 0),
+                     ((-n) % bn and (0, (-n) % bn)) or (0, 0)))
+    want = ref.syrk_packed_ref(ap, bn)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,n", SHAPES_SYRK)
+def test_syrk_dense_matches_tril(m, n):
+    a = _rand((m, n), jnp.float32, 4)
+    got = ops.syrk(a, bk=32, bn=32, interpret=True)
+    want = jnp.tril(a.T @ a)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    got_sym = ops.syrk(a, bk=32, bn=32, symmetrize=True, interpret=True)
+    np.testing.assert_allclose(got_sym, a.T @ a, rtol=1e-4, atol=1e-4)
+
+
+def test_syrk_saves_upper_blocks():
+    """The packed output has T(T+1)/2 blocks — upper blocks never exist."""
+    a = _rand((64, 128), jnp.float32, 5)
+    packed = ops.syrk_packed(a, bk=32, bn=32, interpret=True)
+    t = 128 // 32
+    assert packed.shape == (t * (t + 1) // 2 * 32, 32)  # vs t*t*32 dense
+
+
+@pytest.mark.parametrize("m,n", [(64, 64), (32, 96), (100, 50), (256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_combine_kernel(m, n, dtype):
+    ms = [_rand((m, n), dtype, 10 + i) for i in range(7)]
+    got = ops.strassen_combine(*ms, bm=32, bn=32, interpret=True)
+    want = ref.strassen_combine_ref(*ms)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,n", [(32, 32), (64, 128), (100, 70), (257, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_transpose_kernel(m, n, dtype):
+    if dtype == jnp.int32:
+        a = jnp.arange(m * n, dtype=dtype).reshape(m, n)
+    else:
+        a = _rand((m, n), dtype, 6)
+    got = ops.transpose(a, bm=32, bn=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.transpose_ref(a), np.float32))
+
+
+def test_ata_with_pallas_base():
+    """Core ATA recursion with Pallas kernels as the leaf ops."""
+    from repro.core import ata
+    from repro.kernels import pallas_base_matmul, pallas_base_syrk
+    a = _rand((128, 96), jnp.float32, 7)
+    got = ata(a, levels=1, leaf=32,
+              base_syrk=pallas_base_syrk(bk=32, bn=32, interpret=True),
+              base_matmul=pallas_base_matmul(32, 32, 32, interpret=True))
+    np.testing.assert_allclose(got, jnp.tril(a.T @ a), rtol=1e-4, atol=1e-4)

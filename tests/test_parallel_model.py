@@ -1,0 +1,21 @@
+"""Distributed model semantics == single-device reference (8-device
+subprocess; the main pytest process keeps 1 device)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+REPO = HERE.parent
+
+
+def test_parallel_model_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(HERE / "_parallel_model_check.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    assert "ALL_OK" in out.stdout

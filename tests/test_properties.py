@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.ata import ata, ata_full
+from repro.core.strassen import strassen_matmul
+from repro.core.symmetry import (pack_tril, unpack_tril, tri_index,
+                                 tri_coords, tri_count)
+from repro.core.cost_model import (ata_mults_exact, strassen_mults_exact,
+                                   npl, lmax, latency_messages)
+from repro.data.pipeline import DataConfig, get_batch
+from repro.optim.grad_compress import int8_quantize, int8_dequantize
+
+SET = dict(deadline=None, max_examples=15,
+           suppress_health_check=[HealthCheck.too_slow])
+
+
+def _rand(key, m, n):
+    return jax.random.normal(jax.random.PRNGKey(key), (m, n), jnp.float32)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(3, 80), st.integers(2, 60),
+       st.integers(0, 3))
+@settings(**SET)
+def test_ata_matches_tril_oracle(key, m, n, levels):
+    a = _rand(key, m, n)
+    got = np.asarray(ata(a, levels=levels, leaf=8), np.float64)
+    want = np.tril(np.asarray(a, np.float64).T @ np.asarray(a, np.float64))
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 5e-5
+    # strictly-upper part is exactly zero (never computed)
+    assert np.abs(np.triu(got, 1)).max() == 0.0
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 48), st.integers(2, 48))
+@settings(**SET)
+def test_gram_symmetric_and_psd(key, m, n):
+    a = _rand(key, m, n)
+    c = np.asarray(ata_full(a, levels=2, leaf=8), np.float64)
+    assert np.abs(c - c.T).max() < 1e-5 * max(np.abs(c).max(), 1.0)
+    w = np.linalg.eigvalsh(c + 1e-4 * np.eye(n))
+    assert w.min() > -1e-3
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40), st.integers(2, 40),
+       st.integers(2, 40), st.sampled_from(["strassen", "winograd"]),
+       st.integers(0, 3))
+@settings(**SET)
+def test_strassen_matches_matmul(key, m, k, n, variant, levels):
+    a = _rand(key, m, k)
+    b = _rand(key + 1, k, n)
+    got = np.asarray(strassen_matmul(a, b, levels=levels, leaf=4,
+                                     variant=variant), np.float64)
+    want = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 1e-4
+
+
+@given(st.integers(1, 64))
+@settings(**SET)
+def test_pack_unpack_roundtrip(n):
+    c = np.tril(np.arange(n * n, dtype=np.float32).reshape(n, n))
+    sym = c + np.tril(c, -1).T
+    packed = pack_tril(jnp.asarray(sym))
+    assert packed.shape == (n * (n + 1) // 2,)
+    back = np.asarray(unpack_tril(packed, n, symmetrize=True))
+    assert np.array_equal(back, sym)
+
+
+@given(st.integers(1, 40))
+@settings(**SET)
+def test_tri_index_bijective(t):
+    coords = tri_coords(t)
+    assert len(coords) == tri_count(t)
+    for lin, (i, j) in enumerate(coords):
+        assert tri_index(int(i), int(j)) == lin
+
+
+@given(st.integers(2, 2000), st.integers(2, 2000))
+@settings(**SET)
+def test_mult_counts_monotone_and_below_classical(m, n):
+    e = ata_mults_exact(m, n, leaf=32)
+    assert e <= m * n * (n + 1) // 2 + 1       # never worse than classical
+    assert e > 0
+    s = strassen_mults_exact(n, m, n, leaf=32)
+    assert s <= m * n * n
+
+
+@given(st.integers(1, 5000))
+@settings(**SET)
+def test_process_tree_invariants(p):
+    level = lmax(p)
+    assert npl(level) <= p
+    if level < 6:
+        assert npl(level + 1) > p
+    # paper §5: L(n,P) = max(4(lmax-1), 3 lmax) and lmax < log_7 P bound
+    assert latency_messages(p) == max(4 * max(level - 1, 0), 3 * level)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 10_000))
+@settings(**SET)
+def test_pipeline_pure_function_of_step(seed, step):
+    dc = DataConfig(vocab_size=97, seq_len=8, global_batch=2, seed=seed)
+    a = get_batch(dc, step)
+    b = get_batch(dc, step)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    assert a["inputs"].min() >= 0 and a["inputs"].max() < 97
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1e-6, 1e4))
+@settings(**SET)
+def test_int8_quantization_error_bound(key, scale_mag):
+    x = _rand(key, 4, 16).reshape(-1) * scale_mag
+    q, s = int8_quantize(x)
+    err = np.abs(np.asarray(int8_dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6 * scale_mag

@@ -1,0 +1,106 @@
+"""Sharding-rule unit tests (no multi-device needed: rules are pure)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_arch, reduced_arch
+from repro.models import init_params, init_cache
+from repro.parallel.sharding import param_specs, cache_specs, _axis_size
+from repro.parallel.act import _fit_spec
+
+
+class FakeMesh:
+    """Shape-only stand-in (rules never touch devices)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _abstract_params(arch, reduced=False):
+    cfg = reduced_arch(arch) if reduced else get_arch(arch)
+    return cfg, jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v3-671b", "arctic-480b",
+                                  "mamba2-2.7b", "whisper-small"])
+def test_all_big_2d_weights_sharded(arch):
+    """>=99% of param bytes sharded at least 16-way; known divisibility
+    fallbacks (whisper's odd 51865 vocab can never shard; mamba2's packed
+    in_proj dim 10576 % 16 != 0 only shards on d) cap the fully-256-way
+    fraction below 100% for those archs — asserted with per-arch bounds."""
+    cfg, params = _abstract_params(arch)
+    specs = param_specs(params, MESH)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    total = under256 = under16 = 0
+    for p, s in zip(flat_p, flat_s):
+        b = p.size * p.dtype.itemsize
+        nsh = 1
+        for part in s:
+            if part is not None:
+                nsh *= _axis_size(MESH, part)
+        total += b
+        if nsh < 256:
+            under256 += b
+        if nsh < 16:
+            under16 += b
+    limit256 = {"whisper-small": 0.30, "mamba2-2.7b": 0.10}.get(arch, 0.01)
+    assert under256 / total < limit256, f"{under256/total:.2%} <256-way"
+    limit16 = {"whisper-small": 0.17}.get(arch, 0.01)  # odd vocab embed
+    assert under16 / total < limit16, f"{under16/total:.2%} <16-way"
+
+
+def test_moe_expert_sharding():
+    cfg, params = _abstract_params("deepseek-v3-671b")
+    specs = param_specs(params, MESH)
+    wg = specs["mla_moe"]["moe"]["w_gate"]
+    assert wg == P(None, "model", "data", None)    # (L, E, d, f)
+    wd = specs["mla_moe"]["moe"]["w_down"]
+    assert wd == P(None, "model", None, "data")
+
+
+def test_multipod_fsdp_axes():
+    cfg, params = _abstract_params("yi-9b")
+    specs = param_specs(params, MESH3, fsdp_axes=("pod", "data"))
+    wq = specs["blocks"]["attn"]["wq"]
+    assert wq == P(None, ("pod", "data"), "model")
+
+
+def test_indivisible_falls_back_replicated():
+    cfg, params = _abstract_params("qwen2.5-3b", reduced=True)
+    specs = param_specs(params, MESH)
+    # tiny dims (256) still divide 16 -> sharded; but a 6-dim would not.
+    from repro.parallel.sharding import _check
+    assert _check(["data", None], (10, 4), MESH) == P(None, None)
+    assert _check(["data", "model"], (32, 6), MESH) == P("data", None)
+
+
+def test_cache_specs_decode():
+    cfg = get_arch("command-r-plus-104b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 32768))
+    specs = cache_specs(cache, MESH)
+    # (L, B, S, Hkv=8, D): B->dp(16), S->model (8 kv heads !% 16)
+    assert specs["blocks"]["k"] == P(None, ("data",), "model", None, None) \
+        or specs["blocks"]["k"] == P(None, ("data",), None, "model", None)
+
+
+def test_cache_specs_batch1_long_context():
+    cfg = get_arch("zamba2-2.7b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 1, 524288))
+    specs = cache_specs(cache, MESH)
+    kspec = specs["shared_attn"]["k"]
+    # B=1 cannot shard -> seq takes the dp axes; heads (32) -> model
+    assert kspec[2] in ("data", ("data",))
+    assert kspec[3] == "model"
+
+
+def test_fit_spec_divisibility():
+    assert _fit_spec(P(("data",), "model"), (32, 51865), MESH) \
+        == P(("data",), None)
+    assert _fit_spec(P(("data",), None), (1, 1), MESH) == P(None, None)

@@ -1,0 +1,73 @@
+"""System-level checks: dry-run artifacts well-formed, HLO cost analyzer
+trip-count correctness (multi-device subprocess), end-to-end mini train via
+the launch CLI."""
+import json
+import glob
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HERE = pathlib.Path(__file__).parent
+REPO = HERE.parent
+ART = REPO / "artifacts" / "dryrun"
+
+
+def test_dryrun_artifacts_wellformed():
+    files = glob.glob(str(ART / "*.json"))
+    if not files:
+        pytest.skip("no dry-run artifacts yet (run repro.launch.dryrun)")
+    for f in files:
+        with open(f) as fh:
+            a = json.load(fh)
+        if a.get("status") != "ok":
+            continue
+        assert a["memory"]["temp_size_in_bytes"] >= 0
+        if a.get("kind") != "gram":
+            assert a["cost_corrected"]["flops"] > 0, a["cell"]
+            assert a["cost_corrected"]["unknown_trip_loops"] == 0, a["cell"]
+        assert "wire_bytes_total" in (a.get("collectives_corrected")
+                                      or a["collectives"])
+
+
+def test_dryrun_covers_assigned_grid():
+    """32 runnable cells (40-cell grid minus 8 mandated long_500k skips)
+    x both meshes must be present and ok once the sweep has run."""
+    files = glob.glob(str(ART / "*__pod2x16x16.json"))
+    if len(files) < 10:
+        pytest.skip("multi-pod sweep incomplete")
+    from repro.configs.registry import all_cells
+    for arch, shape in all_cells():
+        for mesh in ("pod16x16", "pod2x16x16"):
+            p = ART / f"{arch}__{shape}__{mesh}.json"
+            assert p.exists(), f"missing dry-run cell {p.name}"
+            with open(p) as fh:
+                assert json.load(fh)["status"] == "ok", p.name
+
+
+def test_hlo_cost_trip_count_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(HERE / "_hlo_cost_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL_OK" in out.stdout
+
+
+def test_train_cli_end_to_end(tmp_path):
+    from repro.launch.train import main
+    hist = main(["--arch", "qwen2.5-3b", "--reduced", "--steps", "4",
+                 "--batch", "2", "--seq", "16",
+                 "--workdir", str(tmp_path)])
+    assert len(hist) == 4
+
+
+def test_serve_cli_end_to_end():
+    from repro.launch.serve import main
+    finished = main(["--arch", "qwen2.5-3b", "--requests", "2",
+                     "--slots", "2", "--max-seq", "64", "--max-new", "4"])
+    assert len(finished) == 2

@@ -1,0 +1,113 @@
+"""Trainer integration: loss decreases, fault-injection restart resumes
+exactly, straggler watchdog flags outliers."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import reduced_arch
+from repro.data.pipeline import DataConfig
+from repro.runtime.trainer import (Trainer, FailureInjector,
+                                   SimulatedFailure, StragglerWatchdog)
+
+
+def _tiny_cfg():
+    return reduced_arch("qwen2.5-3b", num_layers=2, d_model=64,
+                        num_heads=2, num_kv_heads=2, d_ff=128,
+                        vocab_size=128, head_dim=32)
+
+
+def _tc(**kw):
+    base = dict(learning_rate=3e-3, warmup_steps=5, total_steps=40,
+                checkpoint_every=10, seed=0)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def _dc():
+    return DataConfig(vocab_size=128, seq_len=32, global_batch=8, seed=0,
+                      noise=0.0)
+
+
+def test_loss_decreases(tmp_path):
+    tr = Trainer(_tiny_cfg(), _tc(), _dc(), str(tmp_path))
+    hist = tr.run(30)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.2, (first, last)
+
+
+def test_failure_injection_and_bitexact_resume(tmp_path):
+    cfg, tc, dc = _tiny_cfg(), _tc(), _dc()
+    # uninterrupted reference run to step 20
+    ref = Trainer(cfg, tc, dc, str(tmp_path / "ref"))
+    ref.run(20)
+    ref_params = jax.device_get(ref.state["params"])
+
+    # crashing run: dies at step 14 (after checkpoint at 10)
+    crash_dir = str(tmp_path / "crash")
+    tr = Trainer(cfg, tc, dc, crash_dir, failure=FailureInjector(14))
+    with pytest.raises(SimulatedFailure):
+        tr.run(20)
+    assert tr.step == 14
+
+    # restart: must restore step 10 checkpoint and replay 11..20
+    tr2 = Trainer(cfg, tc, dc, crash_dir)
+    assert tr2.step == 10, "restored from the last committed checkpoint"
+    tr2.run(20)
+    got = jax.device_get(tr2.state["params"])
+    for a, b in zip(jax.tree.leaves(ref_params), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_grad_accumulation_matches_full_batch():
+    """microbatched gradient accumulation == one big batch, compared at the
+    fp32 gradient level (params are bf16, so post-update comparison would
+    only see rounding ulps)."""
+    import jax.numpy as jnp
+    from repro.data.pipeline import get_batch
+    from repro.models import init_params, loss_fn
+
+    cfg, dc = _tiny_cfg(), _dc()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = get_batch(dc, 0)
+
+    g_full = jax.jit(jax.grad(
+        lambda p, b: loss_fn(cfg, p, b)[0]))(params, batch)
+
+    k = 4
+    mb = jax.tree.map(
+        lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+    g_acc = jax.tree.map(jnp.zeros_like, g_full)
+    for i in range(k):
+        gi = jax.jit(jax.grad(lambda p, b: loss_fn(cfg, p, b)[0]))(
+            params, jax.tree.map(lambda x: x[i], mb))
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype) / k,
+                             g_acc, gi)
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = np.abs(a).max() + 1e-6
+        assert np.abs(a - b).max() <= 5e-2 * scale + 1e-3, \
+            f"leaf diff {np.abs(a - b).max()} vs scale {scale}"
+
+
+def test_straggler_watchdog_flags():
+    wd = StragglerWatchdog(warmup=2, threshold=2.0)
+    for _ in range(6):
+        assert not wd.observe(0.1)
+    assert wd.observe(0.5)               # 5x slower -> flagged
+    assert len(wd.flagged) == 1
+    assert not wd.observe(0.11)          # back to normal
+
+
+def test_shampoo_trainer_runs(tmp_path):
+    tc = _tc(optimizer="shampoo", shampoo_block_size=64,
+             shampoo_precond_interval=5, ata_levels=1)
+    tr = Trainer(_tiny_cfg(), tc, _dc(), str(tmp_path))
+    hist = tr.run(8)
+    assert np.isfinite(hist[-1]["loss"])
