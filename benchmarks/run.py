@@ -9,13 +9,20 @@ fig8  Karp-Flatt                                      <- paper Fig 8
 s3.1  multiplication counts vs (2/7) n^log2(7)        <- paper §3.1
 s5    communication model + comm fraction             <- paper §5/§6.3.2
 roofline  3-term roofline over dry-run artifacts      <- brief §Roofline
+ata   fused-pipeline trajectory -> BENCH_ata.json     <- DESIGN.md §4
+
+``--smoke`` runs the fast interpret-mode kernel test suite instead of the
+benchmarks (CI smoke target: validates the fused Pallas pipeline on CPU
+in a couple of minutes).
 """
 import argparse
+import subprocess
 import sys
 import time
 
 from . import (bench_exec_time, bench_speedup, bench_efficiency,
-               bench_karpflatt, bench_flops, bench_comm, bench_roofline)
+               bench_karpflatt, bench_flops, bench_comm, bench_roofline,
+               bench_ata)
 
 ALL = [
     ("fig5_exec_time", bench_exec_time.run),
@@ -25,14 +32,23 @@ ALL = [
     ("s31_flops", bench_flops.run),
     ("s5_comm", bench_comm.run),
     ("roofline", bench_roofline.run),
+    ("ata_fused", bench_ata.run),
 ]
+
+SMOKE_TESTS = ["tests/test_fused_ata.py", "tests/test_kernels.py",
+               "tests/test_core_ata.py"]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the interpret-mode kernel tests and exit")
     args = ap.parse_args(argv)
+    if args.smoke:
+        sys.exit(subprocess.call(
+            [sys.executable, "-m", "pytest", "-q", *SMOKE_TESTS]))
     failures = []
     for name, fn in ALL:
         if args.only and args.only not in name:

@@ -24,8 +24,8 @@ def main():
     a = jax.random.normal(key, (1024, 512), jnp.float32)
     ref = np.asarray(a).T @ np.asarray(a)
 
-    mesh1 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh1 = make_mesh((8,), ("data",))
     a1 = jax.device_put(a, NamedSharding(mesh1, P("data", None)))
     for scheme in ("allreduce", "reducescatter"):
         c = distributed_gram(a1, mesh1, scheme=scheme, levels=2, leaf=64)
@@ -34,8 +34,7 @@ def main():
               f"one {'psum' if scheme == 'allreduce' else 'psum_scatter'} — "
               f"the paper's reduction tree)")
 
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 4), ("data", "model"))
     a2 = jax.device_put(a, NamedSharding(mesh2, P("data", "model")))
     c = distributed_gram(a2, mesh2, scheme="ring", row_axis="data",
                          col_axis="model", levels=1, leaf=64)

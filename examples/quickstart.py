@@ -48,8 +48,8 @@ def main():
 
     # 6. distributed gram on whatever mesh this process has (1 device here;
     #    becomes the paper's ATA-P reduction tree on a pod)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     cg = distributed_gram(a, mesh, scheme="allreduce", levels=1)
     print("distributed gram max err:",
           np.abs(np.asarray(cg) - (ref + ref.T - np.diag(np.diag(ref)))).max())

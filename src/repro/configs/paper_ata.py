@@ -5,7 +5,7 @@ production-scale cells for the TPU dry-run (the paper's technique as the
 distributed Shampoo/normal-equations primitive at pod scale).
 """
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Tuple, Union
 
 # Paper experiment grid (CPU wall-clock reproduction, Figs 5-8)
 PAPER_NS = (5000, 10000)
@@ -19,12 +19,17 @@ PAPER_COMM_FRACTION = (0.0014, 0.0046)  # §6.3.2 (P=6 .. P=250)
 
 @dataclass(frozen=True)
 class GramCell:
-    """One distributed-gram dry-run cell: A (m, n) sharded on the mesh."""
+    """One distributed-gram dry-run cell: A (m, n) sharded on the mesh.
+
+    ``levels="auto"`` (the default) lets ``ata_levels_for`` /
+    ``strassen_levels_for`` pick the natural per-shard recursion depth
+    (capped at ``strassen.AUTO_MAX_LEVELS``) instead of a hard-coded 2.
+    """
     name: str
     m: int
     n: int
     scheme: str = "allreduce"            # allreduce | reducescatter | ring
-    levels: int = 2
+    levels: Union[int, str] = "auto"
     dtype: str = "bfloat16"
 
 

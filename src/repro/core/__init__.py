@@ -9,11 +9,16 @@ from .distributed import (
     gram_allreduce, gram_reducescatter, gram_ring, distributed_gram,
     ring_layout_coords,
 )
-from . import cost_model
+from .schedule import (
+    plan_ata, plan_matmul, evaluate_ata_plan, evaluate_matmul_plan,
+)
+from . import cost_model, schedule
 
 __all__ = [
     "ata", "ata_full", "ata_levels_for",
     "strassen_matmul", "strassen_levels_for",
+    "plan_ata", "plan_matmul", "evaluate_ata_plan", "evaluate_matmul_plan",
+    "schedule",
     "pack_tril", "unpack_tril", "pack_tril_blocks", "unpack_tril_blocks",
     "symmetrize_from_lower", "tri_count", "tri_index", "tri_coords",
     "gram_allreduce", "gram_reducescatter", "gram_ring", "distributed_gram",

@@ -11,18 +11,32 @@ Algorithm 1 of the paper, adapted for TPU (DESIGN.md §2):
 Only the lower triangle is computed; multiplication count is upper-bounded
 by (2/7) n^{log2 7} (paper §3.1) versus n^2(n+1)/2 classical.
 
-The recursion unrolls at trace time over static shapes, capped at ``levels``.
-The base case is a SYRK (half-work block gram): ``jnp.dot(a.T, a)`` under XLA
-or the Pallas ``syrk`` kernel which skips upper-triangular blocks entirely.
+Two execution modes (DESIGN.md §4):
+
+* ``mode="fused"`` — the hot path.  The recursion is flattened at trace
+  time into a leaf-task schedule (``core/schedule.py``) and executed by a
+  single Pallas kernel (``kernels/strassen_fused.py``): operand sums live
+  in VMEM, products accumulate in fp32 VMEM scratch, and each packed
+  lower-triangular output block is written to HBM exactly once.
+* ``mode="reference"`` — the original trace-time recursion, capped at
+  ``levels``.  Materializes per-level temporaries in HBM; kept as the
+  numerical oracle, for autodiff, and for custom ``base_syrk`` /
+  ``base_matmul`` hooks.
+
+``mode="auto"`` picks fused on TPU (reference when custom leaf hooks are
+given, which the fused schedule cannot honor) and reference elsewhere.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from .strassen import strassen_matmul, DEFAULT_LEAF, DEFAULT_LEVELS
+from .strassen import (
+    strassen_matmul, resolve_mode, AUTO_MAX_LEVELS, DEFAULT_LEAF,
+    DEFAULT_LEVELS,
+)
 from .symmetry import symmetrize_from_lower
 
 __all__ = ["ata", "ata_full", "ata_levels_for"]
@@ -37,30 +51,58 @@ def _default_base_syrk(a: jax.Array) -> jax.Array:
 def ata(
     a: jax.Array,
     *,
-    levels: int = DEFAULT_LEVELS,
+    levels: Union[int, str] = DEFAULT_LEVELS,
     leaf: int = DEFAULT_LEAF,
     variant: str = "strassen",
     base_syrk: Optional[Callable] = None,
     base_matmul: Optional[Callable] = None,
+    mode: str = "auto",
+    out_dtype=None,
+    block: int = 256,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Lower triangle of ``a.T @ a`` via the paper's ATA recursion.
 
     Args:
       a: (m, n) array — general rectangular, any size.
-      levels: recursion depth cap (0 => classical SYRK).
+      levels: recursion depth cap (0 => classical SYRK), or ``"auto"`` to
+        recurse until a dimension reaches ``leaf`` (capped at
+        ``AUTO_MAX_LEVELS`` — see strassen.py for the rationale).
       leaf: stop recursing when m or n <= leaf (paper: 32; TPU: 256).
-      variant: Strassen variant used for the off-diagonal C21 products.
+        Reference mode only (the fused schedule unrolls exactly ``levels``);
+        also sets the ``levels="auto"`` depth for both modes.
+      variant: Strassen variant for the off-diagonal C21 products
+        ("strassen" | "winograd" | "classical").
       base_syrk: leaf gram fn (n-triangular); default jnp, or Pallas syrk.
-      base_matmul: leaf matmul for the HASA calls.
+        Forces reference mode under ``mode="auto"``.
+      base_matmul: leaf matmul for the HASA calls.  Same.
+      mode: "auto" | "fused" | "reference" (see module docstring).
+      out_dtype: result dtype.  Defaults to the *promoted accumulation
+        dtype* — fp32 for bf16/fp32 inputs — instead of silently
+        downcasting fp32-accumulated results back to the input dtype
+        (Strassen recombination loses ~1 bit/level; see strassen.py).
+      block: Pallas tile edge for the fused path (bk = bn = block).
+      interpret: Pallas interpret-mode override for the fused path
+        (default: interpret off-TPU).
 
     Returns:
-      (n, n) array, strictly upper triangle zeroed, dtype promoted from a.
+      (n, n) array, strictly upper triangle zeroed, dtype ``out_dtype``.
     """
     if a.ndim != 2:
         raise ValueError(f"ata expects a matrix, got shape {a.shape}")
+    m, n = a.shape
+    if levels == "auto":
+        levels = min(ata_levels_for(m, n, leaf), AUTO_MAX_LEVELS)
+    out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+    mode = resolve_mode(mode, base_syrk, base_matmul)
+    if mode == "fused":
+        from ..kernels.strassen_fused import fused_ata
+        return fused_ata(a, levels=levels, variant=variant, bk=block,
+                         bn=block, out_dtype=out_dtype, interpret=interpret)
     syrk = base_syrk or _default_base_syrk
     out = _ata_rec(a, levels, leaf, variant, syrk, base_matmul)
-    return out.astype(a.dtype)
+    return out.astype(out_dtype)
 
 
 def _ata_rec(a, levels, leaf, variant, syrk, base_matmul):
@@ -90,10 +132,10 @@ def _ata_rec(a, levels, leaf, variant, syrk, base_matmul):
     # C21: two generalized-Strassen rectangular products (lines 11-12).
     c21 = strassen_matmul(
         a12.T, a11, levels=levels - 1, leaf=leaf, variant=variant,
-        base_matmul=base_matmul,
+        base_matmul=base_matmul, mode="reference",
     ) + strassen_matmul(
         a22.T, a21, levels=levels - 1, leaf=leaf, variant=variant,
-        base_matmul=base_matmul,
+        base_matmul=base_matmul, mode="reference",
     )
 
     top = jnp.concatenate([c11, jnp.zeros((n2, np_ - n2), c11.dtype)], axis=1)
@@ -109,6 +151,7 @@ def ata_full(a: jax.Array, **kw) -> jax.Array:
 
 def ata_levels_for(m: int, n: int, leaf: int = DEFAULT_LEAF) -> int:
     """Natural recursion depth: recurse until a dim hits the leaf size."""
+    leaf = max(leaf, 1)        # (1+1)//2 == 1: leaf=0 would never terminate
     lv = 0
     while m > leaf and n > leaf:
         m, n = (m + 1) // 2, (n + 1) // 2

@@ -47,8 +47,39 @@ from .symmetry import symmetrize_from_lower
 
 __all__ = [
     "gram_allreduce", "gram_reducescatter", "gram_ring",
-    "distributed_gram", "ring_layout_coords",
+    "distributed_gram", "ring_layout_coords", "shard_map_compat",
 ]
+
+
+def shard_map_compat():
+    """``(shard_map, unchecked_kwargs)`` across jax versions.
+
+    Resolves the import location (``jax.shard_map`` vs the 0.4.x
+    experimental module) and the ``check_rep`` -> ``check_vma`` kwarg
+    rename *independently* — the import path does not imply the kwarg
+    set, so the kwarg is keyed on the function signature.  Single shared
+    shim for every shard_map call site in the repo.
+    """
+    import inspect
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        params = inspect.signature(sm).parameters
+    except (TypeError, ValueError):
+        params = {}
+    if "check_vma" in params:
+        unchecked = {"check_vma": False}
+    elif "check_rep" in params:
+        unchecked = {"check_rep": False}
+    else:
+        unchecked = {}
+    return sm, unchecked
+
+
+def _shard_map():
+    return shard_map_compat()[0]
 
 
 # ---------------------------------------------------------------------------
@@ -56,30 +87,44 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 def gram_allreduce(a_local: jax.Array, row_axis: str, *,
-                   levels: int = 2, leaf: int = 256,
-                   variant: str = "strassen") -> jax.Array:
+                   levels=2, leaf: int = 256,
+                   variant: str = "strassen", mode: str = "auto",
+                   out_dtype=None) -> jax.Array:
     """Paper-faithful: local ATA + one all-reduce over the row axis.
 
+    Per-shard compute goes through the fused leaf-task pipeline on TPU
+    (mode="auto"; see ata.py) — the collective schedule is unchanged.
+    ``out_dtype`` defaults to the *input* dtype here (unlike plain
+    ``ata``): accumulation is still fp32 inside the kernel, but the
+    reduction moves C over the wire, and shipping bf16 cells as fp32
+    would silently double the paper's bandwidth term.  Pass
+    ``out_dtype=jnp.float32`` to reduce in full precision.
     Returns the full symmetric C, replicated over ``row_axis``.
     """
-    c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant)
+    c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant,
+                       mode=mode,
+                       out_dtype=out_dtype or a_local.dtype)
     return jax.lax.psum(c_local, row_axis)
 
 
 def gram_reducescatter(a_local: jax.Array, row_axis: str, *,
-                       levels: int = 2, leaf: int = 256,
-                       variant: str = "strassen") -> jax.Array:
+                       levels=2, leaf: int = 256,
+                       variant: str = "strassen", mode: str = "auto",
+                       out_dtype=None) -> jax.Array:
     """Beyond-paper: local ATA + reduce-scatter (C sharded by rows over
     ``row_axis``); bandwidth term / P, no replicated C."""
-    c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant)
+    c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant,
+                       mode=mode,
+                       out_dtype=out_dtype or a_local.dtype)
     return jax.lax.psum_scatter(c_local, row_axis, scatter_dimension=0,
                                 tiled=True)
 
 
 def gram_ring(a_local: jax.Array, col_axis: str,
               row_axis: Optional[str] = None, *,
-              levels: int = 2, leaf: int = 256,
-              variant: str = "strassen") -> jax.Array:
+              levels=2, leaf: int = 256,
+              variant: str = "strassen", mode: str = "auto",
+              out_dtype=None, axis_size: Optional[int] = None) -> jax.Array:
     """Half-ring symmetric collective gram (beyond-paper TPU schedule).
 
     Device layout: ``a_local`` is the (rows/R, cols/T) shard of A.
@@ -92,7 +137,17 @@ def gram_ring(a_local: jax.Array, col_axis: str,
     entry s on device c is C[c, (c - s) % T] (lower-circulant layout; see
     ``ring_layout_coords``), already reduced over ``row_axis`` if given.
     """
-    T = jax.lax.axis_size(col_axis)
+    # The ring length must be static (it drives the Python hop loop);
+    # jax.lax.axis_size is missing on older jax, so callers that know the
+    # mesh (distributed_gram) pass it explicitly.
+    if axis_size is not None:
+        T = axis_size
+    elif hasattr(jax.lax, "axis_size"):
+        T = jax.lax.axis_size(col_axis)
+    else:
+        raise ValueError(
+            "gram_ring needs a static ring length and this jax version has "
+            "no jax.lax.axis_size — pass axis_size=mesh.shape[col_axis]")
     c = jax.lax.axis_index(col_axis)
     n_loc = a_local.shape[1]
     half = T // 2
@@ -100,7 +155,9 @@ def gram_ring(a_local: jax.Array, col_axis: str,
     perm = [(i, (i + 1) % T) for i in range(T)]
 
     # Step 0: diagonal block — symmetric, use ATA (half the multiplications).
-    blocks = [ata_full(a_local, levels=levels, leaf=leaf, variant=variant)]
+    out_dtype = out_dtype or a_local.dtype   # wire dtype (see gram_allreduce)
+    blocks = [ata_full(a_local, levels=levels, leaf=leaf, variant=variant,
+                       mode=mode, out_dtype=out_dtype)]
 
     cur = a_local
     for s in range(1, half + 1):
@@ -110,7 +167,8 @@ def gram_ring(a_local: jax.Array, col_axis: str,
         cur = jax.lax.ppermute(cur, col_axis, perm)
         # Device c now holds column block (c - s) % T.
         blk = strassen_matmul(a_local.T, cur, levels=levels, leaf=leaf,
-                              variant=variant)
+                              variant=variant, mode=mode,
+                              out_dtype=out_dtype)
         if s == half and T % 2 == 0:
             # At the antipodal step each unordered pair {c, c-T/2} appears on
             # both devices: keep it only on c < T/2 (SPMD runs the same
@@ -148,8 +206,9 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
                      scheme: str = "allreduce",
                      row_axis: str = "data",
                      col_axis: Optional[str] = None,
-                     levels: int = 2, leaf: int = 256,
-                     variant: str = "strassen",
+                     levels=2, leaf: int = 256,
+                     variant: str = "strassen", mode: str = "auto",
+                     out_dtype=None,
                      assemble: bool = True) -> jax.Array:
     """Compute C = A^t A for a globally sharded A on ``mesh``.
 
@@ -162,7 +221,7 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
                          block layout (sharded over ``col_axis``) —
                          n(n+1)/2-ish storage, zero post-processing.
     """
-    from jax import shard_map
+    shard_map = _shard_map()
 
     if scheme in ("allreduce", "reducescatter"):
         body = {
@@ -170,7 +229,8 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
             "reducescatter": gram_reducescatter,
         }[scheme]
         fn = functools.partial(body, row_axis=row_axis, levels=levels,
-                               leaf=leaf, variant=variant)
+                               leaf=leaf, variant=variant, mode=mode,
+                               out_dtype=out_dtype)
         out_spec = P() if scheme == "allreduce" else P(row_axis)
         return shard_map(
             fn, mesh=mesh, in_specs=P(row_axis, None), out_specs=out_spec,
@@ -184,7 +244,8 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
 
         def body(a_local):
             return gram_ring(a_local, col_axis, row_axis,
-                             levels=levels, leaf=leaf, variant=variant)
+                             levels=levels, leaf=leaf, variant=variant,
+                             mode=mode, out_dtype=out_dtype, axis_size=T)
 
         stacks = shard_map(
             body, mesh=mesh,

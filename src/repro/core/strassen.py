@@ -12,12 +12,18 @@ zero-padding to even (equivalent to the paper's peeling, but keeps every
 quadrant MXU-shaped), and the padding is sliced away on the way out.
 
 Accumulation dtype is fp32 even for bf16 inputs — Strassen's recombination
-loses ~1 bit/level, so we never accumulate in bf16.
+loses ~1 bit/level, so we never accumulate in bf16.  For the same reason
+results default to the promoted accumulation dtype (``out_dtype=``
+downcasts explicitly when the caller wants the input dtype back).
+
+``mode="fused"`` executes through the flattened leaf-task schedule
+(``core/schedule.py`` + ``kernels/strassen_fused.py``) instead of this
+recursion — see DESIGN.md §4 and the docstring in ``ata.py``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +33,39 @@ import jax.numpy as jnp
 # a 128x128 systolic array, so sub-128 tiles waste the unit: we stop at 256.
 DEFAULT_LEAF = 256
 DEFAULT_LEVELS = 2
+
+# Cap for levels="auto".  Each Strassen level saves 12.5% multiplications
+# but costs one more bit of accumulated error, larger operand-sum fan-in
+# (2^levels gathered tiles per operand in the fused kernel) and
+# exponentially larger schedules/jaxprs; past ~3 levels the recombination
+# overhead dominates on MXU-class hardware (paper §6 uses 1-2 parallel
+# levels for the same reason).
+AUTO_MAX_LEVELS = 3
+
+
+def resolve_mode(mode: str, *leaf_hooks) -> str:
+    """Resolve mode="auto" -> "fused" | "reference".
+
+    Fused is the default on TPU; custom leaf hooks (base_syrk/base_matmul)
+    force the reference recursion because the flattened schedule has no
+    per-leaf call-out.  Off-TPU the reference recursion is both faster
+    (XLA-compiled vs interpreted Pallas) and differentiable, so it stays
+    the default there; tests exercise the fused path with interpret=True
+    explicitly.
+    """
+    if mode == "auto":
+        if any(h is not None for h in leaf_hooks):
+            return "reference"
+        return "fused" if jax.default_backend() == "tpu" else "reference"
+    if mode not in ("fused", "reference"):
+        raise ValueError(f"unknown mode {mode!r} "
+                         "(want 'auto' | 'fused' | 'reference')")
+    if mode == "fused" and any(h is not None for h in leaf_hooks):
+        raise ValueError(
+            "mode='fused' cannot honor base_syrk/base_matmul leaf hooks "
+            "(the flattened schedule has no per-leaf call-out) — use "
+            "mode='reference' or drop the hooks")
+    return mode
 
 
 def _default_base_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -53,28 +92,53 @@ def strassen_matmul(
     a: jax.Array,
     b: jax.Array,
     *,
-    levels: int = DEFAULT_LEVELS,
+    levels: Union[int, str] = DEFAULT_LEVELS,
     leaf: int = DEFAULT_LEAF,
     variant: str = "strassen",
     base_matmul: Optional[Callable] = None,
+    mode: str = "auto",
+    out_dtype=None,
+    block: int = 256,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Compute ``a @ b`` via (level-capped) Strassen recursion.
 
     Args:
       a: (m, k) array.  b: (k, n) array.
-      levels: max recursion depth (0 => classical).
-      leaf: stop recursing when min(m, k, n) <= leaf.
+      levels: max recursion depth (0 => classical), or ``"auto"`` to
+        recurse until a dim hits ``leaf`` (capped at AUTO_MAX_LEVELS).
+      leaf: stop recursing when min(m, k, n) <= leaf (reference mode; also
+        sets the "auto" depth).
       variant: "strassen" (7 mults / 18 adds, as in the paper),
                "winograd" (7 mults / 15 adds, beyond-paper option) or
                "classical".
       base_matmul: leaf matmul; defaults to jnp.dot w/ fp32 accumulation.
+        Forces reference mode under ``mode="auto"``.
+      mode: "auto" | "fused" | "reference" — fused executes the flattened
+        schedule in one Pallas kernel (no per-level HBM temporaries).
+      out_dtype: result dtype; defaults to the promoted *accumulation*
+        dtype (fp32 for bf16/fp32 inputs) rather than downcasting.
+      block: Pallas tile edge for the fused path (bm = bk = bn = block).
+      interpret: Pallas interpret override for the fused path.
 
-    Returns (m, n) array in the promoted input dtype (accumulated fp32).
+    Returns (m, n) array in ``out_dtype``.
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes for matmul: {a.shape} x {b.shape}")
+    if levels == "auto":
+        levels = min(
+            strassen_levels_for(a.shape[0], a.shape[1], b.shape[1], leaf),
+            AUTO_MAX_LEVELS)
+    out_dtype = (jnp.promote_types(jnp.promote_types(a.dtype, b.dtype),
+                                   jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+    mode = resolve_mode(mode, base_matmul)
+    if mode == "fused":
+        from ..kernels.strassen_fused import fused_matmul
+        return fused_matmul(a, b, levels=levels, variant=variant, bm=block,
+                            bk=block, bn=block, out_dtype=out_dtype,
+                            interpret=interpret)
     base = base_matmul or _default_base_matmul
-    out_dtype = jnp.promote_types(a.dtype, b.dtype)
     res = _strassen_rec(a, b, levels, leaf, variant, base)
     return res.astype(out_dtype)
 
@@ -153,6 +217,7 @@ def _strassen_rec(a, b, levels, leaf, variant, base):
 def strassen_levels_for(m: int, k: int, n: int, leaf: int = DEFAULT_LEAF) -> int:
     """Natural number of Strassen levels for a problem (cache-oblivious
     analogue: recurse until the leaf threshold)."""
+    leaf = max(leaf, 1)        # (1+1)//2 == 1: leaf=0 would never terminate
     lv = 0
     while min(m, k, n) > leaf:
         m, k, n = (m + 1) // 2, (k + 1) // 2, (n + 1) // 2

@@ -1,5 +1,7 @@
 """Pallas TPU kernels for the ATA hot spots (validated in interpret mode).
 
+- strassen_fused: the whole flattened ATA/Strassen schedule in one kernel
+                  (leaf tasks x K blocks; no per-level HBM round-trips)
 - matmul:    tiled MXU matmul (ATA/HASA base case)
 - syrk:      lower-triangular-blocks-only gram (the paper's n(n+1)/2 saving)
 - combine:   fused Strassen recombination (HBM-traffic reduction)
@@ -9,7 +11,9 @@ from . import ops, ref
 from .ops import (
     matmul, syrk, syrk_packed, strassen_combine, transpose,
     pallas_base_matmul, pallas_base_syrk,
+    ata_fused, ata_fused_packed, matmul_fused,
 )
 
 __all__ = ["ops", "ref", "matmul", "syrk", "syrk_packed", "strassen_combine",
-           "transpose", "pallas_base_matmul", "pallas_base_syrk"]
+           "transpose", "pallas_base_matmul", "pallas_base_syrk",
+           "ata_fused", "ata_fused_packed", "matmul_fused"]

@@ -105,6 +105,48 @@ def pallas_base_syrk(bk=256, bn=256, interpret=None):
     return base
 
 
+# ---------------------------------------------------------------------------
+# Fused schedule pipeline (core/schedule.py -> kernels/strassen_fused.py):
+# the whole level-capped ATA / Strassen recursion in ONE pallas_call, no
+# per-level HBM temporaries.  These are the jit'd public entry points; the
+# core recursion routes here via ata(..., mode="fused").
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "variant", "bk", "bn", "out_dtype", "interpret"))
+def ata_fused(a, *, levels=2, variant="strassen", bk=256, bn=256,
+              out_dtype=None, interpret=None):
+    """Dense ``tril(a.T @ a)`` via the fused leaf-task schedule."""
+    from . import strassen_fused as _sf
+    return _sf.fused_ata(a, levels=levels, variant=variant, bk=bk, bn=bn,
+                         out_dtype=out_dtype,
+                         interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "variant", "bk", "bn", "out_dtype", "interpret"))
+def ata_fused_packed(a, *, levels=2, variant="strassen", bk=256, bn=256,
+                     out_dtype=None, interpret=None):
+    """Packed lower-tri block stack of ``a.T @ a`` via the fused schedule
+    (upper-triangular blocks are never computed or written)."""
+    from . import strassen_fused as _sf
+    packed, _ = _sf.fused_ata_packed(
+        a, levels=levels, variant=variant, bk=bk, bn=bn,
+        out_dtype=out_dtype, interpret=_auto_interpret(interpret))
+    return packed
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "variant", "bm", "bk", "bn", "out_dtype", "interpret"))
+def matmul_fused(a, b, *, levels=2, variant="strassen", bm=256, bk=256,
+                 bn=256, out_dtype=None, interpret=None):
+    """``a @ b`` via the fused Strassen schedule kernel."""
+    from . import strassen_fused as _sf
+    return _sf.fused_matmul(a, b, levels=levels, variant=variant, bm=bm,
+                            bk=bk, bn=bn, out_dtype=out_dtype,
+                            interpret=_auto_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "block_q", "block_kv", "interpret"))
 def flash_mha(q, k, v, *, causal=True, window=0, softcap=0.0,

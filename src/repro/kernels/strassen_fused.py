@@ -1,0 +1,473 @@
+"""Fused Pallas executor for flattened ATA / Strassen schedules.
+
+This is the single-kernel replacement for the materialize-everything
+recursion (DESIGN.md §4): a ``pallas_call`` whose grid enumerates
+``(output tile, contribution slot, K block)`` over the leaf-task plans from
+``repro.core.schedule``.  Per grid step the kernel
+
+  1. gathers up to ``max_terms`` (bk, bn) tiles of the *original* padded A
+     straight from HBM (scalar-prefetched index tables drive the BlockSpec
+     index maps — the per-level ``pad``/``concatenate`` copies of the
+     reference recursion become index arithmetic),
+  2. forms the +-1-signed Strassen operand sums tile-wise in VMEM (the
+     ``S``/``T`` operand temporaries never exist in HBM),
+  3. runs the leaf product on the MXU into an fp32 VMEM accumulator that
+     lives across the whole (contribution, K) sweep of one output tile,
+  4. writes each output tile to HBM exactly once, directly into the packed
+     lower-triangular block stack of ``kernels/syrk.py`` — no ``M_i``
+     product, no operand sum and no upper-triangular block ever touches
+     HBM.
+
+Contributions are sorted by destination (``schedule.Plan.contributions``),
+so the accumulator hand-off needs no HBM read-modify-write and the TPU
+grid's sequential execution guarantees a single store per tile.
+
+Everything here is forward-only (no custom VJP yet); ``repro.core.ata``
+keeps the reference recursion for autodiff and as a numerical oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.ata import ata_levels_for
+from ..core.schedule import plan_ata, plan_matmul
+from ..core.strassen import strassen_levels_for
+from ..core.symmetry import unpack_tril_blocks
+from .ops import _auto_interpret
+from .syrk import _tri_decode
+
+__all__ = ["fused_ata", "fused_ata_packed", "fused_matmul",
+           "ata_traffic_model"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# VMEM guard: the kernel gathers 2 * max_terms input tiles per grid step
+# (double-buffered by the pipeline).  Each Strassen level doubles the
+# operand fan-in (Winograd can quadruple it), so deep plans are clamped to
+# keep the working set well under per-core VMEM: 2*8 tiles of 256x256 fp32
+# = 4 MB single-buffered.
+MAX_OPERAND_TERMS = 8
+
+
+def _ata_geometry(m: int, n: int, levels: int, variant: str,
+                  bk: int, bn: int):
+    """Shared executor/traffic-model geometry (single source of truth).
+
+    Clamps ``levels`` so (a) every leaf block holds at least one (bk, bn)
+    tile of real data and (b) the operand fan-in fits VMEM, then derives
+    leaf/padded shapes and grid extents.
+    """
+    levels = min(levels, ata_levels_for(m, n, max(bk, bn)))
+    while levels > 0 and plan_ata(levels, variant).max_terms > \
+            MAX_OPERAND_TERMS:
+        levels -= 1
+    plan = plan_ata(levels, variant)
+    B = plan.blocks
+    mb = _round_up(max(m, 1), B * bk) // B     # leaf rows (bk multiple)
+    nb = _round_up(max(n, 1), B * bn) // B     # leaf cols (bn multiple)
+    M, N = B * mb, B * nb
+    t_blocks = N // bn
+    return {
+        "plan": plan, "levels": levels, "mb": mb, "nb": nb, "M": M, "N": N,
+        "n_k": mb // bk, "nbt": nb // bn,
+        "n_tri": t_blocks * (t_blocks + 1) // 2,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Scalar-prefetch tables: the plan lowered to int32 arrays indexed by
+# (leaf destination, contribution slot[, term slot]).  Empty slots carry
+# sign 0 (the kernel skips them) and index block (0, 0) (a harmless fetch).
+# ---------------------------------------------------------------------------
+
+def _lower_tables(plan, n_dest: int, dest_index):
+    n_c, tmax = plan.max_contributions, plan.max_terms
+    sign = np.zeros((n_dest, n_c), np.int32)
+    lrow = np.zeros((n_dest, n_c, tmax), np.int32)
+    lcol = np.zeros_like(lrow)
+    lsgn = np.zeros_like(lrow)
+    rrow = np.zeros_like(lrow)
+    rcol = np.zeros_like(lrow)
+    rsgn = np.zeros_like(lrow)
+    for (di, dj), contribs in plan.by_dest().items():
+        ld = dest_index(di, dj)
+        for s, contrib in enumerate(contribs):
+            sign[ld, s] = contrib.sign
+            for p, (r, c, sg) in enumerate(contrib.left):
+                lrow[ld, s, p], lcol[ld, s, p], lsgn[ld, s, p] = r, c, sg
+            for q, (r, c, sg) in enumerate(contrib.right):
+                rrow[ld, s, q], rcol[ld, s, q], rsgn[ld, s, q] = r, c, sg
+    return sign, lrow, lcol, lsgn, rrow, rcol, rsgn
+
+
+@functools.lru_cache(maxsize=None)
+def _ata_tables(levels: int, variant: str):
+    plan = plan_ata(levels, variant)
+    n_dest = plan.blocks * (plan.blocks + 1) // 2
+    return _lower_tables(plan, n_dest, lambda di, dj: di * (di + 1) // 2 + dj)
+
+
+@functools.lru_cache(maxsize=None)
+def _matmul_tables(levels: int, variant: str):
+    plan = plan_matmul(levels, variant)
+    b = plan.blocks
+    return _lower_tables(plan, b * b, lambda di, dj: di * b + dj)
+
+
+def _signed_sum(refs, sgn_ref, ld, c):
+    """Sum[p] sgn[p] * refs[p], formed in fp32 in VMEM (never in HBM)."""
+    acc = None
+    for p, ref in enumerate(refs):
+        term = ref[...].astype(jnp.float32) * sgn_ref[ld, c, p].astype(
+            jnp.float32)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Fused ATA: C = tril(A^t A) into the packed triangular block stack.
+# ---------------------------------------------------------------------------
+
+def _fused_ata_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
+                      rrow_ref, rcol_ref, rsgn_ref, *refs,
+                      tmax: int, nbt: int, n_c: int, n_k: int):
+    a_refs = refs[:2 * tmax]
+    o_ref, acc_ref = refs[2 * tmax], refs[2 * tmax + 1]
+    t, c, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    gi, gj = _tri_decode(t)
+    di = gi // nbt
+    ld = di * (di + 1) // 2 + gj // nbt
+    sgn = sign_ref[ld, c]
+
+    @pl.when((c == 0) & (k == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(sgn != 0)
+    def _accumulate():
+        left = _signed_sum(a_refs[:tmax], lsgn_ref, ld, c)
+        right = _signed_sum(a_refs[tmax:], rsgn_ref, ld, c)
+        acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
+            left.T, right, preferred_element_type=jnp.float32)
+
+    @pl.when((c == n_c - 1) & (k == n_k - 1))
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_ata_packed(
+    a: jax.Array,
+    *,
+    levels: int = 2,
+    variant: str = "strassen",
+    bk: int = 256,
+    bn: int = 256,
+    out_dtype=None,
+    interpret=None,
+):
+    """Packed lower-triangular block stack of ``tril(a.T @ a)`` via the
+    fused schedule executor.
+
+    ``a`` is zero-padded so each of the ``2^levels`` leaf blocks is a
+    (bk, bn)-tile multiple (exact: zero rows add nothing to A^tA, zero
+    columns are sliced away by the dense wrapper).
+
+    Returns ``(packed, n_padded)`` with packed of shape
+    ``(T(T+1)/2 * bn, bn)``, ``T = n_padded // bn``, in the ordering of
+    ``symmetry.pack_tril_blocks`` / ``kernels.syrk``.
+
+    ``levels`` is a cap: the unroll depth is clamped (``_ata_geometry``)
+    so every leaf block holds at least one (bk, bn) tile of real data —
+    a (128, 128) input with 256-tiles runs as a single SYRK leaf rather
+    than padding each empty leaf level 2x per dimension — and so the
+    operand fan-in fits VMEM (``MAX_OPERAND_TERMS``).
+    """
+    interpret = _auto_interpret(interpret)
+    m, n = a.shape
+    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    plan, levels = geo["plan"], geo["levels"]
+    M, N = geo["M"], geo["N"]
+    if (M, N) != (m, n):
+        a = jnp.pad(a, ((0, M - m), (0, N - n)))
+    out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+
+    n_k, nbt, n_tri = geo["n_k"], geo["nbt"], geo["n_tri"]
+    tmax, n_c = plan.max_terms, plan.max_contributions
+    tables = _ata_tables(levels, variant)
+
+    def _dest(t):
+        gi, gj = _tri_decode(t)
+        di = gi // nbt
+        return gi, gj, di * (di + 1) // 2 + gj // nbt
+
+    def left_map(p):
+        def index_map(t, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
+            gi, _, ld = _dest(t)
+            return (lrow[ld, c, p] * n_k + k, lcol[ld, c, p] * nbt + gi % nbt)
+        return index_map
+
+    def right_map(q):
+        def index_map(t, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
+            _, gj, ld = _dest(t)
+            return (rrow[ld, c, q] * n_k + k, rcol[ld, c, q] * nbt + gj % nbt)
+        return index_map
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(n_tri, n_c, n_k),
+        in_specs=[pl.BlockSpec((bk, bn), left_map(p)) for p in range(tmax)]
+        + [pl.BlockSpec((bk, bn), right_map(q)) for q in range(tmax)],
+        out_specs=pl.BlockSpec((bn, bn), lambda t, c, k, *_: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
+    )
+    kernel = functools.partial(_fused_ata_kernel, tmax=tmax, nbt=nbt,
+                               n_c=n_c, n_k=n_k)
+    packed = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tri * bn, bn), out_dtype),
+        interpret=interpret,
+    )(*tables, *([a] * (2 * tmax)))
+    return packed, N
+
+
+def fused_ata(
+    a: jax.Array,
+    *,
+    levels: int = 2,
+    variant: str = "strassen",
+    bk: int = 256,
+    bn: int = 256,
+    out_dtype=None,
+    interpret=None,
+) -> jax.Array:
+    """Dense ``tril(a.T @ a)`` at the original size via the fused pipeline.
+
+    Differentiable: carries a custom VJP (``dA = A (S + S^t)`` with
+    ``S = tril(cotangent)``), so ``mode="auto"`` -> fused on TPU keeps
+    ``jax.grad`` working.  The packed entry point stays forward-only.
+    """
+    interpret = _auto_interpret(interpret)
+    out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+    return _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret):
+    n = a.shape[1]
+    packed, n_pad = fused_ata_packed(
+        a, levels=levels, variant=variant, bk=bk, bn=bn,
+        out_dtype=out_dtype, interpret=interpret)
+    dense = unpack_tril_blocks(packed, n_pad, bn, symmetrize=False)
+    # diagonal blocks are computed full — drop their upper halves
+    return jnp.tril(dense)[:n, :n]
+
+
+def _fused_ata_dense_fwd(a, levels, variant, bk, bn, out_dtype, interpret):
+    return (_fused_ata_dense(a, levels, variant, bk, bn, out_dtype,
+                             interpret), a)
+
+
+def _fused_ata_dense_bwd(levels, variant, bk, bn, out_dtype, interpret,
+                         a, g):
+    # C = tril(A^t A) => dL/dA = A (S + S^t), S = tril(dL/dC); the factor
+    # 2 on the diagonal of S + S^t is exactly the quadratic term's.
+    acc = jnp.promote_types(a.dtype, jnp.float32)
+    s = jnp.tril(g).astype(acc)
+    da = jnp.dot(a.astype(acc), s + s.T, preferred_element_type=acc)
+    return (da.astype(a.dtype),)
+
+
+_fused_ata_dense.defvjp(_fused_ata_dense_fwd, _fused_ata_dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM traffic model for the fused ATA kernel.
+#
+# In interpret mode (CPU) the Pallas pipeline is *emulated* with XLA loops
+# whose HLO carries full-array state buffers, so an HLO census of the
+# interpret lowering measures the emulation, not the kernel.  On hardware
+# the kernel's HBM behaviour is exact and simple by construction — grid
+# DMA reads of A tiles, one write per packed output tile, and NO other
+# HBM buffer (operand sums, M_i products and recombination temporaries
+# live only in VMEM) — so we model it in closed form, the same way
+# bench_roofline treats Pallas flash-attention FLOPs analytically.
+# ---------------------------------------------------------------------------
+
+def ata_traffic_model(
+    m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    bk: int = 256, bn: int = 256, in_bytes: int = 4, out_bytes: int = 4,
+) -> dict:
+    """HBM bytes of ``fused_ata_packed`` on an (m, n) input.
+
+    Returns reads (streamed A-tile fetches, incl. padded null slots —
+    the contribution axis is padded to ``max_contributions``, so the
+    read term honestly reflects that amplification), writes (each packed
+    output tile exactly once) and ``intermediate_bytes`` —
+    HBM-materialized temporaries, which is just the zero-pad copy of A
+    when the shape is not tile-aligned, and 0 otherwise.  Uses the same
+    ``_ata_geometry`` as the executor, so the model cannot drift from
+    the kernel's clamping/padding.
+    """
+    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    plan, n_tri, n_k = geo["plan"], geo["n_tri"], geo["n_k"]
+    M, N = geo["M"], geo["N"]
+    grid = n_tri * plan.max_contributions * n_k
+    reads = grid * 2 * plan.max_terms * bk * bn * in_bytes
+    writes = n_tri * bn * bn * out_bytes
+    pad_copy = M * N * in_bytes if (M, N) != (m, n) else 0
+    return {
+        "grid_steps": grid,
+        "read_bytes": reads,
+        "write_bytes": writes,
+        "intermediate_bytes": pad_copy,
+        "padded_shape": (M, N),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fused Strassen matmul: C = A @ B, dense output.
+# ---------------------------------------------------------------------------
+
+def _fused_matmul_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
+                         rrow_ref, rcol_ref, rsgn_ref, *refs,
+                         tmax: int, nbm: int, nbn: int, n_c: int, n_k: int,
+                         blocks: int):
+    a_refs = refs[:tmax]
+    b_refs = refs[tmax:2 * tmax]
+    o_ref, acc_ref = refs[2 * tmax], refs[2 * tmax + 1]
+    i, j = pl.program_id(0), pl.program_id(1)
+    c, k = pl.program_id(2), pl.program_id(3)
+    ld = (i // nbm) * blocks + (j // nbn)
+    sgn = sign_ref[ld, c]
+
+    @pl.when((c == 0) & (k == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(sgn != 0)
+    def _accumulate():
+        left = _signed_sum(a_refs, lsgn_ref, ld, c)
+        right = _signed_sum(b_refs, rsgn_ref, ld, c)
+        acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
+            left, right, preferred_element_type=jnp.float32)
+
+    @pl.when((c == n_c - 1) & (k == n_k - 1))
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    levels: int = 2,
+    variant: str = "strassen",
+    bm: int = 256,
+    bk: int = 256,
+    bn: int = 256,
+    out_dtype=None,
+    interpret=None,
+) -> jax.Array:
+    """``a @ b`` via the flattened Strassen schedule, one fused kernel.
+
+    Same fusion contract as :func:`fused_ata_packed`: operand sums live in
+    VMEM only, every output tile is written once, no ``M_i`` in HBM; the
+    same level/fan-in clamps keep leaves at tile granularity and the
+    operand gather inside VMEM.  Differentiable via the standard matmul
+    VJP.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad shapes for matmul: {a.shape} x {b.shape}")
+    interpret = _auto_interpret(interpret)
+    out_dtype = (jnp.promote_types(jnp.promote_types(a.dtype, b.dtype),
+                                   jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+    return _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
+                              interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
+                       interpret):
+    m, k_dim = a.shape
+    _, n = b.shape
+    levels = min(levels, strassen_levels_for(m, k_dim, n, max(bm, bk, bn)))
+    while levels > 0 and plan_matmul(levels, variant).max_terms > \
+            MAX_OPERAND_TERMS:
+        levels -= 1
+    plan = plan_matmul(levels, variant)
+    B = plan.blocks
+    mb = _round_up(max(m, 1), B * bm) // B
+    kb = _round_up(max(k_dim, 1), B * bk) // B
+    nb = _round_up(max(n, 1), B * bn) // B
+    M, K, N = B * mb, B * kb, B * nb
+    if (M, K) != (m, k_dim):
+        a = jnp.pad(a, ((0, M - m), (0, K - k_dim)))
+    if (K, N) != (k_dim, n):
+        b = jnp.pad(b, ((0, K - k_dim), (0, N - n)))
+
+    n_k = kb // bk
+    nbm, nbn = mb // bm, nb // bn
+    tmax, n_c = plan.max_terms, plan.max_contributions
+    tables = _matmul_tables(levels, variant)
+
+    def left_map(p):
+        def index_map(i, j, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
+            ld = (i // nbm) * B + j // nbn
+            return (lrow[ld, c, p] * nbm + i % nbm, lcol[ld, c, p] * n_k + k)
+        return index_map
+
+    def right_map(q):
+        def index_map(i, j, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
+            ld = (i // nbm) * B + j // nbn
+            return (rrow[ld, c, q] * n_k + k, rcol[ld, c, q] * nbn + j % nbn)
+        return index_map
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(M // bm, N // bn, n_c, n_k),
+        in_specs=[pl.BlockSpec((bm, bk), left_map(p)) for p in range(tmax)]
+        + [pl.BlockSpec((bk, bn), right_map(q)) for q in range(tmax)],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, c, k, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(_fused_matmul_kernel, tmax=tmax, nbm=nbm,
+                               nbn=nbn, n_c=n_c, n_k=n_k, blocks=B)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+    )(*tables, *([a] * tmax), *([b] * tmax))
+    return out[:m, :n]
+
+
+def _fused_matmul_fwd(a, b, levels, variant, bm, bk, bn, out_dtype,
+                      interpret):
+    return (_fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
+                               interpret), (a, b))
+
+
+def _fused_matmul_bwd(levels, variant, bm, bk, bn, out_dtype, interpret,
+                      res, g):
+    a, b = res
+    acc = jnp.promote_types(jnp.promote_types(a.dtype, b.dtype), jnp.float32)
+    gf = g.astype(acc)
+    da = jnp.dot(gf, b.T.astype(acc), preferred_element_type=acc)
+    db = jnp.dot(a.T.astype(acc), gf, preferred_element_type=acc)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_fused_matmul_core.defvjp(_fused_matmul_fwd, _fused_matmul_bwd)

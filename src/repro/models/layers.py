@@ -552,7 +552,8 @@ def apply_moe(p, x, cfg: ModelConfig):
             {k_: v for k_, v in p.items() if k_ != "shared"},
             x.reshape(b * s, d), cfg)
     else:
-        from jax import shard_map
+        from ..core.distributed import shard_map_compat
+        shard_map, unchecked = shard_map_compat()
         mesh = pol.mesh
         dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         tp_size = mesh.shape[tp]
@@ -603,7 +604,7 @@ def apply_moe(p, x, cfg: ModelConfig):
             body, mesh=mesh,
             in_specs=(x_spec, pspecs),
             out_specs=(x_spec, P()),
-            check_vma=False,
+            **unchecked,
         )(x, pl)
         out = out.reshape(b * s, d)
         aux = aux.reshape(())

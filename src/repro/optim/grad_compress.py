@@ -49,7 +49,9 @@ def compressed_psum(grads, axis: str, ef: ErrorFeedback):
     would be wrong). Must run inside shard_map with ``axis`` in scope.
     Returns (mean-reduced fp32 grads, new ErrorFeedback).
     """
-    n = jax.lax.axis_size(axis)
+    # axis length; jax.lax.axis_size is missing on older jax and n is only
+    # a divisor here, so the traced psum(1) form is version-portable
+    n = getattr(jax.lax, "axis_size", lambda a: jax.lax.psum(1, a))(axis)
 
     def leaf(g, r):
         gf = g.astype(jnp.float32) + r

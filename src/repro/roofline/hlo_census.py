@@ -130,6 +130,82 @@ def collective_census(hlo_text: str) -> List[CollectiveOp]:
     return ops
 
 
+# ---------------------------------------------------------------------------
+# HBM-materialized intermediate census (DESIGN.md §4).
+#
+# Model: every non-trivial HLO instruction output is a buffer the backend
+# may materialize; summing their sizes over the compiled module (loop
+# bodies counted once) gives a backend-agnostic upper bound on intermediate
+# HBM traffic.  Parameters, constants and pure aliasing ops are excluded.
+# This is the metric BENCH_ata.json tracks for fused-vs-reference: the
+# reference ATA recursion materializes every operand sum, every Strassen
+# M_i and the per-level pad/concatenate copies, all of which simply do not
+# exist in the fused schedule's HLO.
+# ---------------------------------------------------------------------------
+
+_ALIAS_OPS = frozenset({
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "copy-start", "copy-done", "after-all", "iota",
+})
+
+_RHS_INSTR = re.compile(
+    r"=\s*\(?\s*((?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?\s*,?\s*)+)\)?\s*"
+    r"([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# Computation headers: `%name (params...) -> type {` / `ENTRY %name (...)`.
+# Param lists contain nested parens for tuple-typed args (while/cond region
+# bodies), so the header is recognized structurally — name followed by "("
+# on a line that declares a return type and opens a body — rather than by
+# matching the param list itself.
+_COMP_HEADER = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def hbm_intermediate_census(hlo_text: str) -> Dict:
+    """Sum HBM-materialized intermediate bytes over compiled HLO text.
+
+    Instructions inside fusion computations are skipped — only the fusion's
+    own output buffer materializes, and it is counted at the call site.
+    The ENTRY computation's ROOT is the program's *result*, not an
+    intermediate, and is excluded (a bare ``jit(dot)`` censuses as 0).
+
+    Returns ``{"total_bytes", "count", "by_opcode": {op: bytes}}``.
+    """
+    by_opcode: Dict[str, int] = {}
+    count = 0
+    total = 0
+    in_fusion = False
+    in_entry = False
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HEADER.match(line)
+        if hdr and "->" in line and line.rstrip().endswith("{"):
+            in_fusion = "fused" in hdr.group(1)
+            in_entry = line.lstrip().startswith("ENTRY")
+            continue
+        if in_fusion:
+            continue
+        if in_entry and line.lstrip().startswith("ROOT"):
+            continue
+        m = _RHS_INSTR.search(line)
+        if not m:
+            continue
+        shapes, opcode = m.group(1), m.group(2)
+        if opcode in _ALIAS_OPS:
+            continue
+        nbytes = 0
+        for dtype, dims in _SHAPE.findall(shapes):
+            if dtype not in DTYPE_BYTES:
+                continue
+            nbytes += _shape_elems(dims) * DTYPE_BYTES[dtype]
+        if nbytes == 0:
+            continue
+        total += nbytes
+        count += 1
+        by_opcode[opcode] = by_opcode.get(opcode, 0) + nbytes
+    return {"total_bytes": total, "count": count,
+            "by_opcode": dict(sorted(by_opcode.items(),
+                                     key=lambda kv: -kv[1]))}
+
+
 def summarize(ops: List[CollectiveOp]) -> Dict:
     by_kind: Dict[str, Dict] = {}
     for op in ops:

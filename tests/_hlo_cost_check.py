@@ -22,8 +22,8 @@ def main():
         c, _ = jax.lax.scan(body, xs, None, length=L)
         return jnp.sum(c)
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
     sh = NamedSharding(mesh, P("data", None))
     c = jax.jit(f, in_shardings=(sh, None),
                 out_shardings=NamedSharding(mesh, P())).lower(
@@ -34,7 +34,10 @@ def main():
     dot_flops = L * 2 * (B // 8) * D * D           # per-device
     assert 0.95 * dot_flops < r["flops"] < 1.3 * dot_flops, (
         r["flops"], dot_flops)
-    xla_flops = c.cost_analysis()["flops"]
+    xla_cost = c.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):   # jax 0.4.x returns [dict]
+        xla_cost = xla_cost[0]
+    xla_flops = xla_cost["flops"]
     assert xla_flops < dot_flops / 10, "xla undercounts (expected)"
     # bytes: per iteration ~ w (D*D*4) + 3x carry; x L
     per_iter = D * D * 4 + 3 * (B // 8) * D * 4

@@ -52,10 +52,42 @@ def test_ata_full_symmetric_psd():
 
 def test_ata_bf16_accumulates_fp32():
     a = _rand((256, 128), dtype=jnp.bfloat16, seed=5)
+    # Default out_dtype is the promoted ACCUMULATION dtype (fp32 for bf16
+    # inputs) — no silent downcast of fp32-accumulated results.
     got = ata(a, levels=2, leaf=16)
     want = jnp.tril(a.astype(jnp.float32).T @ a.astype(jnp.float32))
-    assert got.dtype == jnp.bfloat16
+    assert got.dtype == jnp.float32
     np.testing.assert_allclose(np.asarray(got, np.float32), want, rtol=5e-2, atol=5e-1)
+    # explicit opt-in gets the input dtype back
+    got_bf16 = ata(a, levels=2, leaf=16, out_dtype=jnp.bfloat16)
+    assert got_bf16.dtype == jnp.bfloat16
+
+
+def test_out_dtype_knob_matches_across_apis():
+    a = _rand((64, 32), dtype=jnp.bfloat16, seed=11)
+    assert ata(a, levels=1, leaf=8).dtype == jnp.float32
+    assert ata_full(a, levels=1, leaf=8, out_dtype=jnp.bfloat16).dtype == jnp.bfloat16
+    b = _rand((32, 24), dtype=jnp.bfloat16, seed=12)
+    assert strassen_matmul(a, b, levels=1, leaf=8).dtype == jnp.float32
+    assert strassen_matmul(a, b, levels=1, leaf=8,
+                           out_dtype=jnp.bfloat16).dtype == jnp.bfloat16
+
+
+def test_levels_auto():
+    a = _rand((96, 80), seed=13)
+    got = ata(a, levels="auto", leaf=16)
+    np.testing.assert_allclose(got, jnp.tril(a.T @ a), rtol=3e-4, atol=3e-4)
+    b = _rand((80, 64), seed=14)
+    got = strassen_matmul(a, b, levels="auto", leaf=16)
+    np.testing.assert_allclose(got, a @ b, rtol=3e-4, atol=3e-4)
+
+
+def test_levels_for_terminates_at_leaf_zero():
+    from repro.core.ata import ata_levels_for
+    from repro.core.strassen import strassen_levels_for
+    # (1+1)//2 == 1: leaf=0 (the cost_model convention) must not hang
+    assert ata_levels_for(8, 8, 0) == 3
+    assert strassen_levels_for(8, 8, 8, 0) == 3
 
 
 def test_strassen_classical_variant():
