@@ -1,0 +1,178 @@
+"""Gram service trajectory: batched bucket dispatch vs sequential calls.
+
+Drives the same mixed-size request trace through ``gram.GramEngine``
+(continuous batching: bucketed shapes, one vmapped executable per bucket)
+and two sequential baselines, and emits ``BENCH_gram_service.json``:
+
+* **cold / status quo** — per-request jit dispatch at each request's own
+  exact shape, compiles included on both sides: what serving the trace
+  with plain library calls costs.  The service's bucketing bounds its
+  compiles by the bucket count while the status quo compiles per distinct
+  shape — this is the ">= 2x sequential per-request dispatch" comparison.
+* **warm / bucketed** — the hard-mode baseline: sequential dispatch at
+  bucket shapes with a pre-warmed jit cache, vs the pre-warmed engine.
+  Isolates the pure batching effect; on CPU (no batch parallelism, XLA
+  reference recursion for both) slot padding makes this < 1x, on batch-
+  parallel hardware it is where the 2x is expected.
+
+The acceptance bound enforced in CI is the recompile count
+(<= number of buckets); throughputs are recorded for the trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.ata import ata
+from repro.gram import GramEngine, bucket_shape
+from repro.launch.gram_serve import make_trace
+from .common import write_json
+
+LEVELS = 1
+MIN_BUCKET = 32
+
+
+def _ata_fn(x):
+    return ata(x, levels=LEVELS, mode="auto", out_dtype=jnp.float32)
+
+
+def _sequential_warm(shapes, arrays):
+    """Hard-mode baseline: per-request dispatch at bucket shapes, jit
+    cache pre-warmed (steady state, compiles excluded)."""
+    compiled = {}
+    for m, n in shapes:
+        key = bucket_shape(m, n, min_side=MIN_BUCKET)
+        if key not in compiled:
+            spec = jax.ShapeDtypeStruct(key, jnp.float32)
+            compiled[key] = jax.jit(_ata_fn).lower(spec).compile()
+    lat = []
+    t0 = time.perf_counter()
+    for (m, n), a in zip(shapes, arrays):
+        M, N = bucket_shape(m, n, min_side=MIN_BUCKET)
+        pad = np.zeros((M, N), np.float32)
+        pad[:m, :n] = a
+        t_req = time.perf_counter()
+        jax.block_until_ready(compiled[(M, N)](jnp.asarray(pad)))
+        lat.append(time.perf_counter() - t_req)
+    wall = time.perf_counter() - t0
+    return wall, len(compiled), lat
+
+
+def _sequential_cold(shapes, arrays):
+    """Status-quo baseline: plain per-request library calls, each request
+    jit'd at its own exact shape, compiles included in the wall clock."""
+    fn = jax.jit(_ata_fn)
+    lat, distinct = [], set()
+    t0 = time.perf_counter()
+    for shape, a in zip(shapes, arrays):
+        distinct.add(shape)
+        t_req = time.perf_counter()
+        jax.block_until_ready(fn(jnp.asarray(a)))
+        lat.append(time.perf_counter() - t_req)
+    wall = time.perf_counter() - t0
+    return wall, len(distinct), lat
+
+
+def _pct(lats, p):
+    s = sorted(lats)
+    return s[min(int(p * len(s)), len(s) - 1)] if s else None
+
+
+def run(quick: bool = False):
+    requests = 16 if quick else 64
+    slots = 4
+    rng = np.random.default_rng(0)
+    shapes = make_trace(rng, requests, 16, 128 if quick else 256)
+    arrays = [rng.standard_normal(s).astype(np.float32) for s in shapes]
+    buckets = sorted({bucket_shape(m, n, min_side=MIN_BUCKET)
+                      for m, n in shapes})
+
+    # -- batched service, cold (the trace pays the bucket compiles) ---------
+    eng = GramEngine(slots=slots, levels=LEVELS, min_bucket=MIN_BUCKET)
+    for a in arrays:
+        eng.submit(a, full=False)
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    wall_cold = time.perf_counter() - t0
+    stats = eng.stats()
+
+    # -- batched service, warm (steady state) -------------------------------
+    eng2 = GramEngine(slots=slots, levels=LEVELS, min_bucket=MIN_BUCKET)
+    eng2.prewarm(shapes)
+    for a in arrays:
+        eng2.submit(a, full=False)
+    t0 = time.perf_counter()
+    eng2.run_to_completion()
+    wall_warm = time.perf_counter() - t0
+    warm_stats = eng2.stats()
+
+    # -- sequential baselines -----------------------------------------------
+    seq_cold_wall, seq_shapes, seq_cold_lat = _sequential_cold(shapes, arrays)
+    seq_warm_wall, seq_buckets, seq_warm_lat = _sequential_warm(shapes,
+                                                               arrays)
+
+    speedup_cold = seq_cold_wall / wall_cold
+    speedup_warm = seq_warm_wall / wall_warm
+    ok_recompiles = stats["compile_count"] <= len(buckets)
+    print(f"[gram_service] {requests} reqs, {len(buckets)} buckets "
+          f"({seq_shapes} distinct shapes), backend={jax.default_backend()}")
+    print(f"[gram_service] cold: service {wall_cold:.2f}s "
+          f"({stats['compile_count']} compiles) vs per-shape dispatch "
+          f"{seq_cold_wall:.2f}s ({seq_shapes} compiles) -> "
+          f"{speedup_cold:.2f}x")
+    print(f"[gram_service] warm: service {wall_warm:.2f}s vs bucketed "
+          f"dispatch {seq_warm_wall:.2f}s -> {speedup_warm:.2f}x "
+          f"(batching-only effect; expects batch-parallel hardware)")
+    print(f"[gram_service] warm p50 {warm_stats['p50_latency_s']*1e3:.1f}ms "
+          f"p99 {warm_stats['p99_latency_s']*1e3:.1f}ms; acceptance "
+          f"recompiles<=buckets: {ok_recompiles}")
+
+    payload = {
+        "requests": requests,
+        "slots": slots,
+        "backend": jax.default_backend(),
+        "buckets": [list(b) for b in buckets],
+        "distinct_shapes": seq_shapes,
+        "batched_cold": {
+            "wall_s": wall_cold,
+            "throughput_rps": requests / wall_cold,
+            "p50_latency_s": stats["p50_latency_s"],
+            "p99_latency_s": stats["p99_latency_s"],
+            "recompile_count": stats["compile_count"],
+            "ticks": stats["ticks"],
+        },
+        "batched_warm": {
+            "wall_s": wall_warm,
+            "throughput_rps": requests / wall_warm,
+            "p50_latency_s": warm_stats["p50_latency_s"],
+            "p99_latency_s": warm_stats["p99_latency_s"],
+        },
+        "sequential_cold_per_shape": {
+            "wall_s": seq_cold_wall,
+            "throughput_rps": requests / seq_cold_wall,
+            "p50_latency_s": _pct(seq_cold_lat, 0.50),
+            "p99_latency_s": _pct(seq_cold_lat, 0.99),
+            "recompile_count": seq_shapes,
+        },
+        "sequential_warm_bucketed": {
+            "wall_s": seq_warm_wall,
+            "throughput_rps": requests / seq_warm_wall,
+            "p50_latency_s": _pct(seq_warm_lat, 0.50),
+            "p99_latency_s": _pct(seq_warm_lat, 0.99),
+            "recompile_count": seq_buckets,
+        },
+        "speedup_vs_status_quo": speedup_cold,
+        "speedup_warm_batching_only": speedup_warm,
+        "acceptance_recompiles_le_buckets": ok_recompiles,
+        "acceptance_speedup_ge_2x": speedup_cold >= 2.0,
+    }
+    path = write_json("BENCH_gram_service.json", payload)
+    print(f"[gram_service] wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

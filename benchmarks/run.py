@@ -10,6 +10,8 @@ s3.1  multiplication counts vs (2/7) n^log2(7)        <- paper §3.1
 s5    communication model + comm fraction             <- paper §5/§6.3.2
 roofline  3-term roofline over dry-run artifacts      <- brief §Roofline
 ata   fused-pipeline trajectory -> BENCH_ata.json     <- DESIGN.md §4
+gram_service  batched vs sequential serving -> BENCH_gram_service.json
+                                                      <- DESIGN.md §10
 
 ``--smoke`` runs the fast interpret-mode kernel test suite instead of the
 benchmarks (CI smoke target: validates the fused Pallas pipeline on CPU
@@ -22,7 +24,7 @@ import time
 
 from . import (bench_exec_time, bench_speedup, bench_efficiency,
                bench_karpflatt, bench_flops, bench_comm, bench_roofline,
-               bench_ata)
+               bench_ata, bench_gram_service)
 
 ALL = [
     ("fig5_exec_time", bench_exec_time.run),
@@ -33,10 +35,12 @@ ALL = [
     ("s5_comm", bench_comm.run),
     ("roofline", bench_roofline.run),
     ("ata_fused", bench_ata.run),
+    ("gram_service", bench_gram_service.run),
 ]
 
 SMOKE_TESTS = ["tests/test_fused_ata.py", "tests/test_kernels.py",
-               "tests/test_core_ata.py"]
+               "tests/test_core_ata.py", "tests/test_gram_stream.py",
+               "tests/test_gram_engine.py"]
 
 
 def main(argv=None):

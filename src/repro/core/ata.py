@@ -58,7 +58,7 @@ def ata(
     base_matmul: Optional[Callable] = None,
     mode: str = "auto",
     out_dtype=None,
-    block: int = 256,
+    block: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Lower triangle of ``a.T @ a`` via the paper's ATA recursion.
@@ -81,7 +81,9 @@ def ata(
         dtype* — fp32 for bf16/fp32 inputs — instead of silently
         downcasting fp32-accumulated results back to the input dtype
         (Strassen recombination loses ~1 bit/level; see strassen.py).
-      block: Pallas tile edge for the fused path (bk = bn = block).
+      block: Pallas tile edge for the fused path (bk = bn = block);
+        ``None`` consults the gram autotune cache for this shape bucket
+        (256 when untuned).
       interpret: Pallas interpret-mode override for the fused path
         (default: interpret off-TPU).
 
@@ -97,8 +99,8 @@ def ata(
                  if out_dtype is None else jnp.dtype(out_dtype))
     mode = resolve_mode(mode, base_syrk, base_matmul)
     if mode == "fused":
-        from ..kernels.strassen_fused import fused_ata
-        return fused_ata(a, levels=levels, variant=variant, bk=block,
+        from ..kernels.ops import ata_fused
+        return ata_fused(a, levels=levels, variant=variant, bk=block,
                          bn=block, out_dtype=out_dtype, interpret=interpret)
     syrk = base_syrk or _default_base_syrk
     out = _ata_rec(a, levels, leaf, variant, syrk, base_matmul)

@@ -98,7 +98,7 @@ def strassen_matmul(
     base_matmul: Optional[Callable] = None,
     mode: str = "auto",
     out_dtype=None,
-    block: int = 256,
+    block: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Compute ``a @ b`` via (level-capped) Strassen recursion.
@@ -118,7 +118,8 @@ def strassen_matmul(
         schedule in one Pallas kernel (no per-level HBM temporaries).
       out_dtype: result dtype; defaults to the promoted *accumulation*
         dtype (fp32 for bf16/fp32 inputs) rather than downcasting.
-      block: Pallas tile edge for the fused path (bm = bk = bn = block).
+      block: Pallas tile edge for the fused path (bm = bk = bn = block);
+        ``None`` consults the gram autotune cache (256 when untuned).
       interpret: Pallas interpret override for the fused path.
 
     Returns (m, n) array in ``out_dtype``.
@@ -134,8 +135,8 @@ def strassen_matmul(
                  if out_dtype is None else jnp.dtype(out_dtype))
     mode = resolve_mode(mode, base_matmul)
     if mode == "fused":
-        from ..kernels.strassen_fused import fused_matmul
-        return fused_matmul(a, b, levels=levels, variant=variant, bm=block,
+        from ..kernels.ops import matmul_fused
+        return matmul_fused(a, b, levels=levels, variant=variant, bm=block,
                             bk=block, bn=block, out_dtype=out_dtype,
                             interpret=interpret)
     base = base_matmul or _default_base_matmul

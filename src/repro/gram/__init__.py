@@ -1,0 +1,34 @@
+"""Gram service: streaming, batched, autotuned A^tA serving.
+
+The layer between the fused ATA kernel and the world (DESIGN.md §10):
+
+- ``stream``   — online accumulator: C += chunk^t chunk in packed
+                 lower-triangular state, plus a reduce-scatter-sharded
+                 variant that never replicates C.
+- ``engine``   — ``GramEngine``: slot-based continuous batching of
+                 heterogeneous Gram requests, power-of-two shape buckets,
+                 one cached executable per bucket.
+- ``autotune`` — per-(bucket, dtype, backend) search over
+                 mode x levels x blocks, persisted to
+                 ``artifacts/autotune/gram_autotune.json`` and consulted
+                 by ``kernels/ops.py`` for its defaults.
+"""
+from . import autotune, engine, stream  # noqa: F401
+from .autotune import (  # noqa: F401
+    autotune as autotune_bucket, bucket_shape, lookup as autotune_lookup,
+    resolve_block_defaults,
+)
+from .engine import GramEngine, GramRequest, batched_gram  # noqa: F401
+from .stream import (  # noqa: F401
+    GramStream, init as stream_init, update as stream_update,
+    finalize as stream_finalize, sharded_init, update_sharded,
+)
+
+__all__ = [
+    "autotune", "engine", "stream",
+    "autotune_bucket", "bucket_shape", "autotune_lookup",
+    "resolve_block_defaults",
+    "GramEngine", "GramRequest", "batched_gram",
+    "GramStream", "stream_init", "stream_update", "stream_finalize",
+    "sharded_init", "update_sharded",
+]

@@ -1,0 +1,289 @@
+"""Per-bucket autotuning for the Gram service.
+
+The Benson–Ballard observation carried into this repo: a fast-matmul
+variant only pays off when the variant *and* blocking are selected per
+shape.  This module searches ``mode x levels x (bm, bk, bn)`` per
+(shape bucket, dtype, backend), ranks candidates with the analytic HBM
+traffic model (``kernels.strassen_fused.ata_traffic_model`` — exact for
+the fused kernel on hardware), optionally times the top-K on the current
+device, and persists the winner to a JSON cache under
+``artifacts/autotune/``.
+
+``kernels/ops.py`` and the ``core`` recursions consult this cache for
+their block-size defaults (``resolve_block_defaults``) instead of the
+historical hardcoded 256s; ``gram.engine.GramEngine`` consults it for the
+full per-bucket config (mode + levels + blocks).
+
+Cache file format (``gram_autotune.json``)::
+
+    {"version": 1,
+     "entries": {
+       "<backend>/<dtype>/<kind>/<M>x<N>": {
+          "mode": "fused", "levels": 2, "variant": "strassen",
+          "bm": 256, "bk": 256, "bn": 256,
+          "model_bytes": 1234, "measured_s": null, "source": "model"}}}
+
+Keys are *bucketed* shapes (``bucket_shape``), so one entry serves every
+request shape that rounds up to the same bucket.  Invalidation: the file
+is re-read whenever its mtime changes (delete it, or re-run ``autotune``
+with ``refresh=True``, to invalidate).  Set ``REPRO_AUTOTUNE_CACHE`` to
+relocate the cache (tests point it at a tmp dir).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "bucket_shape", "candidate_space", "model_score", "autotune", "lookup",
+    "resolve_block_defaults", "load_cache", "default_cache_path",
+    "DEFAULT_BLOCK",
+]
+
+DEFAULT_BLOCK = 256
+_CACHE_VERSION = 1
+
+# (path, mtime) -> parsed entries; re-read on mtime change (invalidation).
+_memo: dict = {}
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    # src/repro/gram/autotune.py -> repo root is parents[3]
+    root = Path(__file__).resolve().parents[3]
+    return root / "artifacts" / "autotune" / "gram_autotune.json"
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def bucket_shape(m: int, n: int, *, min_side: int = 32) -> tuple[int, int]:
+    """Round a request shape up to the service bucket (powers of two,
+    floored at ``min_side``).  Exact for Gram: zero-padding rows of A adds
+    nothing to A^tA and zero columns are sliced away by the caller."""
+    return (max(next_pow2(m), min_side), max(next_pow2(n), min_side))
+
+
+def _key(backend: str, dtype: str, kind: str, M: int, N: int) -> str:
+    return f"{backend}/{dtype}/{kind}/{M}x{N}"
+
+
+# ---------------------------------------------------------------------------
+# Search space + model scoring
+# ---------------------------------------------------------------------------
+
+def candidate_space(M: int, N: int, *, backend: Optional[str] = None,
+                    blocks=(128, 256, 512), levels=(0, 1, 2),
+                    modes=("fused", "reference")):
+    """Enumerate (mode, levels, bm/bk/bn) candidates for an (M, N) bucket.
+
+    Blocks larger than the bucket only add padding, so they are dropped
+    (keeping at least the smallest candidate).
+    """
+    usable = [b for b in blocks if b <= max(M, N)] or [min(blocks)]
+    out = []
+    for mode in modes:
+        for lv in levels:
+            if mode == "reference":
+                # blocking is a fused-kernel knob; the reference recursion
+                # leaves tiling to XLA — one candidate per level.
+                out.append({"mode": "reference", "levels": lv,
+                            "variant": "strassen",
+                            "bm": min(usable), "bk": min(usable),
+                            "bn": min(usable)})
+                continue
+            for bk in usable:
+                for bn in usable:
+                    out.append({"mode": "fused", "levels": lv,
+                                "variant": "strassen",
+                                "bm": bk, "bk": bk, "bn": bn})
+    return out
+
+
+def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
+                out_bytes: int = 4) -> float:
+    """HBM-bytes score (lower is better) used to seed the search.
+
+    Fused candidates use the exact analytic kernel model.  Reference
+    candidates use a closed-form upper estimate of what the recursion
+    materializes (operand sums + M_i products grow as (7/4)^levels) —
+    a deliberate heuristic.  Because the reference score is a heuristic
+    while the fused score is exact, model-only search ranks fused
+    candidates only — reference candidates compete through
+    ``measure=True`` wall clock (see :func:`autotune`).
+    """
+    if cand["mode"] == "fused":
+        from ..kernels.strassen_fused import ata_traffic_model
+        t = ata_traffic_model(m, n, levels=cand["levels"],
+                              variant=cand["variant"], bk=cand["bk"],
+                              bn=cand["bn"], in_bytes=in_bytes,
+                              out_bytes=out_bytes)
+        return float(t["read_bytes"] + t["write_bytes"]
+                     + t["intermediate_bytes"])
+    lv = cand["levels"]
+    amplification = (7.0 / 4.0) ** lv
+    reads = m * n * in_bytes * max(amplification, 1.0)
+    writes = n * n * out_bytes
+    intermediates = (m * n + n * n) * in_bytes * (amplification - 1.0) * 2
+    return float(reads + writes + intermediates)
+
+
+# ---------------------------------------------------------------------------
+# Cache IO
+# ---------------------------------------------------------------------------
+
+def load_cache(path: Optional[os.PathLike] = None) -> dict:
+    """Entries dict from the JSON cache ({} when absent/corrupt).
+    Memoized on (path, mtime): touching the file invalidates."""
+    p = Path(path) if path is not None else default_cache_path()
+    try:
+        mtime = p.stat().st_mtime_ns
+    except OSError:
+        return {}
+    memo_key = (str(p), mtime)
+    if memo_key in _memo:
+        return _memo[memo_key]
+    try:
+        with open(p) as f:
+            raw = json.load(f)
+        entries = raw.get("entries", {}) if isinstance(raw, dict) else {}
+    except (OSError, ValueError):
+        entries = {}
+    _memo.clear()           # one live file snapshot is enough
+    _memo[memo_key] = entries
+    return entries
+
+
+def _save_entry(key: str, entry: dict, path: Optional[os.PathLike]) -> Path:
+    p = Path(path) if path is not None else default_cache_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    entries = dict(load_cache(p))
+    entries[key] = entry
+    tmp = p.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        json.dump({"version": _CACHE_VERSION, "entries": entries}, f,
+                  indent=1, sort_keys=True)
+    os.replace(tmp, p)
+    return p
+
+
+def lookup(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
+           backend: Optional[str] = None, min_side: int = 32,
+           cache_path: Optional[os.PathLike] = None) -> Optional[dict]:
+    """Winner entry for the bucket containing (m, n), or None.
+    ``min_side`` must match the bucketing used when tuning (the engine
+    threads its ``min_bucket`` here)."""
+    backend = backend or jax.default_backend()
+    M, N = bucket_shape(m, n, min_side=min_side)
+    return load_cache(cache_path).get(_key(backend, str(dtype), kind, M, N))
+
+
+def resolve_block_defaults(kind: str, m: int, n: int, dtype,
+                           **blocks) -> dict:
+    """Fill ``None`` block sizes from the autotune cache (256 fallback).
+
+    The hook through which ``kernels/ops.py`` / ``core`` consult the
+    cache: explicit caller values always win; a missing cache (or any
+    cache error) degrades to the historical hardcoded default.  Only
+    ``mode="fused"`` winners carry meaningful block sizes (blocking is a
+    fused-kernel knob — reference entries hold placeholders), so other
+    entries are ignored here.
+    """
+    if all(v is not None for v in blocks.values()):
+        return blocks
+    best = None
+    if kind in ("ata", "matmul"):
+        try:
+            best = lookup(m, n, dtype=jnp.dtype(dtype).name, kind=kind)
+        except Exception:
+            best = None
+        if best is not None and best.get("mode") != "fused":
+            best = None
+    return {k: int(v if v is not None
+                   else (best or {}).get(k) or DEFAULT_BLOCK)
+            for k, v in blocks.items()}
+
+
+# ---------------------------------------------------------------------------
+# The search
+# ---------------------------------------------------------------------------
+
+def _build_runner(M: int, N: int, dtype, cand: dict, interpret):
+    from ..core.ata import ata
+
+    def fn(a):
+        return ata(a, levels=cand["levels"], variant=cand["variant"],
+                   mode=cand["mode"], block=cand["bk"],
+                   out_dtype=jnp.float32, interpret=interpret)
+    return jax.jit(fn)
+
+
+def _time_candidate(fn, a, iters: int = 2) -> float:
+    jax.block_until_ready(fn(a))            # compile + warm
+    best = math.inf
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
+             backend: Optional[str] = None, measure: bool = False,
+             top_k: int = 3, blocks=(128, 256, 512), levels=(0, 1, 2),
+             modes=("fused", "reference"), min_side: int = 32,
+             cache_path: Optional[os.PathLike] = None,
+             interpret: Optional[bool] = None,
+             refresh: bool = False) -> dict:
+    """Pick (and persist) the best config for the bucket containing (m, n).
+
+    Model-only by default: ranks *fused* candidates by ``model_score``
+    (the model is exact for the fused kernel; the reference estimate is a
+    heuristic, so it never decides a contest).  With ``measure=True`` the
+    top-K fused candidates plus the reference candidates are compiled and
+    timed on the current device and wall clock picks the winner.  Returns
+    the cached entry when one exists unless ``refresh``.
+    """
+    backend = backend or jax.default_backend()
+    M, N = bucket_shape(m, n, min_side=min_side)
+    key = _key(backend, str(dtype), kind, M, N)
+    if not refresh:
+        hit = load_cache(cache_path).get(key)
+        if hit is not None:
+            return hit
+
+    in_bytes = jnp.dtype(dtype).itemsize
+    cands = candidate_space(M, N, backend=backend, blocks=blocks,
+                            levels=levels, modes=modes)
+    score = lambda c: model_score(M, N, c, in_bytes=in_bytes)  # noqa: E731
+    fused = sorted((c for c in cands if c["mode"] == "fused"), key=score)
+    refs = sorted((c for c in cands if c["mode"] == "reference"), key=score)
+    winner, measured = (fused or refs)[0], None
+    if measure:
+        a = jax.random.normal(jax.random.PRNGKey(0), (M, N)).astype(dtype)
+        timed = []
+        for cand in fused[:top_k] + refs:
+            try:
+                timed.append((_time_candidate(
+                    _build_runner(M, N, dtype, cand, interpret), a), cand))
+            except Exception:
+                continue            # unrunnable candidate (e.g. VMEM clamp)
+        if timed:
+            measured, winner = min(timed, key=lambda tc: tc[0])
+
+    entry = {**winner,
+             "model_bytes": model_score(M, N, winner, in_bytes=in_bytes),
+             "measured_s": measured,
+             "source": "measured" if measured is not None else "model"}
+    _save_entry(key, entry, cache_path)
+    return entry

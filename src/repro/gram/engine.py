@@ -1,0 +1,237 @@
+"""GramEngine: slot-based multi-tenant batched A^tA serving.
+
+The serving analogue of ``runtime/serving.py``'s continuous-batching KV
+engine, for the paper's operation instead of token decode:
+
+* **Bucketing.**  Request shapes are rounded up to power-of-two buckets
+  (``gram.autotune.bucket_shape``) — exact for Gram, because zero rows of
+  A add nothing to A^tA and zero columns only add zero rows/columns to C
+  that are sliced away on completion.
+* **Slot batching.**  Each tick drains up to ``slots`` same-bucket
+  requests, stacks them (padding the batch with zero matrices when fewer
+  are waiting) and runs ONE vmapped ATA over the stack — the fused Pallas
+  schedule on TPU, the XLA reference recursion elsewhere
+  (``core.ata.resolve_mode``).
+* **Bounded recompiles.**  Executables are cached per
+  ``(bucket_m, bucket_n, dtype)``; because the batch is always padded to
+  exactly ``slots`` entries, a mixed trace costs at most one compilation
+  per distinct bucket key (``compile_count``; the acceptance test pins
+  ``compile_count <= len(buckets)`` on a 64-request trace).
+* **Autotuned per-bucket config.**  On first touch of a bucket the
+  engine consults the ``gram.autotune`` JSON cache; a hit overrides
+  mode / levels / block for that bucket's executable.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ata import ata, ata_full
+from ..core.symmetry import symmetrize_from_lower
+from . import autotune as _autotune
+
+__all__ = ["GramEngine", "GramRequest", "batched_gram"]
+
+
+def batched_gram(blocks: jax.Array, *, levels: Union[int, str] = 1,
+                 leaf: int = 256, variant: str = "strassen",
+                 mode: str = "auto", block: Optional[int] = None,
+                 out_dtype=None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Full symmetric Gram of a (K, m, n) stack -> (K, n, n), vmapped
+    through the mode-dispatched ATA path (fused kernel on TPU).
+
+    The batched building block of the service layer; also the in-repo
+    consumer hook for ``optim/shampoo.py``'s per-block statistics.
+    """
+    if blocks.ndim != 3:
+        raise ValueError(f"batched_gram expects (K, m, n), got {blocks.shape}")
+    return jax.vmap(lambda b: ata_full(
+        b, levels=levels, leaf=leaf, variant=variant, mode=mode,
+        out_dtype=out_dtype, block=block, interpret=interpret))(blocks)
+
+
+@dataclass
+class GramRequest:
+    uid: int
+    a: np.ndarray                     # host copy; padded/stacked at batch time
+    shape: Tuple[int, int]
+    full: bool                        # symmetric result vs lower triangle
+    t_submit: float
+    t_done: Optional[float] = None
+    result: Optional[np.ndarray] = None
+    done: bool = False
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+class GramEngine:
+    """Multi-tenant batched Gram service (see module docstring)."""
+
+    def __init__(self, *, slots: int = 4, levels: Union[int, str] = 1,
+                 leaf: int = 256, variant: str = "strassen",
+                 mode: str = "auto", block: Optional[int] = None,
+                 out_dtype=jnp.float32, min_bucket: int = 32,
+                 use_autotune_cache: bool = True,
+                 interpret: Optional[bool] = None):
+        self.slots = slots
+        self.levels, self.leaf, self.variant = levels, leaf, variant
+        self.mode, self.block = mode, block
+        self.out_dtype = jnp.dtype(out_dtype)
+        self.min_bucket = min_bucket
+        self.use_autotune_cache = use_autotune_cache
+        self.interpret = interpret
+        self._uid = itertools.count()
+        # bucket key -> FIFO of waiting requests (insertion-ordered so
+        # tick scheduling is deterministic)
+        self.waiting: "OrderedDict[tuple, List[GramRequest]]" = OrderedDict()
+        self.finished: List[GramRequest] = []
+        self._executables: Dict[tuple, object] = {}
+        self.compile_count = 0
+        self.served = 0
+        self.ticks = 0
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, a, *, full: bool = True) -> int:
+        """Enqueue one Gram request; returns its uid.  ``full`` selects the
+        mirrored symmetric C (default) vs the lower triangle only."""
+        a = np.asarray(a)
+        if a.ndim != 2:
+            raise ValueError(f"gram request must be 2-D, got {a.shape}")
+        r = GramRequest(uid=next(self._uid), a=a, shape=a.shape, full=full,
+                        t_submit=time.perf_counter())
+        key = self._bucket_key(a.shape, a.dtype)
+        self.waiting.setdefault(key, []).append(r)
+        return r.uid
+
+    def _bucket_key(self, shape, dtype) -> tuple:
+        M, N = _autotune.bucket_shape(*shape, min_side=self.min_bucket)
+        return (M, N, jnp.dtype(dtype).name)
+
+    # -- executable cache --------------------------------------------------
+    def _bucket_config(self, key) -> dict:
+        """Engine config for one bucket; the autotune winner fills in only
+        the knobs the caller left open (mode/levels "auto", block None) —
+        explicit engine arguments always win.  Mode/levels are adopted
+        only from *measured* entries (wall-clock-backed: a model-only
+        entry must not flip the backend-appropriate "auto" dispatch);
+        block sizes only from fused winners (reference entries carry
+        placeholder blocks)."""
+        M, N, dtype = key
+        cfg = {"mode": self.mode, "levels": self.levels, "leaf": self.leaf,
+               "variant": self.variant, "block": self.block}
+        if self.use_autotune_cache:
+            try:
+                hit = _autotune.lookup(M, N, dtype=dtype,
+                                       min_side=self.min_bucket)
+            except Exception:
+                hit = None
+            if hit:
+                if hit.get("source") == "measured":
+                    if cfg["mode"] == "auto":
+                        cfg["mode"] = hit["mode"]
+                    if cfg["levels"] == "auto":
+                        cfg["levels"] = hit["levels"]
+                if cfg["block"] is None and hit.get("mode") == "fused":
+                    cfg["block"] = hit.get("bk")
+        return cfg
+
+    def _executable(self, key):
+        if key in self._executables:
+            return self._executables[key]
+        M, N, dtype = key
+        cfg = self._bucket_config(key)
+
+        def one(x):
+            return ata(x, levels=cfg["levels"], leaf=cfg["leaf"],
+                       variant=cfg["variant"], mode=cfg["mode"],
+                       out_dtype=self.out_dtype, block=cfg["block"],
+                       interpret=self.interpret)
+        spec = jax.ShapeDtypeStruct((self.slots, M, N), jnp.dtype(dtype))
+        compiled = jax.jit(jax.vmap(one)).lower(spec).compile()
+        self.compile_count += 1
+        self._executables[key] = compiled
+        return compiled
+
+    def prewarm(self, shapes, dtype=jnp.float32) -> int:
+        """Build executables for the buckets covering ``shapes`` ahead of
+        traffic (steady-state serving pays no first-request compile).
+        Returns the number of compilations triggered."""
+        before = self.compile_count
+        for shape in shapes:
+            self._executable(self._bucket_key(shape, dtype))
+        return self.compile_count - before
+
+    # -- one engine tick ---------------------------------------------------
+    def step(self) -> List[GramRequest]:
+        """Drain one batch: serve a full batch if any bucket has one
+        (throughput), else the bucket whose head request has waited
+        longest (fairness — sparse buckets cannot be starved by popular
+        ones); FIFO within a bucket.  Runs the bucket executable over up
+        to ``slots`` stacked requests and slices each result back to its
+        true shape.  Returns the requests finished this tick."""
+        if not self.waiting:
+            return []
+        self.ticks += 1
+        full = [k for k, q in self.waiting.items() if len(q) >= self.slots]
+        key = min(full or self.waiting,
+                  key=lambda k: self.waiting[k][0].t_submit)
+        queue = self.waiting[key]
+        batch, rest = queue[:self.slots], queue[self.slots:]
+        if rest:
+            self.waiting[key] = rest
+        else:
+            del self.waiting[key]
+
+        M, N, dtype = key
+        # jnp.dtype resolves extended names ("bfloat16") numpy alone won't
+        stack = np.zeros((self.slots, M, N), jnp.dtype(dtype))
+        for s, r in enumerate(batch):
+            m, n = r.shape
+            stack[s, :m, :n] = r.a
+        out = np.asarray(self._executable(key)(jnp.asarray(stack)))
+        t_done = time.perf_counter()
+        for s, r in enumerate(batch):
+            n = r.shape[1]
+            c = out[s, :n, :n]
+            if r.full:
+                c = np.asarray(symmetrize_from_lower(jnp.asarray(c)))
+            r.result, r.t_done, r.done = c, t_done, True
+            r.a = None                      # free the host copy
+            self.finished.append(r)
+        self.served += len(batch)
+        return batch
+
+    def run_to_completion(self, max_ticks: int = 10_000) \
+            -> List[GramRequest]:
+        for _ in range(max_ticks):
+            if not self.waiting:
+                break
+            self.step()
+        return self.finished
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> dict:
+        lats = sorted(r.latency_s for r in self.finished
+                      if r.latency_s is not None)
+
+        def pct(p):
+            return lats[min(int(p * len(lats)), len(lats) - 1)] \
+                if lats else None
+        return {
+            "served": self.served,
+            "ticks": self.ticks,
+            "compile_count": self.compile_count,
+            "buckets": sorted(self._executables),
+            "p50_latency_s": pct(0.50),
+            "p99_latency_s": pct(0.99),
+        }

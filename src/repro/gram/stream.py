@@ -1,0 +1,132 @@
+"""Online (streaming) Gram accumulation: C += A_chunk^t A_chunk.
+
+The paper frames A^tA as "an intermediate operation during the solution
+of a wide set of problems"; in most of those problems A arrives in row
+chunks (minibatches, shards, token streams).  This module keeps the
+running Gram in **packed lower-triangular form** — n(n+1)/2 words, the
+paper's storage saving (`core/symmetry.py`) — and folds each chunk in
+through the ATA recursion (fused Pallas kernel on TPU via
+``mode="auto"``), with the state buffer **donated** so the accumulator is
+updated in place rather than reallocated per chunk.
+
+Exactness over ragged chunks: ``C = sum_i A_i^t A_i`` for any row
+partition of A (the C11/C22 two-addend identity of Algorithm 1
+generalized to any number of addends), so any chunking — including a
+ragged final chunk — reproduces the one-shot ``ata_full(A)`` up to fp32
+accumulation-order rounding.  ``tests/test_gram_stream.py`` and the
+hypothesis property in ``tests/test_properties.py`` pin this down.
+
+Sharded variant: ``update_sharded`` composes with
+``core.distributed.gram_reducescatter`` — each device streams its *row
+shard* of the chunk and holds only its block-row shard of C, so the
+replicated C of the paper-faithful all-reduce scheme never materializes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ata import ata
+from ..core.distributed import gram_reducescatter
+from ..core.symmetry import pack_tril, unpack_tril
+
+__all__ = ["GramStream", "init", "update", "finalize",
+           "sharded_init", "update_sharded"]
+
+
+class GramStream(NamedTuple):
+    """Running Gram state (a pytree — jit/scan/donate friendly).
+
+    packed: (n(n+1)/2,) packed lower triangle of the accumulated C.
+    rows:   scalar int32, total rows streamed so far (for normalized
+            second-moment readings: C / rows).
+    """
+    packed: jax.Array
+    rows: jax.Array
+
+    @property
+    def n(self) -> int:
+        # n(n+1)/2 = L  =>  n = (sqrt(8L+1) - 1) / 2
+        return (math.isqrt(8 * self.packed.shape[0] + 1) - 1) // 2
+
+
+def init(n: int, *, dtype=jnp.float32) -> GramStream:
+    """Fresh accumulator for an n-column stream (fp32 by default: the
+    accumulation dtype must not lose bits across many chunks)."""
+    return GramStream(packed=jnp.zeros(n * (n + 1) // 2, dtype),
+                      rows=jnp.zeros((), jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _updater(levels, leaf, variant, mode, block, interpret):
+    def step(packed, rows, chunk):
+        delta = ata(chunk, levels=levels, leaf=leaf, variant=variant,
+                    mode=mode, out_dtype=packed.dtype, block=block,
+                    interpret=interpret)
+        return packed + pack_tril(delta), rows + chunk.shape[0]
+    # donate the packed accumulator: the update runs in place, no second
+    # n(n+1)/2 buffer per chunk
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def update(state: GramStream, chunk: jax.Array, *,
+           levels: Union[int, str] = 2, leaf: int = 256,
+           variant: str = "strassen", mode: str = "auto",
+           block: Optional[int] = None,
+           interpret: Optional[bool] = None) -> GramStream:
+    """Fold one row chunk in: state.packed += pack_tril(tril(chunk^t chunk)).
+
+    ``chunk`` is (m_chunk, n) with any m_chunk >= 1 (ragged tails fine).
+    Kernel knobs mirror ``core.ata``; ``block=None`` consults the
+    autotune cache (``gram.autotune``).
+    """
+    if chunk.ndim != 2 or state.n != chunk.shape[1]:
+        raise ValueError(
+            f"chunk shape {chunk.shape} does not match stream n={state.n}")
+    fn = _updater(levels, leaf, variant, mode, block, interpret)
+    packed, rows = fn(state.packed, state.rows, chunk)
+    return GramStream(packed=packed, rows=rows)
+
+
+def finalize(state: GramStream, *, symmetrize: bool = True,
+             out_dtype=None) -> jax.Array:
+    """Dense (n, n) Gram from the packed state (mirrored when
+    ``symmetrize``, else lower-triangular like ``ata``)."""
+    c = unpack_tril(state.packed, state.n, symmetrize=symmetrize)
+    return c.astype(out_dtype) if out_dtype is not None else c
+
+
+# ---------------------------------------------------------------------------
+# Sharded streaming (inside shard_map): C lives sharded by block-rows.
+# ---------------------------------------------------------------------------
+
+def sharded_init(n: int, axis_size: int, *, dtype=jnp.float32) -> jax.Array:
+    """Per-device state for ``update_sharded``: this device's (n/P, n)
+    block-row shard of C (call inside shard_map, or build the global
+    (n, n) array with a ``P(row_axis, None)`` sharding outside)."""
+    if n % axis_size:
+        raise ValueError(f"n={n} not divisible by axis_size={axis_size}")
+    return jnp.zeros((n // axis_size, n), dtype)
+
+
+def update_sharded(c_shard: jax.Array, chunk_local: jax.Array,
+                   row_axis: str, *, levels: Union[int, str] = 2,
+                   leaf: int = 256, variant: str = "strassen",
+                   mode: str = "auto") -> jax.Array:
+    """One streamed chunk under shard_map: rows of the chunk sharded over
+    ``row_axis``, C sharded by block-rows over the same axis.
+
+    Per chunk each device computes the Gram of its row shard (fused
+    pipeline via ``mode="auto"``) and a single ``psum_scatter``
+    (``gram_reducescatter``) lands each device's block-row slice — the
+    full C is never replicated, and per-chunk collective bandwidth is
+    n^2/P words per device instead of n^2.
+    """
+    delta = gram_reducescatter(chunk_local, row_axis, levels=levels,
+                               leaf=leaf, variant=variant, mode=mode,
+                               out_dtype=c_shard.dtype)
+    return c_shard + delta

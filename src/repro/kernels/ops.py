@@ -3,6 +3,11 @@
 Handle arbitrary shapes by zero-padding to block multiples (exact for
 matmul/syrk/transpose/combine) and slicing back. ``interpret`` defaults to
 True off-TPU so the same call sites validate on CPU and run compiled on TPU.
+
+Block sizes default to ``None`` = "consult the gram autotune cache"
+(``gram/autotune.py``; winners persisted per shape bucket under
+``artifacts/autotune/``), falling back to 256 when untuned.  Explicit
+block arguments bypass the cache entirely.
 """
 from __future__ import annotations
 
@@ -24,6 +29,20 @@ def _auto_interpret(interpret):
     return jax.default_backend() != "tpu"
 
 
+def _resolve_blocks(kind, m, n, dtype, **blocks):
+    """Fill ``None`` block sizes from the gram autotune cache
+    (``artifacts/autotune/gram_autotune.json``; see gram/autotune.py)
+    instead of the historical hardcoded 256s.  Explicit values win; a
+    missing/broken cache degrades to 256."""
+    if all(v is not None for v in blocks.values()):
+        return blocks
+    try:
+        from ..gram.autotune import resolve_block_defaults
+        return resolve_block_defaults(kind, m, n, dtype, **blocks)
+    except Exception:
+        return {k: (256 if v is None else v) for k, v in blocks.items()}
+
+
 def _pad_to(x, mults):
     pads = [(-d) % m for d, m in zip(x.shape, mults)]
     if any(pads):
@@ -31,9 +50,18 @@ def _pad_to(x, mults):
     return x
 
 
+def matmul(a, b, *, bm=None, bk=None, bn=None, interpret=None):
+    """``a @ b`` via the tiled MXU kernel; any shapes, any float dtype.
+    Block sizes default to the autotune-cache winner for this shape
+    bucket (256 when untuned)."""
+    bs = _resolve_blocks("matmul", a.shape[0], b.shape[1], a.dtype,
+                         bm=bm, bk=bk, bn=bn)
+    return _matmul_jit(a, b, bm=bs["bm"], bk=bs["bk"], bn=bs["bn"],
+                       interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
-def matmul(a, b, *, bm=256, bk=256, bn=256, interpret=None):
-    """``a @ b`` via the tiled MXU kernel; any shapes, any float dtype."""
+def _matmul_jit(a, b, *, bm, bk, bn, interpret=None):
     interpret = _auto_interpret(interpret)
     m, n = a.shape[0], b.shape[1]
     ap = _pad_to(a, (bm, bk))
@@ -43,18 +71,29 @@ def matmul(a, b, *, bm=256, bk=256, bn=256, interpret=None):
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "bn", "interpret"))
-def syrk_packed(a, *, bk=256, bn=256, interpret=None):
+def syrk_packed(a, *, bk=None, bn=None, interpret=None):
     """Packed lower-tri block stack of ``a.T @ a`` (padded N -> caller keeps
     block layout; use :func:`syrk` for a dense result at original size)."""
+    bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
+    return _syrk_packed_jit(a, bk=bs["bk"], bn=bs["bn"], interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "interpret"))
+def _syrk_packed_jit(a, *, bk, bn, interpret=None):
     interpret = _auto_interpret(interpret)
     ap = _pad_to(a, (bk, bn))
     return _syrk.syrk_packed(ap, bk=bk, bn=bn, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "bn", "symmetrize", "interpret"))
-def syrk(a, *, bk=256, bn=256, symmetrize=False, interpret=None):
+def syrk(a, *, bk=None, bn=None, symmetrize=False, interpret=None):
     """Dense ``tril(a.T @ a)`` (or full symmetric) via the packed kernel."""
+    bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
+    return _syrk_jit(a, bk=bs["bk"], bn=bs["bn"], symmetrize=symmetrize,
+                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "symmetrize", "interpret"))
+def _syrk_jit(a, *, bk, bn, symmetrize=False, interpret=None):
     interpret = _auto_interpret(interpret)
     n = a.shape[1]
     ap = _pad_to(a, (bk, bn))
@@ -69,7 +108,9 @@ def syrk(a, *, bk=256, bn=256, symmetrize=False, interpret=None):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def strassen_combine(m1, m2, m3, m4, m5, m6, m7, *, bm=256, bn=256,
                      interpret=None):
-    """Fused Strassen recombination -> (c11, c12, c21, c22)."""
+    """Fused Strassen recombination -> (c11, c12, c21, c22).
+    (No autotune-cache consultation: recombination blocking is not part
+    of the tuned search space.)"""
     interpret = _auto_interpret(interpret)
     m, n = m1.shape
     ms = [_pad_to(x, (bm, bn)) for x in (m1, m2, m3, m4, m5, m6, m7)]
@@ -91,14 +132,14 @@ def transpose(a, *, bm=256, bn=256, interpret=None):
 # Kernel-backed base cases for the core recursion (TPU hot path).
 # ---------------------------------------------------------------------------
 
-def pallas_base_matmul(bm=256, bk=256, bn=256, interpret=None):
+def pallas_base_matmul(bm=None, bk=None, bn=None, interpret=None):
     """base_matmul hook for repro.core.strassen_matmul."""
     def base(a, b):
         return matmul(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret)
     return base
 
 
-def pallas_base_syrk(bk=256, bn=256, interpret=None):
+def pallas_base_syrk(bk=None, bn=None, interpret=None):
     """base_syrk hook for repro.core.ata (lower-tri-only leaf gram)."""
     def base(a):
         return syrk(a, bk=bk, bn=bn, symmetrize=False, interpret=interpret)
@@ -112,23 +153,41 @@ def pallas_base_syrk(bk=256, bn=256, interpret=None):
 # core recursion routes here via ata(..., mode="fused").
 # ---------------------------------------------------------------------------
 
+def ata_fused(a, *, levels=2, variant="strassen", bk=None, bn=None,
+              out_dtype=None, interpret=None):
+    """Dense ``tril(a.T @ a)`` via the fused leaf-task schedule.
+    ``bk``/``bn`` default to the autotune-cache winner for this shape
+    bucket (256 when untuned)."""
+    bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
+    return _ata_fused_jit(a, levels=levels, variant=variant, bk=bs["bk"],
+                          bn=bs["bn"], out_dtype=out_dtype,
+                          interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "levels", "variant", "bk", "bn", "out_dtype", "interpret"))
-def ata_fused(a, *, levels=2, variant="strassen", bk=256, bn=256,
-              out_dtype=None, interpret=None):
-    """Dense ``tril(a.T @ a)`` via the fused leaf-task schedule."""
+def _ata_fused_jit(a, *, levels, variant, bk, bn, out_dtype=None,
+                   interpret=None):
     from . import strassen_fused as _sf
     return _sf.fused_ata(a, levels=levels, variant=variant, bk=bk, bn=bn,
                          out_dtype=out_dtype,
                          interpret=_auto_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bk", "bn", "out_dtype", "interpret"))
-def ata_fused_packed(a, *, levels=2, variant="strassen", bk=256, bn=256,
+def ata_fused_packed(a, *, levels=2, variant="strassen", bk=None, bn=None,
                      out_dtype=None, interpret=None):
     """Packed lower-tri block stack of ``a.T @ a`` via the fused schedule
     (upper-triangular blocks are never computed or written)."""
+    bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
+    return _ata_fused_packed_jit(a, levels=levels, variant=variant,
+                                 bk=bs["bk"], bn=bs["bn"],
+                                 out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "variant", "bk", "bn", "out_dtype", "interpret"))
+def _ata_fused_packed_jit(a, *, levels, variant, bk, bn, out_dtype=None,
+                          interpret=None):
     from . import strassen_fused as _sf
     packed, _ = _sf.fused_ata_packed(
         a, levels=levels, variant=variant, bk=bk, bn=bn,
@@ -136,11 +195,20 @@ def ata_fused_packed(a, *, levels=2, variant="strassen", bk=256, bn=256,
     return packed
 
 
+def matmul_fused(a, b, *, levels=2, variant="strassen", bm=None, bk=None,
+                 bn=None, out_dtype=None, interpret=None):
+    """``a @ b`` via the fused Strassen schedule kernel."""
+    bs = _resolve_blocks("matmul", a.shape[0], b.shape[1], a.dtype,
+                         bm=bm, bk=bk, bn=bn)
+    return _matmul_fused_jit(a, b, levels=levels, variant=variant,
+                             bm=bs["bm"], bk=bs["bk"], bn=bs["bn"],
+                             out_dtype=out_dtype, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "levels", "variant", "bm", "bk", "bn", "out_dtype", "interpret"))
-def matmul_fused(a, b, *, levels=2, variant="strassen", bm=256, bk=256,
-                 bn=256, out_dtype=None, interpret=None):
-    """``a @ b`` via the fused Strassen schedule kernel."""
+def _matmul_fused_jit(a, b, *, levels, variant, bm, bk, bn, out_dtype=None,
+                      interpret=None):
     from . import strassen_fused as _sf
     return _sf.fused_matmul(a, b, levels=levels, variant=variant, bm=bm,
                             bk=bk, bn=bn, out_dtype=out_dtype,

@@ -11,4 +11,5 @@ from .shampoo import shampoo  # noqa: F401
 from .schedules import warmup_cosine, warmup_linear, constant  # noqa: F401
 from .grad_compress import (  # noqa: F401
     int8_quantize, int8_dequantize, compressed_psum, ErrorFeedback,
+    lowrank_basis, lowrank_psum,
 )

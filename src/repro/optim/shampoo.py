@@ -6,9 +6,13 @@ paper's operation —
 
     L = G G^t = ATA(G^t),    R = G^t G = ATA(G)
 
-— computed with the Strassen-based ATA recursion (repro.core.ata), i.e. at
-(2/7) n^{log2 7} multiplications instead of n^2(n+1)/2, and symmetric by
-construction (only the lower triangle is computed, then mirrored).
+— computed with the Strassen-based ATA recursion, i.e. at (2/7) n^{log2 7}
+multiplications instead of n^2(n+1)/2, and symmetric by construction (only
+the lower triangle is computed, then mirrored).  The block stack goes
+through the Gram service's batched path (``repro.gram.batched_gram``):
+one vmapped mode-dispatched ATA over all blocks — the fused Pallas
+schedule on TPU, the XLA reference recursion elsewhere — with
+``ata_mode=`` exposed to force either.
 
 Structure (after Anil et al.'s distributed Shampoo):
   * large dims are partitioned into blocks of <= block_size; each sub-block
@@ -30,7 +34,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.ata import ata_full
+from ..gram.engine import batched_gram
 from .adamw import Optimizer, clip_by_global_norm
 
 
@@ -85,12 +89,21 @@ def shampoo(lr, *, block_size: int = 1024, stat_interval: int = 1,
             weight_decay=0.1, grad_clip: Optional[float] = 1.0,
             ata_levels: int = 1, ata_leaf: int = 128,
             max_blocks: int = 64,
-            ata_variant: str = "strassen") -> Optimizer:
-    """ATA-powered blocked Shampoo with Adam grafting."""
+            ata_variant: str = "strassen",
+            ata_mode: str = "auto",
+            ata_block: Optional[int] = None) -> Optimizer:
+    """ATA-powered blocked Shampoo with Adam grafting.
+
+    ``ata_mode`` ("auto" | "fused" | "reference") and ``ata_block`` are
+    threaded to the batched Gram path — "auto" runs the fused Pallas
+    schedule on TPU and the reference recursion elsewhere; ``ata_block=
+    None`` consults the gram autotune cache for the tile size.
+    """
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
-    gram = partial(ata_full, levels=ata_levels, leaf=ata_leaf,
-                   variant=ata_variant)
+    gram = partial(batched_gram, levels=ata_levels, leaf=ata_leaf,
+                   variant=ata_variant, mode=ata_mode, block=ata_block,
+                   out_dtype=jnp.float32)
 
     def init(params):
         f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
@@ -143,9 +156,10 @@ def shampoo(lr, *, block_size: int = 1024, stat_interval: int = 1,
                 blk = _to_blocks(g, plan)              # (K, bsm, bsn)
 
                 def upd_stats(_):
-                    # THE paper's operation: block grams via Strassen-ATA
-                    l_new = jax.vmap(lambda b: gram(b.T))(blk)
-                    r_new = jax.vmap(gram)(blk)
+                    # THE paper's operation: block grams via the batched
+                    # Strassen-ATA service path (mode/out_dtype threaded)
+                    l_new = gram(jnp.swapaxes(blk, -1, -2))
+                    r_new = gram(blk)
                     if beta2_stat >= 1.0:
                         return gr["l"] + l_new, gr["r"] + r_new
                     return (beta2_stat * gr["l"] + (1 - beta2_stat) * l_new,

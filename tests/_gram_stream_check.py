@@ -1,0 +1,50 @@
+"""Child script for the sharded streaming-Gram test.  The parent test runs
+it in a subprocess so the main pytest process keeps the default 1-device
+CPU platform (XLA_FLAGS must not be set globally)."""
+import os
+
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core.distributed import shard_map_compat  # noqa: E402
+from repro.gram import sharded_init, update_sharded  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    P_DEV, m, n = 8, 128, 64
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, n), jnp.float32)
+    want = np.asarray(a, np.float64).T @ np.asarray(a, np.float64)
+
+    mesh = jax.make_mesh((P_DEV,), ("data",))
+    shard_map, unchecked = shard_map_compat()
+
+    def stream(chunks):
+        # per-device: fold row-sharded chunks into the block-row shard of C
+        c = sharded_init(n, P_DEV)
+        for chunk in chunks:
+            c = update_sharded(c, chunk, "data", levels=1, leaf=8)
+        return c
+
+    chunk_bounds = [(0, 48), (48, 128)]   # ragged: 48 and 80 rows
+    chunks = tuple(a[lo:hi] for lo, hi in chunk_bounds)
+    got = shard_map(
+        stream, mesh=mesh,
+        in_specs=(P("data", None),),     # pytree prefix: every chunk by rows
+        out_specs=P("data", None), **unchecked,
+    )(chunks)
+    got = np.asarray(jax.device_get(got), np.float64)
+    assert got.shape == (n, n)
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 1e-4, err
+    print(f"OK sharded-stream rel_err={err:.2e}")
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

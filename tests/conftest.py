@@ -1,0 +1,10 @@
+"""Suite-wide isolation: point the gram autotune cache at a per-session
+tmp file so tests neither read a developer's tuned winners under
+``artifacts/autotune/`` nor write into the repo."""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path_factory, monkeypatch):
+    path = tmp_path_factory.getbasetemp() / "gram_autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))

@@ -1,0 +1,104 @@
+"""Autotune cache: search, persistence, invalidation, and the ops-default
+consultation path (REPRO_AUTOTUNE_CACHE pointed at a tmp file so the
+repo-level cache is never touched by tests)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.gram import autotune as at
+from repro.kernels import ops
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "gram_autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    return path
+
+
+def test_bucketing_is_pow2(tmp_cache):
+    assert at.bucket_shape(100, 60) == (128, 64)
+    assert at.bucket_shape(1, 1) == (32, 32)
+
+
+def test_candidate_space_drops_oversized_blocks():
+    cands = at.candidate_space(64, 64, blocks=(32, 128, 512))
+    assert all(c["bk"] <= 128 for c in cands)
+    assert {c["mode"] for c in cands} == {"fused", "reference"}
+
+
+def test_model_score_penalizes_fanin_amplification():
+    """More Strassen levels -> more padded contribution slots -> more
+    modeled read traffic at fixed shape/blocks (the honest null-slot
+    accounting of ata_traffic_model)."""
+    base = {"mode": "fused", "variant": "strassen", "bm": 32, "bk": 32,
+            "bn": 32}
+    s0 = at.model_score(256, 256, {**base, "levels": 0})
+    s2 = at.model_score(256, 256, {**base, "levels": 2})
+    assert s2 > s0
+
+
+def test_autotune_persists_and_lookup_roundtrips(tmp_cache):
+    entry = at.autotune(100, 60, blocks=(16, 32), levels=(0, 1),
+                        measure=False)
+    assert tmp_cache.exists()
+    raw = json.loads(tmp_cache.read_text())
+    assert raw["version"] == 1 and len(raw["entries"]) == 1
+    # any shape in the same bucket hits the same entry
+    assert at.lookup(70, 33) == entry
+    assert at.lookup(100, 60) == entry
+    # different bucket: miss
+    assert at.lookup(1000, 1000) is None
+
+
+def test_autotune_measured_beats_model_ranking(tmp_cache):
+    """measure=True compiles+times the top-K and records the source."""
+    entry = at.autotune(32, 32, blocks=(16, 32), levels=(0, 1),
+                        modes=("reference",), measure=True, interpret=True)
+    assert entry["source"] == "measured"
+    assert entry["measured_s"] > 0
+
+
+def test_cache_mtime_invalidation(tmp_cache):
+    at.autotune(100, 60, blocks=(16,), levels=(0,), measure=False)
+    assert at.lookup(100, 60) is not None
+    tmp_cache.write_text(json.dumps({"version": 1, "entries": {}}))
+    assert at.lookup(100, 60) is None      # re-read after mtime change
+
+
+def test_refresh_overwrites_entry(tmp_cache):
+    e1 = at.autotune(40, 40, blocks=(16,), levels=(0,), measure=False)
+    e2 = at.autotune(40, 40, blocks=(32,), levels=(1,), measure=False)
+    assert e2 == e1                        # cached hit wins without refresh
+    e3 = at.autotune(40, 40, blocks=(32,), levels=(1,), measure=False,
+                     refresh=True)
+    assert e3["bk"] == 32 and e3["levels"] == 1
+
+
+def test_ops_defaults_consult_cache(tmp_cache):
+    """kernels/ops.py block defaults come from the tuned winner (and fall
+    back to 256 when untuned); explicit arguments always win."""
+    assert ops._resolve_blocks("ata", 50, 33, jnp.float32,
+                               bk=None, bn=None) == {"bk": 256, "bn": 256}
+    at.autotune(50, 33, blocks=(16, 32), levels=(0,), measure=False)
+    tuned = at.lookup(50, 33)
+    resolved = ops._resolve_blocks("ata", 50, 33, jnp.float32,
+                                   bk=None, bn=None)
+    assert resolved == {"bk": tuned["bk"], "bn": tuned["bn"]}
+    assert ops._resolve_blocks("ata", 50, 33, jnp.float32,
+                               bk=64, bn=None)["bk"] == 64
+
+
+def test_tuned_blocks_run_correctly(tmp_cache):
+    """End to end: tune a bucket, then call the default-blocked fused op
+    and check numerics against the oracle."""
+    at.autotune(64, 32, blocks=(16,), levels=(1,), modes=("fused",),
+                measure=False)
+    a = jax.random.normal(jax.random.PRNGKey(0), (60, 30), jnp.float32)
+    got = np.asarray(ops.ata_fused(a, levels=1, interpret=True), np.float64)
+    a64 = np.asarray(a, np.float64)
+    want = np.tril(a64.T @ a64)
+    assert np.abs(got - want).max() / np.abs(want).max() < 1e-5

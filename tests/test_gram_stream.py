@@ -1,0 +1,111 @@
+"""Streaming Gram accumulator: any chunking == one-shot ata_full.
+
+The hypothesis-driven any-chunking property lives in test_properties.py
+(gated on hypothesis availability); here the same invariant is pinned by
+deterministic parametrized cases — fp32/bf16, ragged final chunk,
+levels 0-2 — plus the sharded streaming variant via an 8-device
+subprocess (same pattern as test_distributed.py).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gram
+from repro.core.ata import ata_full
+
+HERE = pathlib.Path(__file__).parent
+REPO = HERE.parent
+
+
+def _oracle(a):
+    a64 = np.asarray(a, np.float64)
+    return a64.T @ a64
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 5e-5),
+                                       (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("levels", [0, 1, 2])
+@pytest.mark.parametrize("chunks", [
+    [(0, 96)],                       # one shot through the stream
+    [(0, 32), (32, 64), (64, 96)],   # even chunks
+    [(0, 40), (40, 89), (89, 96)],   # ragged, incl. a 7-row tail
+    [(0, 1), (1, 2), (2, 96)],       # degenerate 1-row chunks
+])
+def test_stream_matches_one_shot(dtype, tol, levels, chunks):
+    m, n = 96, 24
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, n)).astype(dtype)
+    st = gram.stream_init(n)
+    for lo, hi in chunks:
+        st = gram.stream_update(st, a[lo:hi], levels=levels, leaf=8)
+    got = np.asarray(gram.stream_finalize(st), np.float64)
+    want = _oracle(a)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < tol
+    assert int(st.rows) == m
+
+
+def test_stream_matches_ata_full_fused_interpret():
+    """The fused Pallas path (interpret mode) agrees with streaming too."""
+    a = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32)
+    st = gram.stream_init(32)
+    for lo, hi in [(0, 48), (48, 64)]:
+        st = gram.stream_update(st, a[lo:hi], levels=1, mode="fused",
+                                block=16, interpret=True)
+    got = np.asarray(gram.stream_finalize(st), np.float64)
+    want = _oracle(a)
+    assert np.abs(got - want).max() / np.abs(want).max() < 5e-5
+
+
+def test_stream_finalize_tril_only():
+    a = jax.random.normal(jax.random.PRNGKey(2), (20, 10), jnp.float32)
+    st = gram.stream_update(gram.stream_init(10), a, levels=1, leaf=4)
+    low = np.asarray(gram.stream_finalize(st, symmetrize=False))
+    assert np.abs(np.triu(low, 1)).max() == 0.0
+    full = np.asarray(gram.stream_finalize(st))
+    np.testing.assert_allclose(full, full.T, rtol=1e-6)
+
+
+def test_stream_state_is_packed():
+    """The accumulator holds n(n+1)/2 words — the paper's storage bound —
+    not a dense n^2 buffer."""
+    st = gram.stream_init(64)
+    assert st.packed.shape == (64 * 65 // 2,)
+    assert st.n == 64
+
+
+def test_stream_rejects_mismatched_chunk():
+    st = gram.stream_init(8)
+    with pytest.raises(ValueError):
+        gram.stream_update(st, jnp.zeros((4, 9)))
+
+
+def test_normalized_second_moment():
+    """C / rows is the running second moment — the typical consumer
+    reading (preconditioners, whitening)."""
+    a = jax.random.normal(jax.random.PRNGKey(3), (200, 12), jnp.float32)
+    st = gram.stream_init(12)
+    for lo in range(0, 200, 50):
+        st = gram.stream_update(st, a[lo:lo + 50], levels=1, leaf=4)
+    c = np.asarray(gram.stream_finalize(st)) / int(st.rows)
+    want = _oracle(a) / 200
+    np.testing.assert_allclose(c, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sharded_streaming_subprocess():
+    """Row-sharded streaming (reduce-scatter state) == sequential, on 8
+    forced-host devices in a child process (main process keeps 1 device)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(HERE / "_gram_stream_check.py")],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL_OK" in out.stdout

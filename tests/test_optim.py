@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.optim import (adamw, shampoo, apply_updates, warmup_cosine,
-                         int8_quantize, int8_dequantize, ErrorFeedback)
+                         int8_quantize, int8_dequantize, ErrorFeedback,
+                         lowrank_basis)
 
 
 def _run_quadratic(opt, steps=120, shape=(8, 6)):
@@ -61,6 +62,27 @@ def test_shampoo_strassen_equals_classical():
     np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-5)
 
 
+def test_shampoo_ata_mode_reference_matches_default():
+    """ata_mode= is threaded to the batched Gram path; forcing the
+    reference recursion must match the auto-dispatched default."""
+    kw = dict(weight_decay=0.0, block_size=8, precond_interval=3,
+              ata_levels=1, ata_leaf=2)
+    opt_auto = shampoo(0.05, **kw)
+    opt_ref = shampoo(0.05, ata_mode="reference", **kw)
+    target = jax.random.normal(jax.random.PRNGKey(2), (8, 6))
+    outs = []
+    for opt in (opt_auto, opt_ref):
+        params = {"w": jnp.zeros((8, 6))}
+        state = opt.init(params)
+        for i in range(6):
+            grads = jax.tree.map(lambda w: 2 * (w - target), params)
+            updates, state, _ = opt.update(grads, state, params,
+                                           jnp.int32(i))
+            params = apply_updates(params, updates)
+        outs.append(np.asarray(params["w"]))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-6)
+
+
 def test_shampoo_blocks_large_dim():
     """dims > block_size are split into independent blocks; still converges
     and the gram stats have the blocked shape."""
@@ -97,6 +119,50 @@ def test_int8_roundtrip_error_bounded():
     q, scale = int8_quantize(x)
     err = np.abs(np.asarray(int8_dequantize(q, scale) - x))
     assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_lowrank_basis_orthonormal_and_exact_for_lowrank_grads():
+    """The Gram-derived basis is orthonormal, and a gradient that is
+    exactly rank-r is reconstructed exactly by its rank-r projection."""
+    key = jax.random.PRNGKey(3)
+    u = jax.random.normal(key, (64, 3))
+    v = jax.random.normal(jax.random.PRNGKey(4), (12, 3))
+    g = u @ v.T                                  # exactly rank 3, tall
+    q = lowrank_basis(g, 3, levels=1, leaf=4)
+    qq = np.asarray(q.T @ q)
+    np.testing.assert_allclose(qq, np.eye(3), atol=1e-5)
+    recon = np.asarray((g @ q) @ q.T)
+    np.testing.assert_allclose(recon, np.asarray(g), rtol=1e-4, atol=1e-4)
+
+
+def test_lowrank_psum_error_feedback_invariant():
+    """Inside shard_map (1-device axis): emitted + residual tracks the true
+    gradient, and tall 2-D leaves take the low-rank path (residual is the
+    orthogonal complement, not a quantization residual)."""
+    from repro.optim import lowrank_psum
+    from repro.core.distributed import shard_map_compat
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("pod",))
+    shard_map, unchecked = shard_map_compat()
+    g = {"tall": jax.random.normal(jax.random.PRNGKey(5), (64, 8)),
+         "bias": jnp.linspace(-1, 1, 16)}
+    ef = ErrorFeedback.init(g)
+
+    def body(grads, resid):
+        out, new_ef = lowrank_psum(grads, "pod", ErrorFeedback(resid),
+                                   rank=4, levels=1, leaf=4)
+        return out, new_ef.residual
+
+    out, resid = shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                           out_specs=(P(), P()), **unchecked)(g, ef.residual)
+    # emitted + residual == true gradient, leafwise (EF invariant, 1 dev)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(out[k] + resid[k]),
+                                   np.asarray(g[k]), rtol=1e-4, atol=1e-5)
+    # the tall leaf went low-rank: its emission has rank <= 4
+    s = np.linalg.svd(np.asarray(out["tall"]), compute_uv=False)
+    assert (s > 1e-4 * s[0]).sum() <= 4
 
 
 def test_error_feedback_accumulates_residual():

@@ -121,3 +121,32 @@ def test_int8_quantization_error_bound(key, scale_mag):
     q, s = int8_quantize(x)
     err = np.abs(np.asarray(int8_dequantize(q, s)) - np.asarray(x))
     assert err.max() <= float(s) * 0.5 + 1e-6 * scale_mag
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 50), st.integers(2, 24),
+       st.data(), st.sampled_from([jnp.float32, jnp.bfloat16]),
+       st.integers(0, 2))
+@settings(**SET)
+def test_stream_any_chunking_matches_one_shot(key, m, n, data, dtype,
+                                              levels):
+    """ANY row chunking of A through gram.stream — including ragged final
+    chunks — reproduces the one-shot ata_full(A) within dtype tolerance."""
+    from repro import gram
+
+    a = _rand(key, m, n).astype(dtype)
+    n_cuts = data.draw(st.integers(0, min(m - 1, 4)))
+    cuts = sorted(data.draw(
+        st.lists(st.integers(1, max(m - 1, 1)), min_size=n_cuts,
+                 max_size=n_cuts, unique=True))) if m > 1 else []
+    bounds = [0, *cuts, m]
+    st_state = gram.stream_init(n)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        st_state = gram.stream_update(st_state, a[lo:hi], levels=levels,
+                                      leaf=8)
+    got = np.asarray(gram.stream_finalize(st_state), np.float64)
+    a64 = np.asarray(a, np.float64)
+    want = a64.T @ a64
+    scale = max(np.abs(want).max(), 1.0)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    assert np.abs(got - want).max() / scale < tol
+    assert int(st_state.rows) == m
