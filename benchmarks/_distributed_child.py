@@ -1,0 +1,146 @@
+"""Child: distributed-gram comm benchmark on an 8-device host platform.
+
+Run by ``benchmarks.bench_distributed`` in a subprocess (XLA_FLAGS must be
+set before jax initializes); writes ``BENCH_distributed.json``.
+
+Per (shape x scheme): the cost model's closed-form per-device wire bytes
+and message rounds (``core.cost_model.gram_comm_cost``) next to the
+*measured* collective traffic of the actual compiled program — a
+``roofline.hlo_census.collective_census`` over the post-SPMD HLO (real
+instructions and shapes, the same ring wire model per op) — plus wall
+clock.  The acceptance gates: (1) modeled vs measured volume agrees
+within a small factor for every scheme, (2) the modeled allreduce-vs-ring
+ranking flips between the tall-skinny and the wide shape, and the
+measured volumes reproduce the flip (the cost-model crossover that makes
+scheme="auto" trustworthy).
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=8"
+
+import numpy as np                                   # noqa: E402
+import jax                                           # noqa: E402
+import jax.numpy as jnp                              # noqa: E402
+from jax.sharding import Mesh                        # noqa: E402
+
+from repro.core import cost_model, distributed_gram  # noqa: E402
+from repro.roofline.hlo_census import collective_census  # noqa: E402
+
+from benchmarks.common import timeit, write_json     # noqa: E402
+
+LEVELS, LEAF = 1, 64
+
+# 8 devices: (mesh shape, axis names, distributed_gram kwargs, model axes)
+SCHEMES = {
+    "allreduce": ((8,), ("data",), {}, dict(rows=8)),
+    "reducescatter": ((8,), ("data",), {}, dict(rows=8)),
+    "ring": ((2, 4), ("data", "model"),
+             dict(row_axis="data", col_axis="model"),
+             dict(rows=2, ring=4)),
+    "bfs25d": ((2, 1, 4), ("rep", "data", "model"),
+               dict(row_axis="data", col_axis="model", rep_axis="rep"),
+               dict(rows=1, ring=4, rep=2)),
+}
+
+
+def _mesh(shape, names):
+    return Mesh(np.array(jax.devices()[:int(np.prod(shape))]).reshape(shape),
+                names)
+
+
+def _measure(scheme, m, n):
+    mesh_shape, names, kw, axes = SCHEMES[scheme]
+    mesh = _mesh(mesh_shape, names)
+    modeled = cost_model.gram_comm_cost(scheme, m, n, dtype_bytes=4, **axes)
+
+    def fn(a):
+        return distributed_gram(a, mesh, scheme=scheme, levels=LEVELS,
+                                leaf=LEAF, assemble=False
+                                if scheme in ("ring", "bfs25d") else True,
+                                **kw)
+    spec = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    compiled = jax.jit(fn).lower(spec).compile()
+    ops = collective_census(compiled.as_text())
+    measured = sum(op.wire_bytes for op in ops)
+    a = jax.device_put(jax.random.normal(jax.random.PRNGKey(0), (m, n),
+                                         jnp.float32))
+    wall = timeit(compiled, a, warmup=1, iters=3)
+    return {
+        "scheme": scheme, "m": m, "n": n,
+        "mesh": dict(zip(names, mesh_shape)),
+        "modeled_wire_bytes": modeled.wire_bytes,
+        "modeled_messages": modeled.messages,
+        "modeled_flops": modeled.flops,
+        "devices": modeled.devices,
+        "measured_wire_bytes": measured,
+        "measured_collectives": [
+            {"kind": op.kind, "bytes": op.wire_bytes,
+             "group": op.group_size} for op in ops],
+        "wall_s": wall,
+    }
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    quick = "--quick" in sys.argv
+    tall = (1024, 128) if quick else (4096, 256)
+    wide = (128, 1024) if quick else (256, 2048)
+
+    rows = []
+    for m, n in (tall, wide):
+        for scheme in SCHEMES:
+            r = _measure(scheme, m, n)
+            ratio = r["measured_wire_bytes"] / max(r["modeled_wire_bytes"],
+                                                   1.0)
+            r["measured_over_modeled"] = ratio
+            rows.append(r)
+            print(f"[distributed] {scheme:>13} {m}x{n}: modeled "
+                  f"{r['modeled_wire_bytes']/1e6:7.3f} MB, measured "
+                  f"{r['measured_wire_bytes']/1e6:7.3f} MB "
+                  f"(x{ratio:4.2f}), {r['wall_s']*1e3:7.2f} ms")
+            # (1) the model tracks the compiled program's collectives
+            assert 0.3 < ratio < 3.0, (scheme, m, n, ratio)
+
+    def get(shape, scheme):
+        return next(r for r in rows
+                    if (r["m"], r["n"]) == shape and r["scheme"] == scheme)
+
+    # (2) the allreduce-vs-ring crossover: tall-skinny favors the row
+    # reduction, wide favors the ring family — modeled AND measured.
+    cross = {}
+    for label, shape in (("tall", tall), ("wide", wide)):
+        ar, ring = get(shape, "allreduce"), get(shape, "ring")
+        cross[label] = {
+            "shape": shape,
+            "modeled_allreduce_minus_ring":
+                ar["modeled_wire_bytes"] - ring["modeled_wire_bytes"],
+            "measured_allreduce_minus_ring":
+                ar["measured_wire_bytes"] - ring["measured_wire_bytes"],
+        }
+    modeled_flip = (cross["tall"]["modeled_allreduce_minus_ring"] < 0 <
+                    cross["wide"]["modeled_allreduce_minus_ring"])
+    measured_flip = (cross["tall"]["measured_allreduce_minus_ring"] < 0 <
+                     cross["wide"]["measured_allreduce_minus_ring"])
+    cross["modeled_flip"] = modeled_flip
+    cross["measured_flip"] = measured_flip
+    print(f"[distributed] crossover modeled_flip={modeled_flip} "
+          f"measured_flip={measured_flip}")
+    assert modeled_flip and measured_flip, cross
+
+    # the auto scheme agrees with the measured winner per shape (volume)
+    for label, shape in (("tall", tall), ("wide", wide)):
+        by_measured = min((r for r in rows if (r["m"], r["n"]) == shape),
+                          key=lambda r: r["measured_wire_bytes"])
+        cross.setdefault("measured_winner", {})[label] = \
+            by_measured["scheme"]
+
+    path = write_json("BENCH_distributed.json",
+                      {"rows": rows, "crossover": cross})
+    print(f"[distributed] wrote {path}")
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

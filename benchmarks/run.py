@@ -12,10 +12,13 @@ roofline  3-term roofline over dry-run artifacts      <- brief §Roofline
 ata   fused-pipeline trajectory -> BENCH_ata.json     <- DESIGN.md §4
 gram_service  batched vs sequential serving -> BENCH_gram_service.json
                                                       <- DESIGN.md §10
+distributed  modeled vs measured comm volume per scheme (8 fake devices)
+                                   -> BENCH_distributed.json <- DESIGN.md §5
 
-``--smoke`` runs the fast interpret-mode kernel test suite instead of the
-benchmarks (CI smoke target: validates the fused Pallas pipeline on CPU
-in a couple of minutes).
+``--smoke`` runs the fast interpret-mode kernel test suite plus the
+quick distributed comm benchmark instead of the full benchmarks (CI
+smoke target: validates the fused Pallas pipeline and the comm cost
+model on CPU in a couple of minutes).
 """
 import argparse
 import subprocess
@@ -24,7 +27,7 @@ import time
 
 from . import (bench_exec_time, bench_speedup, bench_efficiency,
                bench_karpflatt, bench_flops, bench_comm, bench_roofline,
-               bench_ata, bench_gram_service)
+               bench_ata, bench_gram_service, bench_distributed)
 
 ALL = [
     ("fig5_exec_time", bench_exec_time.run),
@@ -36,11 +39,12 @@ ALL = [
     ("roofline", bench_roofline.run),
     ("ata_fused", bench_ata.run),
     ("gram_service", bench_gram_service.run),
+    ("distributed", bench_distributed.run),
 ]
 
 SMOKE_TESTS = ["tests/test_fused_ata.py", "tests/test_kernels.py",
                "tests/test_core_ata.py", "tests/test_gram_stream.py",
-               "tests/test_gram_engine.py"]
+               "tests/test_gram_engine.py", "tests/test_comm_cost.py"]
 
 
 def main(argv=None):
@@ -48,11 +52,19 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="run the interpret-mode kernel tests and exit")
+                    help="run the interpret-mode kernel tests plus the "
+                         "quick distributed comm benchmark and exit")
     args = ap.parse_args(argv)
     if args.smoke:
-        sys.exit(subprocess.call(
-            [sys.executable, "-m", "pytest", "-q", *SMOKE_TESTS]))
+        # multidevice-marked tests are excluded (they pay a child
+        # interpreter each and run in CI's dedicated multidevice job);
+        # the quick distributed bench below is the multi-device signal
+        rc = subprocess.call(
+            [sys.executable, "-m", "pytest", "-q",
+             "-m", "not multidevice", *SMOKE_TESTS])
+        if rc == 0:
+            bench_distributed.run(quick=True)
+        sys.exit(rc)
     failures = []
     for name, fn in ALL:
         if args.only and args.only not in name:

@@ -41,6 +41,29 @@ def main():
     err = np.abs(np.asarray(c) - ref).max() / np.abs(ref).max()
     print(f"{'half-ring':>14}: rel err {err:.2e}  (2x4 mesh; diagonal "
           f"blocks ATA, off-diagonal Strassen, floor(T/2) ppermute hops)")
+
+    # 2.5D: replicate A over a 'rep' axis and deal the half-ring's
+    # Strassen block tasks BFS-style across the replica groups —
+    # ceil(floor(T/2)/c) sequential hops instead of floor(T/2).
+    from repro.launch.mesh import make_gram_mesh
+    mesh3 = make_gram_mesh(8, rep=2, ring=4)       # (rep=2, data=1, model=4)
+    a3 = jax.device_put(a, NamedSharding(mesh3, P("data", "model")))
+    c = distributed_gram(a3, mesh3, scheme="bfs25d", row_axis="data",
+                         col_axis="model", rep_axis="rep", levels=1, leaf=64)
+    err = np.abs(np.asarray(c) - ref).max() / np.abs(ref).max()
+    print(f"{'bfs25d (2.5D)':>14}: rel err {err:.2e}  (2x1x4 mesh; 2 "
+          f"replica groups, 1 skew + ceil(2/2)-1 hops each)")
+
+    # auto: the comm cost model (core.cost_model.rank_gram_schemes) picks
+    # the scheme from the shape and the mesh axes.
+    from repro.core.cost_model import rank_gram_schemes
+    ranked = rank_gram_schemes(a.shape[0], a.shape[1], rows=1, ring=4,
+                               rep=2)
+    c = distributed_gram(a3, mesh3, scheme="auto", row_axis="data",
+                         col_axis="model", rep_axis="rep", levels=1, leaf=64)
+    err = np.abs(np.asarray(c) - ref).max() / np.abs(ref).max()
+    print(f"{'auto':>14}: rel err {err:.2e}  (model ranking: "
+          f"{[r.scheme for r in ranked]})")
     print("OK")
 
 

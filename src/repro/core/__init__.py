@@ -6,8 +6,9 @@ from .symmetry import (
     symmetrize_from_lower, tri_count, tri_index, tri_coords,
 )
 from .distributed import (
-    gram_allreduce, gram_reducescatter, gram_ring, distributed_gram,
-    ring_layout_coords,
+    gram_allreduce, gram_reducescatter, gram_ring, gram_bfs25d,
+    distributed_gram, ring_layout_coords, assemble_ring_gram,
+    ring_stack_len, feasible_schemes, default_gram_axes,
 )
 from .schedule import (
     plan_ata, plan_matmul, evaluate_ata_plan, evaluate_matmul_plan,
@@ -21,6 +22,8 @@ __all__ = [
     "schedule",
     "pack_tril", "unpack_tril", "pack_tril_blocks", "unpack_tril_blocks",
     "symmetrize_from_lower", "tri_count", "tri_index", "tri_coords",
-    "gram_allreduce", "gram_reducescatter", "gram_ring", "distributed_gram",
-    "ring_layout_coords", "cost_model",
+    "gram_allreduce", "gram_reducescatter", "gram_ring", "gram_bfs25d",
+    "distributed_gram", "ring_layout_coords", "assemble_ring_gram",
+    "ring_stack_len", "feasible_schemes", "default_gram_axes",
+    "cost_model",
 ]

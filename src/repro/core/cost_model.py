@@ -358,3 +358,149 @@ def simulate_metrics(n: int, ps, sp: SimParams = SimParams()) -> dict:
 TPU_V5E_BF16_FLOPS = 197e12       # per chip
 TPU_V5E_HBM_BW = 819e9            # bytes/s
 TPU_V5E_ICI_BW = 50e9             # bytes/s per link
+TPU_V5E_ICI_LATENCY = 1e-6        # per collective round (s), order of mag
+
+
+# ---------------------------------------------------------------------------
+# Distributed-gram communication model (beyond-paper; DESIGN.md §5).
+#
+# Per-device wire traffic and sequential message rounds of each
+# ``core.distributed`` scheme, as closed forms in (m, n, R, T, c, dtype) —
+# R = row-axis size, T = ring/col-axis size, c = replication factor.
+# Collectives are costed with the standard ring algorithms (the same model
+# ``roofline.hlo_census.collective_census`` applies per instruction, so
+# modeled and measured volumes are directly comparable):
+#
+#   all-reduce of V bytes over g devices:  2 V (g-1)/g   wire, 2(g-1) rounds
+#   reduce-scatter:                          V (g-1)/g   wire,  (g-1) rounds
+#   collective-permute:                      V            wire,   1    round
+#
+# The per-device compute term (MAC flops) is included because the schemes
+# engage different device counts on the same mesh: the row-only schemes
+# leave the col/rep axes idle (replicated compute), the ring splits work
+# R*T ways, and bfs25d splits the ring's block tasks a further c ways.
+# ---------------------------------------------------------------------------
+
+GRAM_SCHEMES = ("allreduce", "reducescatter", "ring", "bfs25d")
+
+
+@dataclass
+class GramCommCost:
+    """Per-device cost of one distributed-gram scheme instance."""
+    scheme: str
+    devices: int            # devices engaged by the scheme's collectives
+    wire_bytes: float       # per-device bytes on the wire (ring model)
+    messages: int           # sequential collective rounds (latency term)
+    flops: float            # per-device MAC flops (incl. duplicated work)
+    mem_input_factor: int   # input replication (c for bfs25d, else 1)
+
+    def time(self, *, alpha: float = TPU_V5E_ICI_LATENCY,
+             ici_bw: float = TPU_V5E_ICI_BW,
+             flop_rate: float = TPU_V5E_BF16_FLOPS) -> float:
+        """alpha * rounds + bytes / bw + flops / rate."""
+        return (alpha * self.messages + self.wire_bytes / ici_bw
+                + self.flops / flop_rate)
+
+
+def gram_comm_cost(scheme: str, m: int, n: int, *, rows: int = 1,
+                   ring: int | None = None, rep: int | None = None,
+                   dtype_bytes: int = 4,
+                   out_bytes: int | None = None) -> GramCommCost:
+    """Cost of ``scheme`` for an (m, n) A on axis sizes (rows=R, ring=T,
+    rep=c).  ``ring``/``rep`` are ignored by the schemes that do not use
+    those axes (their compute is *replicated* there, which the flops term
+    deliberately does not discount).
+
+    ``dtype_bytes`` is the width of A — what the ring family's
+    ``ppermute``s ship; ``out_bytes`` (default: same) is the wire width
+    of C — what every reduction ships.  They differ when the caller
+    reduces in a higher precision than the input (bf16 A, fp32 C), and
+    charging both at the output width would overcharge the ring family's
+    permute phase 2x."""
+    R = max(int(rows), 1)
+    b_in = float(dtype_bytes)
+    b_out = float(dtype_bytes if out_bytes is None else out_bytes)
+    total_macs = 2.0 * m * n * n / 2.0        # tril gram: ~m n^2 / 2 MACs x2
+
+    if scheme == "allreduce":
+        return GramCommCost(
+            scheme=scheme, devices=R,
+            wire_bytes=2.0 * n * n * b_out * (R - 1) / R,
+            messages=2 * (R - 1),
+            flops=total_macs / R, mem_input_factor=1)
+    if scheme == "reducescatter":
+        return GramCommCost(
+            scheme=scheme, devices=R,
+            wire_bytes=1.0 * n * n * b_out * (R - 1) / R,
+            messages=R - 1,
+            flops=total_macs / R, mem_input_factor=1)
+
+    if ring is None or ring < 1:
+        raise ValueError(f"scheme {scheme!r} needs ring=T")
+    T = int(ring)
+    half = T // 2
+    m_loc, n_loc = m / R, n / T
+    # per-device block work: diagonal ATA (~half the MACs of a full block
+    # product) + `half` off-diagonal Strassen blocks, reduced over rows.
+    blk_macs = 2.0 * m_loc * n_loc * n_loc
+
+    if scheme == "ring":
+        permute = half * m_loc * n_loc * b_in
+        stack = (half + 1) * n_loc * n_loc * b_out
+        return GramCommCost(
+            scheme=scheme, devices=R * T,
+            wire_bytes=permute + 2.0 * stack * (R - 1) / R,
+            messages=half + 2 * (R - 1),
+            flops=blk_macs * (half + 0.5), mem_input_factor=1)
+
+    if scheme == "bfs25d":
+        c = max(int(rep or 1), 1)
+        n_off = -(-half // c)                 # ceil(half / c)
+        g = c * R                             # merge-psum group size
+        # one skew + (n_off - 1) stride-c hops = n_off permutes total
+        permute = n_off * m_loc * n_loc * b_in
+        stack = (half + 1) * n_loc * n_loc * b_out
+        return GramCommCost(
+            scheme=scheme, devices=R * T * c,
+            wire_bytes=permute + 2.0 * stack * (g - 1) / g,
+            messages=n_off + 2 * (g - 1),
+            # each group: its n_off Strassen tasks + the duplicated diagonal
+            flops=blk_macs * (n_off + 0.5), mem_input_factor=c)
+
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def rank_gram_schemes(m: int, n: int, *, rows: int = 1,
+                      ring: int | None = None, rep: int | None = None,
+                      dtype_bytes: int = 4,
+                      out_bytes: int | None = None,
+                      alpha: float = TPU_V5E_ICI_LATENCY,
+                      ici_bw: float = TPU_V5E_ICI_BW,
+                      flop_rate: float | None = None,
+                      schemes=None) -> list[GramCommCost]:
+    """Feasibility-agnostic ranking (cheapest modeled time first) of the
+    requested ``schemes`` (default: every scheme the axis sizes allow).
+
+    ``flop_rate`` defaults to the dtype-matched MXU rate (bf16 peak
+    scaled by 2/dtype_bytes — fp32 runs at roughly half the bf16 rate),
+    so the compute term is weighted consistently with the dtype-correct
+    wire term; schemes engage different device counts, so a mismatched
+    rate would bias the ranking non-uniformly."""
+    if flop_rate is None:
+        flop_rate = TPU_V5E_BF16_FLOPS * 2.0 / max(dtype_bytes, 2)
+    if schemes is None:
+        schemes = ["allreduce", "reducescatter"]
+        if ring:
+            schemes.append("ring")
+            if rep:
+                schemes.append("bfs25d")
+    costs = [gram_comm_cost(s, m, n, rows=rows, ring=ring, rep=rep,
+                            dtype_bytes=dtype_bytes, out_bytes=out_bytes)
+             for s in schemes]
+    return sorted(costs, key=lambda cst: cst.time(
+        alpha=alpha, ici_bw=ici_bw, flop_rate=flop_rate))
+
+
+def choose_gram_scheme(m: int, n: int, **kw) -> str:
+    """The cheapest scheme per :func:`rank_gram_schemes`."""
+    return rank_gram_schemes(m, n, **kw)[0].scheme

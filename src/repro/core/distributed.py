@@ -29,8 +29,24 @@ becomes a mesh decomposition and the reductions become axis collectives:
   product (collective-matmul pattern), turning the paper's blocking
   Send/Recv into bandwidth-optimal, compute-overlapped ICI traffic.
 
-All three run inside ``shard_map``; ``distributed_gram`` is the pjit-level
-wrapper over a globally-sharded A.
+* ``gram_bfs25d`` — communication-avoiding 2.5D variant (Ballard et al.,
+  arXiv:1202.3173; Benson & Ballard, arXiv:1409.2908): a third mesh axis
+  ``rep_axis`` of size c replicates A (the 2.5D memory-for-communication
+  trade), and the half-ring's independent Strassen/HASA block tasks are
+  dealt out BFS-style (CAPS's breadth-first step) across the c replication
+  groups — group r takes ring steps ``s ≡ r+1 (mod c)``.  Each group skews
+  its A copy once (one ``ppermute`` jump over (rep, col)) and then hops by
+  c, so the ring-permute rounds on the critical path drop from floor(T/2)
+  to ceil(floor(T/2)/c) while each task still falls into the same fused
+  local kernel (ATA diagonal, Strassen off-diagonal).  A final ``psum``
+  over (rep, row) — small payload: the packed block stack, not A — merges
+  the groups' disjoint block stacks into the half-ring layout of
+  ``gram_ring``.
+
+All four run inside ``shard_map``; ``distributed_gram`` is the pjit-level
+wrapper over a globally-sharded A, and ``scheme="auto"`` picks the scheme
+by the communication cost model in ``core.cost_model``
+(``rank_gram_schemes``).
 """
 from __future__ import annotations
 
@@ -46,8 +62,10 @@ from .strassen import strassen_matmul
 from .symmetry import symmetrize_from_lower
 
 __all__ = [
-    "gram_allreduce", "gram_reducescatter", "gram_ring",
-    "distributed_gram", "ring_layout_coords", "shard_map_compat",
+    "gram_allreduce", "gram_reducescatter", "gram_ring", "gram_bfs25d",
+    "distributed_gram", "ring_layout_coords", "assemble_ring_gram",
+    "ring_stack_len", "feasible_schemes", "default_gram_axes",
+    "shard_map_compat",
 ]
 
 
@@ -78,10 +96,6 @@ def shard_map_compat():
     return sm, unchecked
 
 
-def _shard_map():
-    return shard_map_compat()[0]
-
-
 # ---------------------------------------------------------------------------
 # shard_map bodies (take *local* shards, use collectives explicitly)
 # ---------------------------------------------------------------------------
@@ -89,7 +103,8 @@ def _shard_map():
 def gram_allreduce(a_local: jax.Array, row_axis: str, *,
                    levels=2, leaf: int = 256,
                    variant: str = "strassen", mode: str = "auto",
-                   out_dtype=None) -> jax.Array:
+                   out_dtype=None,
+                   interpret: Optional[bool] = None) -> jax.Array:
     """Paper-faithful: local ATA + one all-reduce over the row axis.
 
     Per-shard compute goes through the fused leaf-task pipeline on TPU
@@ -102,7 +117,7 @@ def gram_allreduce(a_local: jax.Array, row_axis: str, *,
     Returns the full symmetric C, replicated over ``row_axis``.
     """
     c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant,
-                       mode=mode,
+                       mode=mode, interpret=interpret,
                        out_dtype=out_dtype or a_local.dtype)
     return jax.lax.psum(c_local, row_axis)
 
@@ -110,11 +125,12 @@ def gram_allreduce(a_local: jax.Array, row_axis: str, *,
 def gram_reducescatter(a_local: jax.Array, row_axis: str, *,
                        levels=2, leaf: int = 256,
                        variant: str = "strassen", mode: str = "auto",
-                       out_dtype=None) -> jax.Array:
+                       out_dtype=None,
+                       interpret: Optional[bool] = None) -> jax.Array:
     """Beyond-paper: local ATA + reduce-scatter (C sharded by rows over
     ``row_axis``); bandwidth term / P, no replicated C."""
     c_local = ata_full(a_local, levels=levels, leaf=leaf, variant=variant,
-                       mode=mode,
+                       mode=mode, interpret=interpret,
                        out_dtype=out_dtype or a_local.dtype)
     return jax.lax.psum_scatter(c_local, row_axis, scatter_dimension=0,
                                 tiled=True)
@@ -124,7 +140,8 @@ def gram_ring(a_local: jax.Array, col_axis: str,
               row_axis: Optional[str] = None, *,
               levels=2, leaf: int = 256,
               variant: str = "strassen", mode: str = "auto",
-              out_dtype=None, axis_size: Optional[int] = None) -> jax.Array:
+              out_dtype=None, axis_size: Optional[int] = None,
+              interpret: Optional[bool] = None) -> jax.Array:
     """Half-ring symmetric collective gram (beyond-paper TPU schedule).
 
     Device layout: ``a_local`` is the (rows/R, cols/T) shard of A.
@@ -157,7 +174,8 @@ def gram_ring(a_local: jax.Array, col_axis: str,
     # Step 0: diagonal block — symmetric, use ATA (half the multiplications).
     out_dtype = out_dtype or a_local.dtype   # wire dtype (see gram_allreduce)
     blocks = [ata_full(a_local, levels=levels, leaf=leaf, variant=variant,
-                       mode=mode, out_dtype=out_dtype)]
+                       mode=mode, out_dtype=out_dtype,
+                       interpret=interpret)]
 
     cur = a_local
     for s in range(1, half + 1):
@@ -168,19 +186,117 @@ def gram_ring(a_local: jax.Array, col_axis: str,
         # Device c now holds column block (c - s) % T.
         blk = strassen_matmul(a_local.T, cur, levels=levels, leaf=leaf,
                               variant=variant, mode=mode,
-                              out_dtype=out_dtype)
+                              out_dtype=out_dtype, interpret=interpret)
         if s == half and T % 2 == 0:
             # At the antipodal step each unordered pair {c, c-T/2} appears on
             # both devices: keep it only on c < T/2 (SPMD runs the same
             # program everywhere; masking is the "incomplete level" analogue).
-            keep = (c < half).astype(blk.dtype)
-            blk = blk * keep
+            # jnp.where, not multiply-by-mask: 0 * Inf = NaN would let a
+            # non-finite discarded block poison the stack (and, under
+            # bfs25d, the psum that merges group stacks).
+            blk = jnp.where(c < half, blk, jnp.zeros_like(blk))
         blocks.append(blk)
 
     out = jnp.stack(blocks)  # (half+1, n_loc, n_loc)
     if row_axis is not None:
         out = jax.lax.psum(out, row_axis)
     return out
+
+
+def ring_stack_len(T: int) -> int:
+    """Stack entries of the half-ring layout: floor(T/2) + 1."""
+    return T // 2 + 1
+
+
+def gram_bfs25d(a_local: jax.Array, col_axis: str, rep_axis: str,
+                row_axis: Optional[str] = None, *,
+                levels=2, leaf: int = 256,
+                variant: str = "strassen", mode: str = "auto",
+                out_dtype=None, col_size: Optional[int] = None,
+                rep_size: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Communication-avoiding 2.5D half-ring gram (see module docstring).
+
+    Device layout: ``a_local`` is the (rows/R, cols/T) shard of A,
+    *replicated* over ``rep_axis`` (size c) — the 2.5D extra-memory axis.
+    The half-ring's block tasks are distributed BFS-style over the c
+    replication groups:
+
+    * step 0 (diagonal, ATA — the paper's symmetric half-work recursion)
+      is computed by every group (SPMD) and kept on group 0 only;
+    * off-diagonal step s in 1..floor(T/2) (Strassen — the paper's HASA
+      role) belongs to group (s-1) mod c.  Group r reaches its first step
+      with ONE skewing ``ppermute`` over the combined (rep, col) axes
+      (rotation by r+1 inside each group's ring) and then advances by c
+      hops per ``ppermute``, so each group performs only
+      ``ceil(floor(T/2)/c)`` sequential hops.
+
+    Each group scatters its blocks into disjoint slots of an oversized
+    stack (slot = global ring step; groups own disjoint residues mod c,
+    masked slots hold exact zeros via ``jnp.where``), and one ``psum``
+    over (rep, row) merges the stacks.  The result is identical in
+    layout to ``gram_ring``: shape (floor(T/2)+1, n_loc, n_loc), entry s
+    on ring device d is C[d, (d - s) % T] (``ring_layout_coords``),
+    replicated over ``rep_axis``.
+    """
+    if col_size is None or rep_size is None:
+        raise ValueError(
+            "gram_bfs25d needs static col_size/rep_size — pass "
+            "mesh.shape[col_axis] and mesh.shape[rep_axis]")
+    T, c = col_size, rep_size
+    half = T // 2
+    n_off = -(-half // c)              # sequential hops per group
+    r = jax.lax.axis_index(rep_axis)
+    d = jax.lax.axis_index(col_axis)
+    n_loc = a_local.shape[1]
+    out_dtype = out_dtype or a_local.dtype   # wire dtype (see gram_allreduce)
+
+    # Diagonal (ATA): computed by every replication group — the block is
+    # 1 of the ~half/c + 1 per-device tasks, so the duplication is bounded
+    # — and kept on group 0 only (jnp.where: exact zeros elsewhere, a
+    # correctness requirement for the merging psum below).
+    diag = ata_full(a_local, levels=levels, leaf=leaf, variant=variant,
+                    mode=mode, out_dtype=out_dtype, interpret=interpret)
+    diag = jnp.where(r == 0, diag, jnp.zeros_like(diag))
+
+    # Oversized stack: slot s holds ring step s; slots beyond ``half``
+    # only ever receive masked (zero) blocks and are sliced off before the
+    # psum.  Sized so every group's last write index (n_off*c) is in
+    # bounds — dynamic_update_slice must never clamp.
+    stack = jnp.zeros((1 + n_off * c, n_loc, n_loc), out_dtype)
+    stack = stack.at[0].set(diag)
+
+    if n_off > 0:
+        # Skew: group r starts at step s0 = r + 1.  One ppermute over the
+        # *combined* (rep, col) axes realizes all groups' different
+        # rotations at once (linear index = rep * T + col).
+        skew = []
+        for rr in range(c):
+            for j in range(T):
+                skew.append((rr * T + j, rr * T + (j + rr + 1) % T))
+        cur = jax.lax.ppermute(a_local, (rep_axis, col_axis), skew)
+        hop = [(i, (i + c) % T) for i in range(T)]
+        for t in range(n_off):
+            if t > 0:
+                # Advance every group by c hops in one message; XLA's async
+                # collective-permute overlaps it with the previous block
+                # product (same pattern as gram_ring).
+                cur = jax.lax.ppermute(cur, col_axis, hop)
+            s = r + 1 + t * c          # this group's global ring step
+            blk = strassen_matmul(a_local.T, cur, levels=levels, leaf=leaf,
+                                  variant=variant, mode=mode,
+                                  out_dtype=out_dtype, interpret=interpret)
+            valid = s <= half
+            if T % 2 == 0:
+                # antipodal dedup, as in gram_ring (jnp.where — see there)
+                valid = valid & ((s != half) | (d < half))
+            blk = jnp.where(valid, blk, jnp.zeros_like(blk))
+            stack = jax.lax.dynamic_update_slice(
+                stack, blk[None].astype(out_dtype), (s, 0, 0))
+
+    out = stack[:half + 1]
+    axes = (rep_axis,) if row_axis is None else (rep_axis, row_axis)
+    return jax.lax.psum(out, axes)
 
 
 def ring_layout_coords(T: int) -> list[tuple[int, int, int]]:
@@ -202,13 +318,49 @@ def ring_layout_coords(T: int) -> list[tuple[int, int, int]]:
 # pjit-level wrapper
 # ---------------------------------------------------------------------------
 
+def default_gram_axes(mesh: Mesh) -> dict:
+    """Map a mesh onto ``distributed_gram``'s (row, col, rep) axis kwargs
+    by the repo's naming convention — "data" rows, "model" ring, "rep"
+    replication — falling back to positional order for foreign names."""
+    names = list(mesh.axis_names)
+    row = "data" if "data" in names else next(
+        (a for a in names if a != "rep"), names[0])
+    # never reuse the row axis as the ring axis (a ("model",)-only mesh
+    # has row == "model"; P(row, row) in_specs would fail at compile time)
+    col = "model" if ("model" in names and row != "model") else next(
+        (a for a in names if a not in (row, "rep")), None)
+    rep = "rep" if "rep" in names else None
+    return {"row_axis": row, "col_axis": col, "rep_axis": rep}
+
+
+def feasible_schemes(m: int, n: int, mesh: Mesh, *,
+                     row_axis: str = "data",
+                     col_axis: Optional[str] = None,
+                     rep_axis: Optional[str] = None) -> list[str]:
+    """Schemes runnable for an (m, n) A on ``mesh`` with the given axes
+    (shard_map divisibility + axis availability)."""
+    sizes = dict(mesh.shape)
+    out = []
+    if row_axis in sizes and m % sizes[row_axis] == 0:
+        out += ["allreduce"]
+        if n % sizes[row_axis] == 0:
+            out += ["reducescatter"]
+        if col_axis in sizes and n % sizes[col_axis] == 0:
+            out += ["ring"]
+            if rep_axis in sizes:
+                out += ["bfs25d"]
+    return out
+
+
 def distributed_gram(a: jax.Array, mesh: Mesh, *,
                      scheme: str = "allreduce",
                      row_axis: str = "data",
                      col_axis: Optional[str] = None,
+                     rep_axis: Optional[str] = None,
                      levels=2, leaf: int = 256,
                      variant: str = "strassen", mode: str = "auto",
                      out_dtype=None,
+                     interpret: Optional[bool] = None,
                      assemble: bool = True) -> jax.Array:
     """Compute C = A^t A for a globally sharded A on ``mesh``.
 
@@ -220,8 +372,39 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
                          rebuilt replicated; production keeps the circulant
                          block layout (sharded over ``col_axis``) —
                          n(n+1)/2-ish storage, zero post-processing.
+      "bfs25d"         — 2.5D: ring + a replication axis ``rep_axis`` that
+                         distributes the Strassen block tasks BFS-style
+                         across replication groups (fewer, larger
+                         messages; c-fold A memory).  Same output layout
+                         as "ring".
+      "auto"           — rank the feasible schemes with
+                         ``cost_model.rank_gram_schemes`` (bytes moved +
+                         message count + per-device flops) and run the
+                         cheapest.
     """
-    shard_map = _shard_map()
+    shard_map, unchecked = shard_map_compat()
+
+    if scheme == "auto":
+        from . import cost_model
+        cands = feasible_schemes(a.shape[0], a.shape[1], mesh,
+                                 row_axis=row_axis, col_axis=col_axis,
+                                 rep_axis=rep_axis)
+        if not cands:
+            raise ValueError(
+                f"no feasible scheme for shape {a.shape} on mesh axes "
+                f"{dict(mesh.shape)}")
+        sizes = dict(mesh.shape)
+        ranked = cost_model.rank_gram_schemes(
+            a.shape[0], a.shape[1],
+            rows=sizes.get(row_axis, 1),
+            ring=sizes.get(col_axis) if col_axis else None,
+            rep=sizes.get(rep_axis) if rep_axis else None,
+            # ppermutes ship A (input dtype); reductions ship C (wire
+            # dtype — the schemes default out_dtype to the input dtype)
+            dtype_bytes=jnp.dtype(a.dtype).itemsize,
+            out_bytes=jnp.dtype(out_dtype or a.dtype).itemsize,
+            schemes=cands)
+        scheme = ranked[0].scheme
 
     if scheme in ("allreduce", "reducescatter"):
         body = {
@@ -230,28 +413,43 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
         }[scheme]
         fn = functools.partial(body, row_axis=row_axis, levels=levels,
                                leaf=leaf, variant=variant, mode=mode,
-                               out_dtype=out_dtype)
+                               out_dtype=out_dtype, interpret=interpret)
         out_spec = P() if scheme == "allreduce" else P(row_axis)
         return shard_map(
             fn, mesh=mesh, in_specs=P(row_axis, None), out_specs=out_spec,
+            **unchecked,
         )(a)
 
-    if scheme == "ring":
+    if scheme in ("ring", "bfs25d"):
         if col_axis is None:
-            raise ValueError("ring scheme needs col_axis")
+            raise ValueError(f"{scheme} scheme needs col_axis")
         T = mesh.shape[col_axis]
         n = a.shape[1]
 
-        def body(a_local):
-            return gram_ring(a_local, col_axis, row_axis,
-                             levels=levels, leaf=leaf, variant=variant,
-                             mode=mode, out_dtype=out_dtype, axis_size=T)
+        if scheme == "ring":
+            def body(a_local):
+                return gram_ring(a_local, col_axis, row_axis,
+                                 levels=levels, leaf=leaf, variant=variant,
+                                 mode=mode, out_dtype=out_dtype,
+                                 axis_size=T, interpret=interpret)
+        else:
+            if rep_axis is None:
+                raise ValueError("bfs25d scheme needs rep_axis")
+            c = mesh.shape[rep_axis]
+
+            def body(a_local):
+                return gram_bfs25d(a_local, col_axis, rep_axis, row_axis,
+                                   levels=levels, leaf=leaf, variant=variant,
+                                   mode=mode, out_dtype=out_dtype,
+                                   col_size=T, rep_size=c,
+                                   interpret=interpret)
 
         stacks = shard_map(
             body, mesh=mesh,
             in_specs=P(row_axis, col_axis),
             # stack: (half+1, n/T, n/T) per device -> gather cols of blocks
             out_specs=P(None, None, col_axis),
+            **unchecked,
         )(a)
         if not assemble:
             return stacks        # production: circulant layout, sharded

@@ -22,6 +22,7 @@ from .engine import GramEngine, GramRequest, batched_gram  # noqa: F401
 from .stream import (  # noqa: F401
     GramStream, init as stream_init, update as stream_update,
     finalize as stream_finalize, sharded_init, update_sharded,
+    distributed_init, distributed_update, distributed_finalize,
 )
 
 __all__ = [
@@ -31,4 +32,5 @@ __all__ = [
     "GramEngine", "GramRequest", "batched_gram",
     "GramStream", "stream_init", "stream_update", "stream_finalize",
     "sharded_init", "update_sharded",
+    "distributed_init", "distributed_update", "distributed_finalize",
 ]

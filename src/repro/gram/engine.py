@@ -20,6 +20,12 @@ engine, for the paper's operation instead of token decode:
 * **Autotuned per-bucket config.**  On first touch of a bucket the
   engine consults the ``gram.autotune`` JSON cache; a hit overrides
   mode / levels / block for that bucket's executable.
+* **Mesh-aware distributed routing.**  With ``mesh=`` set, buckets whose
+  padded size reaches ``dist_threshold`` elements are served through
+  ``core.distributed.distributed_gram`` (``dist_scheme`` — default
+  "auto", the communication cost model picks allreduce / reducescatter /
+  half-ring / 2.5D bfs25d per shape) instead of the single-device
+  vmapped executable; small buckets keep the slot-batched local path.
 """
 from __future__ import annotations
 
@@ -34,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ata import ata, ata_full
+from ..core.distributed import (default_gram_axes, distributed_gram,
+                                feasible_schemes)
 from ..core.symmetry import symmetrize_from_lower
 from . import autotune as _autotune
 
@@ -82,7 +90,9 @@ class GramEngine:
                  mode: str = "auto", block: Optional[int] = None,
                  out_dtype=jnp.float32, min_bucket: int = 32,
                  use_autotune_cache: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 mesh=None, dist_scheme: str = "auto",
+                 dist_threshold: int = 1 << 21):
         self.slots = slots
         self.levels, self.leaf, self.variant = levels, leaf, variant
         self.mode, self.block = mode, block
@@ -90,6 +100,13 @@ class GramEngine:
         self.min_bucket = min_bucket
         self.use_autotune_cache = use_autotune_cache
         self.interpret = interpret
+        # distributed routing: buckets of >= dist_threshold elements go to
+        # distributed_gram on `mesh` (axis names per default_gram_axes)
+        self.mesh = mesh
+        self.dist_scheme = dist_scheme
+        self.dist_threshold = dist_threshold
+        self.dist_axes = default_gram_axes(mesh) if mesh is not None else {}
+        self.dist_served = 0
         self._uid = itertools.count()
         # bucket key -> FIFO of waiting requests (insertion-ordered so
         # tick scheduling is deterministic)
@@ -145,19 +162,48 @@ class GramEngine:
                     cfg["block"] = hit.get("bk")
         return cfg
 
+    def _is_distributed(self, key) -> bool:
+        """Buckets at/above the element threshold route to the mesh (when
+        one is configured and the configured scheme fits the bucket — for
+        "auto", any feasible scheme; otherwise dist_scheme itself must be
+        feasible, or the bucket stays local rather than failing mid-step
+        on a shard_map divisibility error)."""
+        M, N, _ = key
+        if self.mesh is None or M * N < self.dist_threshold:
+            return False
+        feas = feasible_schemes(M, N, self.mesh, **self.dist_axes)
+        if self.dist_scheme == "auto":
+            return bool(feas)
+        return self.dist_scheme in feas
+
     def _executable(self, key):
         if key in self._executables:
             return self._executables[key]
         M, N, dtype = key
         cfg = self._bucket_config(key)
-
-        def one(x):
-            return ata(x, levels=cfg["levels"], leaf=cfg["leaf"],
-                       variant=cfg["variant"], mode=cfg["mode"],
-                       out_dtype=self.out_dtype, block=cfg["block"],
-                       interpret=self.interpret)
-        spec = jax.ShapeDtypeStruct((self.slots, M, N), jnp.dtype(dtype))
-        compiled = jax.jit(jax.vmap(one)).lower(spec).compile()
+        if self._is_distributed(key):
+            # one request at a time on the whole mesh: the mesh IS the
+            # batch dimension here, slot-stacking would fight the sharding
+            # (autotuned mode/levels still apply; block resolves inside
+            # the per-shard kernels via the ops-level autotune defaults)
+            def one(x):
+                return distributed_gram(
+                    x, self.mesh, scheme=self.dist_scheme,
+                    levels=cfg["levels"], leaf=cfg["leaf"],
+                    variant=cfg["variant"], mode=cfg["mode"],
+                    out_dtype=self.out_dtype, interpret=self.interpret,
+                    **self.dist_axes)
+            spec = jax.ShapeDtypeStruct((M, N), jnp.dtype(dtype))
+        else:
+            def single(x):
+                return ata(x, levels=cfg["levels"], leaf=cfg["leaf"],
+                           variant=cfg["variant"], mode=cfg["mode"],
+                           out_dtype=self.out_dtype, block=cfg["block"],
+                           interpret=self.interpret)
+            one = jax.vmap(single)
+            spec = jax.ShapeDtypeStruct((self.slots, M, N),
+                                        jnp.dtype(dtype))
+        compiled = jax.jit(one).lower(spec).compile()
         self.compile_count += 1
         self._executables[key] = compiled
         return compiled
@@ -193,6 +239,24 @@ class GramEngine:
             del self.waiting[key]
 
         M, N, dtype = key
+        if self._is_distributed(key):
+            # mesh path: the device mesh is the parallel dimension — serve
+            # the drained requests one at a time through distributed_gram
+            exe = self._executable(key)
+            for r in batch:
+                m, n = r.shape
+                pad = np.zeros((M, N), jnp.dtype(dtype))
+                pad[:m, :n] = r.a
+                c = np.asarray(jax.device_get(exe(jnp.asarray(pad))))[:n, :n]
+                if not r.full:
+                    c = np.tril(c)
+                r.result, r.t_done, r.done = c, time.perf_counter(), True
+                r.a = None
+                self.finished.append(r)
+            self.dist_served += len(batch)
+            self.served += len(batch)
+            return batch
+
         # jnp.dtype resolves extended names ("bfloat16") numpy alone won't
         stack = np.zeros((self.slots, M, N), jnp.dtype(dtype))
         for s, r in enumerate(batch):
@@ -229,9 +293,12 @@ class GramEngine:
                 if lats else None
         return {
             "served": self.served,
+            "dist_served": self.dist_served,
             "ticks": self.ticks,
             "compile_count": self.compile_count,
             "buckets": sorted(self._executables),
+            "distributed_buckets": sorted(
+                k for k in self._executables if self._is_distributed(k)),
             "p50_latency_s": pct(0.50),
             "p99_latency_s": pct(0.99),
         }

@@ -20,6 +20,13 @@ Sharded variant: ``update_sharded`` composes with
 ``core.distributed.gram_reducescatter`` — each device streams its *row
 shard* of the chunk and holds only its block-row shard of C, so the
 replicated C of the paper-faithful all-reduce scheme never materializes.
+
+Distributed variant: ``distributed_init`` / ``distributed_update`` /
+``distributed_finalize`` are the pjit-level composition with ANY
+``core.distributed`` scheme — including the half-ring and the
+communication-avoiding 2.5D ``bfs25d``, whose circulant block-stack
+state (n(n+1)/2-ish words, sharded over the ring axis) accumulates
+per-chunk deltas without ever materializing a replicated C.
 """
 from __future__ import annotations
 
@@ -29,13 +36,17 @@ from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.ata import ata
-from ..core.distributed import gram_reducescatter
+from ..core.distributed import (assemble_ring_gram, gram_bfs25d,
+                                gram_reducescatter, gram_ring,
+                                ring_stack_len, shard_map_compat)
 from ..core.symmetry import pack_tril, unpack_tril
 
 __all__ = ["GramStream", "init", "update", "finalize",
-           "sharded_init", "update_sharded"]
+           "sharded_init", "update_sharded",
+           "distributed_init", "distributed_update", "distributed_finalize"]
 
 
 class GramStream(NamedTuple):
@@ -130,3 +141,98 @@ def update_sharded(c_shard: jax.Array, chunk_local: jax.Array,
                                leaf=leaf, variant=variant, mode=mode,
                                out_dtype=c_shard.dtype)
     return c_shard + delta
+
+
+# ---------------------------------------------------------------------------
+# pjit-level distributed streaming: state sharded by the scheme's natural
+# output layout, chunks sharded like the scheme's input.
+# ---------------------------------------------------------------------------
+
+def _state_spec(scheme: str, row_axis: str, col_axis: Optional[str]):
+    if scheme == "reducescatter":
+        return P(row_axis, None)
+    if scheme in ("ring", "bfs25d"):
+        return P(None, None, col_axis)
+    raise ValueError(f"unsupported streaming scheme {scheme!r}")
+
+
+def distributed_init(n: int, mesh: Mesh, *, scheme: str = "reducescatter",
+                     row_axis: str = "data",
+                     col_axis: Optional[str] = "model",
+                     dtype=jnp.float32) -> jax.Array:
+    """Zero accumulator for ``distributed_update`` on ``mesh``.
+
+    * ``"reducescatter"`` — dense (n, n) C sharded by block-rows over
+      ``row_axis`` (never replicated).
+    * ``"ring"`` / ``"bfs25d"`` — the half-ring circulant block stack
+      (floor(T/2)+1, n/T, n) sharded over ``col_axis``: ~n(n+1)/2 words
+      of global state, the packed-triangle saving at mesh scale.
+    """
+    spec = _state_spec(scheme, row_axis, col_axis)
+    if scheme == "reducescatter":
+        shape = (n, n)
+    else:
+        T = mesh.shape[col_axis]
+        if n % T:
+            raise ValueError(f"n={n} not divisible by ring size {T}")
+        shape = (ring_stack_len(T), n // T, n)
+    return jax.device_put(jnp.zeros(shape, dtype),
+                          NamedSharding(mesh, spec))
+
+
+def distributed_update(state: jax.Array, chunk: jax.Array, mesh: Mesh, *,
+                       scheme: str = "reducescatter",
+                       row_axis: str = "data",
+                       col_axis: Optional[str] = "model",
+                       rep_axis: Optional[str] = None,
+                       levels: Union[int, str] = 2, leaf: int = 256,
+                       variant: str = "strassen",
+                       mode: str = "auto") -> jax.Array:
+    """Fold one globally-sharded row chunk into the distributed state:
+    ``state += scheme(chunk)``.  Chunk rows must divide by the row axis;
+    for the ring family the chunk is also column-sharded (and, for
+    ``bfs25d``, replicated over ``rep_axis`` — the 2.5D trade applies
+    per chunk, so each update ships only ceil(half/c) permute hops)."""
+    shard_map, unchecked = shard_map_compat()
+    spec = _state_spec(scheme, row_axis, col_axis)
+
+    if scheme == "reducescatter":
+        def body(c_shard, chunk_local):
+            return update_sharded(c_shard, chunk_local, row_axis,
+                                  levels=levels, leaf=leaf, variant=variant,
+                                  mode=mode)
+        chunk_spec = P(row_axis, None)
+    else:
+        T = mesh.shape[col_axis]
+
+        def body(stack, chunk_local):
+            if scheme == "ring":
+                delta = gram_ring(chunk_local, col_axis, row_axis,
+                                  levels=levels, leaf=leaf, variant=variant,
+                                  mode=mode, out_dtype=stack.dtype,
+                                  axis_size=T)
+            else:
+                if rep_axis is None:
+                    raise ValueError("bfs25d streaming needs rep_axis")
+                delta = gram_bfs25d(chunk_local, col_axis, rep_axis,
+                                    row_axis, levels=levels, leaf=leaf,
+                                    variant=variant, mode=mode,
+                                    out_dtype=stack.dtype, col_size=T,
+                                    rep_size=mesh.shape[rep_axis])
+            return stack + delta
+        chunk_spec = P(row_axis, col_axis)
+
+    return shard_map(body, mesh=mesh, in_specs=(spec, chunk_spec),
+                     out_specs=spec, **unchecked)(state, chunk)
+
+
+def distributed_finalize(state: jax.Array, mesh: Mesh, *,
+                         scheme: str = "reducescatter",
+                         col_axis: Optional[str] = "model") -> jax.Array:
+    """Dense symmetric (n, n) C from the distributed state (the
+    reduce-scatter state already IS dense; ring-family states are
+    assembled from the circulant block layout)."""
+    if scheme == "reducescatter":
+        return state
+    T = mesh.shape[col_axis]
+    return assemble_ring_gram(state, T, state.shape[2])

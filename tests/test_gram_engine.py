@@ -131,6 +131,63 @@ def test_engine_rejects_bad_request():
         eng.submit(np.zeros((3, 4, 5), np.float32))
 
 
+@pytest.mark.multidevice(8)
+def test_engine_routes_large_buckets_to_mesh(multidevice_count):
+    """With a mesh configured, buckets at/above dist_threshold serve
+    through distributed_gram (scheme="auto" -> comm cost model) and small
+    buckets keep the local slot-batched path; both match the oracle."""
+    from repro.launch.mesh import make_gram_mesh
+
+    rng = np.random.default_rng(8)
+    mesh = make_gram_mesh(8, rep=2, ring=2)      # (rep=2, data=2, model=2)
+    eng = GramEngine(slots=2, levels=1, leaf=8, min_bucket=16,
+                     mesh=mesh, dist_threshold=128 * 64)
+    big = rng.standard_normal((120, 60)).astype(np.float32)    # -> 128x64
+    small = rng.standard_normal((20, 12)).astype(np.float32)   # -> 32x32
+    u_big, u_small = eng.submit(big), eng.submit(small)
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert len(done) == 2
+    for uid, a in ((u_big, big), (u_small, small)):
+        want = a.astype(np.float64).T @ a.astype(np.float64)
+        err = np.abs(done[uid].result - want).max() / np.abs(want).max()
+        assert err < 1e-4, (uid, err)
+        np.testing.assert_allclose(done[uid].result, done[uid].result.T,
+                                   rtol=1e-5)
+    stats = eng.stats()
+    assert stats["dist_served"] == 1
+    assert stats["distributed_buckets"] == [(128, 64, "float32")]
+    # the small bucket stayed on the local vmapped path
+    assert (32, 16, "float32") in stats["buckets"]
+    assert (32, 16, "float32") not in stats["distributed_buckets"]
+
+
+def test_engine_infeasible_dist_scheme_stays_local():
+    """A pinned (non-"auto") dist_scheme that does not fit a bucket's
+    shape keeps that bucket on the local path instead of compiling a
+    shard_map program that would fail mid-step (routing logic only — no
+    multi-device platform needed)."""
+    from types import SimpleNamespace as NS
+    mesh = NS(shape={"data": 2, "model": 3}, axis_names=("data", "model"))
+    # bucket N=64 is not divisible by the 3-wide ring axis: ring infeasible
+    eng = GramEngine(mesh=mesh, dist_scheme="ring", dist_threshold=1,
+                     min_bucket=16)
+    assert not eng._is_distributed((64, 64, "float32"))
+    # "auto" falls back to the feasible row-reduction schemes
+    eng_auto = GramEngine(mesh=mesh, dist_scheme="auto", dist_threshold=1,
+                          min_bucket=16)
+    assert eng_auto._is_distributed((64, 64, "float32"))
+
+
+def test_engine_no_mesh_never_distributes():
+    """Default engine (mesh=None) keeps every bucket local."""
+    rng = np.random.default_rng(9)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16, dist_threshold=1)
+    eng.submit(rng.standard_normal((64, 32)).astype(np.float32))
+    eng.run_to_completion()
+    assert eng.stats()["dist_served"] == 0
+    assert eng.stats()["distributed_buckets"] == []
+
+
 def test_engine_bf16_requests_bucket_separately():
     """dtype is part of the bucket key: same shape, different dtype ->
     two executables, both correct."""

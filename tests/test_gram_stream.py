@@ -3,14 +3,9 @@
 The hypothesis-driven any-chunking property lives in test_properties.py
 (gated on hypothesis availability); here the same invariant is pinned by
 deterministic parametrized cases — fp32/bf16, ragged final chunk,
-levels 0-2 — plus the sharded streaming variant via an 8-device
-subprocess (same pattern as test_distributed.py).
+levels 0-2 — plus the sharded/distributed streaming variants on 8
+forced-host devices via the ``multidevice`` marker (tests/conftest.py).
 """
-import os
-import pathlib
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,9 +13,6 @@ import pytest
 
 from repro import gram
 from repro.core.ata import ata_full
-
-HERE = pathlib.Path(__file__).parent
-REPO = HERE.parent
 
 
 def _oracle(a):
@@ -97,15 +89,75 @@ def test_normalized_second_moment():
     np.testing.assert_allclose(c, want, rtol=1e-4, atol=1e-5)
 
 
-def test_sharded_streaming_subprocess():
+@pytest.mark.multidevice(8)
+def test_sharded_streaming_8dev(multidevice_count):
     """Row-sharded streaming (reduce-scatter state) == sequential, on 8
-    forced-host devices in a child process (main process keeps 1 device)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(REPO / "src")
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run(
-        [sys.executable, str(HERE / "_gram_stream_check.py")],
-        env=env, capture_output=True, text=True, timeout=600,
-    )
-    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
-    assert "ALL_OK" in out.stdout
+    forced-host devices (ported from the old ad-hoc subprocess script to
+    the ``multidevice`` marker)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.distributed import shard_map_compat
+
+    P_DEV, m, n = 8, 128, 64
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, n), jnp.float32)
+    want = _oracle(a)
+
+    mesh = jax.make_mesh((P_DEV,), ("data",))
+    shard_map, unchecked = shard_map_compat()
+
+    def stream(chunks):
+        # per-device: fold row-sharded chunks into the block-row shard of C
+        c = gram.sharded_init(n, P_DEV)
+        for chunk in chunks:
+            c = gram.update_sharded(c, chunk, "data", levels=1, leaf=8)
+        return c
+
+    chunk_bounds = [(0, 48), (48, 128)]   # ragged: 48 and 80 rows
+    chunks = tuple(a[lo:hi] for lo, hi in chunk_bounds)
+    got = shard_map(
+        stream, mesh=mesh,
+        in_specs=(P("data", None),),     # pytree prefix: every chunk by rows
+        out_specs=P("data", None), **unchecked,
+    )(chunks)
+    got = np.asarray(jax.device_get(got), np.float64)
+    assert got.shape == (n, n)
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 1e-4, err
+
+
+@pytest.mark.multidevice(8)
+@pytest.mark.parametrize("scheme", ["reducescatter", "ring", "bfs25d"])
+def test_distributed_streaming_composes_with_schemes(scheme,
+                                                     multidevice_count):
+    """pjit-level distributed streaming: any chunking through
+    distributed_init/update/finalize == one-shot oracle, for the
+    reduce-scatter state AND the half-ring/2.5D circulant stack states."""
+    from jax.sharding import Mesh
+
+    m, n = 96, 48
+    a = jax.random.normal(jax.random.PRNGKey(1), (m, n), jnp.float32)
+    want = _oracle(a)
+
+    if scheme == "reducescatter":
+        mesh = Mesh(np.array(jax.devices()).reshape(8,), ("data",))
+        kw = dict(row_axis="data", col_axis=None)
+    elif scheme == "ring":
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                    ("data", "model"))
+        kw = dict(row_axis="data", col_axis="model")
+    else:
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 1, 4),
+                    ("rep", "data", "model"))
+        kw = dict(row_axis="data", col_axis="model", rep_axis="rep")
+
+    state = gram.distributed_init(
+        n, mesh, scheme=scheme,
+        **{k: v for k, v in kw.items() if k != "rep_axis"})
+    for lo, hi in [(0, 32), (32, 96)]:   # ragged chunks, rows divide axes
+        state = gram.distributed_update(state, a[lo:hi], mesh,
+                                        scheme=scheme, levels=1, leaf=8,
+                                        **kw)
+    got = np.asarray(jax.device_get(gram.distributed_finalize(
+        state, mesh, scheme=scheme,
+        col_axis=kw.get("col_axis"))), np.float64)
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 1e-4, (scheme, err)

@@ -9,6 +9,8 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core.ata import ata, ata_full
+from repro.core.distributed import (assemble_ring_gram, ring_layout_coords,
+                                    ring_stack_len)
 from repro.core.strassen import strassen_matmul
 from repro.core.symmetry import (pack_tril, unpack_tril, tri_index,
                                  tri_coords, tri_count)
@@ -101,6 +103,55 @@ def test_process_tree_invariants(p):
         assert npl(level + 1) > p
     # paper §5: L(n,P) = max(4(lmax-1), 3 lmax) and lmax < log_7 P bound
     assert latency_messages(p) == max(4 * max(level - 1, 0), 3 * level)
+
+
+@given(st.integers(1, 64))
+@settings(**SET)
+def test_ring_layout_covers_lower_triangle_exactly_once(t):
+    """The half-ring ownership map assigns every lower-triangle block
+    coordinate of a T x T block grid to exactly one (device, step) slot,
+    for arbitrary odd/even T — no gaps, no antipodal double-counting."""
+    coords = ring_layout_coords(t)
+    covered = [(i, j) for (_, _, i, j) in coords]
+    assert len(covered) == len(set(covered)), "duplicate block ownership"
+    assert set(covered) == {(i, j) for i in range(t) for j in range(i + 1)}
+    # slots are within the stack and each (device, step) appears once
+    slots = [(dev, s) for (dev, s, _, _) in coords]
+    assert len(slots) == len(set(slots))
+    assert all(0 <= s < ring_stack_len(t) and 0 <= dev < t
+               for dev, s in slots)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 6),
+       st.integers(1, 3))
+@settings(**SET)
+def test_assemble_ring_gram_roundtrips_half_ring_layout(key, t, n_loc,
+                                                        m_mult):
+    """assemble_ring_gram rebuilds the dense oracle from a half-ring
+    block-stack laid out per the gram_ring contract (entry s, device d =
+    C[d, (d-s) % T], antipodal duplicates zeroed) — the single-device
+    simulation of the multi-device layout, for arbitrary odd/even T."""
+    n = t * n_loc
+    m = m_mult * 4
+    a = _rand(key, m, n)
+    a64 = np.asarray(a, np.float64)
+    want = a64.T @ a64
+    owned = {(dev, s) for (dev, s, _, _) in ring_layout_coords(t)}
+    half = t // 2
+    stacks = np.zeros((half + 1, n_loc, n), np.float64)
+    for dev in range(t):
+        for s in range(half + 1):
+            if (dev, s) not in owned:
+                continue                     # masked antipodal duplicate
+            j = (dev - s) % t
+            stacks[s][:, dev * n_loc:(dev + 1) * n_loc] = (
+                a64[:, dev * n_loc:(dev + 1) * n_loc].T
+                @ a64[:, j * n_loc:(j + 1) * n_loc])
+    got = np.asarray(
+        assemble_ring_gram(jnp.asarray(stacks, jnp.float32), t, n),
+        np.float64)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 1e-5
 
 
 @given(st.integers(0, 2**31 - 1), st.integers(0, 10_000))
