@@ -1,0 +1,111 @@
+"""Backward-path trajectory: fused Strassen backward vs dense-dot backward
+vs ``jax.grad`` of the reference recursion.
+
+Emits ``BENCH_grads.json`` (artifacts/bench/) so the training half of the
+hot path — ``dA = A (S + S^t)``, the VJP of C = tril(A^t A) — is tracked
+alongside the forward's BENCH_ata.json.  Per treatment we record:
+
+* wall-clock of ``jax.grad`` (this host; the fused Pallas kernels run
+  *interpreted* off-TPU, so absolute times are emulation artifacts —
+  tracked for trend only),
+* HBM-materialized intermediate bytes of the backward.  Dense-dot /
+  reference: measured with ``hbm_intermediate_census`` over the compiled
+  HLO (the dense S + S^t buffers, unpack scatters, transposes).  Fused:
+  the analytic backward model (``ata_bwd_traffic_model``) — on hardware
+  the symm kernel's only HBM temporary is the packed cotangent stack
+  (dense entry) or nothing at all (packed entry); the modeled-vs-measured
+  comparison for the dense baseline closes the loop on the model's
+  baseline term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ata
+from repro.kernels.strassen_fused import ata_bwd_traffic_model
+from repro.roofline.hlo_census import hbm_intermediate_census
+from .common import timeit, write_json
+
+LEVELS = 2
+
+
+def run(quick: bool = False):
+    n = 256 if quick else 512
+    block = 64 if quick else 128
+    leaf = block // 2          # forces the reference recursion to unroll
+    a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+
+    def make_grad(mode, bwd):
+        def loss(x):
+            c = ata(x, levels=LEVELS, leaf=leaf, mode=mode, bwd=bwd,
+                    block=block, out_dtype=jnp.float32)
+            return jnp.vdot(w, c)
+        return jax.grad(loss)
+
+    treatments = {
+        "fused_bwd": make_grad("fused", "fused"),
+        "dense_bwd": make_grad("fused", "dense"),
+        "reference": make_grad("reference", "fused"),
+    }
+
+    bwd_model = ata_bwd_traffic_model(n, n, levels=LEVELS, bk=block,
+                                      bn=block, cotangent="dense")
+    rows = []
+    for name, fn in treatments.items():
+        compiled = jax.jit(fn).lower(a).compile()
+        wall = timeit(compiled, a, warmup=1, iters=2 if quick else 3)
+        census = hbm_intermediate_census(compiled.as_text())
+        row = {
+            "treatment": name,
+            "n": n,
+            "levels": LEVELS,
+            "block": block,
+            "wall_s": wall,
+            "census_total_bytes": census["total_bytes"],
+        }
+        if name == "fused_bwd":
+            row["hbm_intermediate_bytes"] = bwd_model["intermediate_bytes"]
+            row["hbm_read_bytes"] = bwd_model["read_bytes"]
+            row["hbm_write_bytes"] = bwd_model["write_bytes"]
+            row["packed_stack_bytes"] = bwd_model["packed_stack_bytes"]
+            row["census_is_interpret_emulation"] = (
+                jax.default_backend() != "tpu")
+        else:
+            # the whole grad (fwd + bwd) censused; the bwd share dominates
+            # for the dense paths (S + S^t / recursion transposes)
+            row["hbm_intermediate_bytes"] = census["total_bytes"]
+        rows.append(row)
+        print(f"[grads] {name:10s} wall {wall*1e3:8.2f} ms   "
+              f"intermediates {row['hbm_intermediate_bytes']/1e6:8.3f} MB")
+
+    by = {r["treatment"]: r for r in rows}
+    dense_b = by["dense_bwd"]["hbm_intermediate_bytes"]
+    fused_b = by["fused_bwd"]["hbm_intermediate_bytes"]
+    modeled_dense = bwd_model["dense_baseline"]["intermediate_bytes"]
+    ratio = (dense_b / fused_b) if fused_b else None
+    print(f"[grads] bwd HBM intermediates: dense-dot {dense_b/1e6:.3f} MB "
+          f"vs fused {fused_b/1e6:.3f} MB "
+          f"({'ratio %.1fx' % ratio if ratio else 'fused has none'}; "
+          f"acceptance: dense >= 2x fused)")
+    print(f"[grads] modeled dense baseline {modeled_dense/1e6:.3f} MB vs "
+          f"measured census {dense_b/1e6:.3f} MB (the model counts the "
+          f"three logical n^2 buffers; XLA fusion may materialize fewer)")
+    payload = {
+        "rows": rows,
+        "bwd_model": {k: v for k, v in bwd_model.items()
+                      if k != "padded_shape"},
+        "dense_bwd_intermediate_bytes": dense_b,
+        "fused_bwd_intermediate_bytes": fused_b,
+        "modeled_dense_baseline_bytes": modeled_dense,
+        "intermediate_ratio_dense_over_fused": ratio,
+        "acceptance_dense_ge_2x_fused": dense_b >= 2 * fused_b,
+    }
+    path = write_json("BENCH_grads.json", payload)
+    print(f"[grads] wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -10,15 +10,16 @@ s3.1  multiplication counts vs (2/7) n^log2(7)        <- paper §3.1
 s5    communication model + comm fraction             <- paper §5/§6.3.2
 roofline  3-term roofline over dry-run artifacts      <- brief §Roofline
 ata   fused-pipeline trajectory -> BENCH_ata.json     <- DESIGN.md §4
+grads fused backward trajectory -> BENCH_grads.json   <- DESIGN.md §11
 gram_service  batched vs sequential serving -> BENCH_gram_service.json
                                                       <- DESIGN.md §10
 distributed  modeled vs measured comm volume per scheme (8 fake devices)
                                    -> BENCH_distributed.json <- DESIGN.md §5
 
 ``--smoke`` runs the fast interpret-mode kernel test suite plus the
-quick distributed comm benchmark instead of the full benchmarks (CI
-smoke target: validates the fused Pallas pipeline and the comm cost
-model on CPU in a couple of minutes).
+quick distributed comm and backward benchmarks instead of the full
+benchmarks (CI smoke target: validates the fused Pallas pipeline — both
+directions — and the comm cost model on CPU in a couple of minutes).
 """
 import argparse
 import subprocess
@@ -27,7 +28,8 @@ import time
 
 from . import (bench_exec_time, bench_speedup, bench_efficiency,
                bench_karpflatt, bench_flops, bench_comm, bench_roofline,
-               bench_ata, bench_gram_service, bench_distributed)
+               bench_ata, bench_grads, bench_gram_service,
+               bench_distributed)
 
 ALL = [
     ("fig5_exec_time", bench_exec_time.run),
@@ -38,11 +40,13 @@ ALL = [
     ("s5_comm", bench_comm.run),
     ("roofline", bench_roofline.run),
     ("ata_fused", bench_ata.run),
+    ("grads", bench_grads.run),
     ("gram_service", bench_gram_service.run),
     ("distributed", bench_distributed.run),
 ]
 
-SMOKE_TESTS = ["tests/test_fused_ata.py", "tests/test_kernels.py",
+SMOKE_TESTS = ["tests/test_fused_ata.py", "tests/test_fused_grads.py",
+               "tests/test_kernels.py",
                "tests/test_core_ata.py", "tests/test_gram_stream.py",
                "tests/test_gram_engine.py", "tests/test_comm_cost.py"]
 
@@ -64,6 +68,7 @@ def main(argv=None):
              "-m", "not multidevice", *SMOKE_TESTS])
         if rc == 0:
             bench_distributed.run(quick=True)
+            bench_grads.run(quick=True)
         sys.exit(rc)
     failures = []
     for name, fn in ALL:

@@ -57,6 +57,7 @@ def ata(
     base_syrk: Optional[Callable] = None,
     base_matmul: Optional[Callable] = None,
     mode: str = "auto",
+    bwd: str = "fused",
     out_dtype=None,
     block: Optional[int] = None,
     interpret: Optional[bool] = None,
@@ -77,6 +78,10 @@ def ata(
         Forces reference mode under ``mode="auto"``.
       base_matmul: leaf matmul for the HASA calls.  Same.
       mode: "auto" | "fused" | "reference" (see module docstring).
+      bwd: VJP engine for the fused path — "fused" (default: the
+        packed-cotangent symm-schedule kernel, DESIGN.md §11) or "dense"
+        (the classical ``A (S + S^t)`` dense-dot baseline).  Reference
+        mode differentiates through the recursion and ignores this.
       out_dtype: result dtype.  Defaults to the *promoted accumulation
         dtype* — fp32 for bf16/fp32 inputs — instead of silently
         downcasting fp32-accumulated results back to the input dtype
@@ -101,7 +106,8 @@ def ata(
     if mode == "fused":
         from ..kernels.ops import ata_fused
         return ata_fused(a, levels=levels, variant=variant, bk=block,
-                         bn=block, out_dtype=out_dtype, interpret=interpret)
+                         bn=block, out_dtype=out_dtype, interpret=interpret,
+                         bwd=bwd)
     syrk = base_syrk or _default_base_syrk
     out = _ata_rec(a, levels, leaf, variant, syrk, base_matmul)
     return out.astype(out_dtype)

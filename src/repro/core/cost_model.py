@@ -65,6 +65,41 @@ def ata_mults_exact(m: int, n: int, leaf: int = 32, levels: int | None = None,
     return res
 
 
+def symm_leaf_count(levels: int, variant: str = "strassen") -> int:
+    """Leaf products of a flattened ``X @ Sym`` schedule
+    (``core.schedule.plan_symm``): 7 per level for the fast variants,
+    8 for classical."""
+    return (8 if variant == "classical" else 7) ** levels
+
+
+def symm_mults_exact(m: int, n: int, levels: int,
+                     variant: str = "strassen") -> int:
+    """Exact multiplication count of the flattened ``X @ Sym`` schedule on
+    an (m, n) x (n, n) problem with ``m``, ``n`` already padded to
+    ``2^levels`` multiples (the executor's padded shape): each of the
+    ``symm_leaf_count`` leaves is an (m/2^l, n/2^l) x (n/2^l, n/2^l)
+    product.  Matches ``schedule.plan_symm(levels).mult_count(mb, nb)``
+    (tests/test_properties.py)."""
+    B = 1 << levels
+    if m % B or n % B:
+        raise ValueError(f"shape ({m}, {n}) not padded to 2^{levels}")
+    return symm_leaf_count(levels, variant) * (m // B) * (n // B) ** 2
+
+
+def ata_bwd_mults_exact(m: int, n: int, leaf: int = 32,
+                        levels: int | None = None) -> int:
+    """Multiplications of the fused Gram backward ``dA = A (S + S^t)``
+    (a level-capped Strassen (m, n) x (n, n) product over the packed
+    cotangent — ``kernels.strassen_fused.fused_symm_matmul``)."""
+    return strassen_mults_exact(m, n, n, leaf, levels)
+
+
+def classical_ata_bwd_mults(m: float, n: float) -> float:
+    """Dense-dot baseline backward: ``A @ (S + S^t)`` at m n^2 products
+    (the 2 m n^2-flop path the fused backward replaces)."""
+    return m * n * n
+
+
 def strassen_mults_exact(m: int, k: int, n: int, leaf: int = 32,
                          levels: int | None = None, _memo=None) -> int:
     """Exact multiplication count of (level-capped) Strassen on (m,k)x(k,n)."""

@@ -37,10 +37,14 @@ import numpy as np
 
 __all__ = [
     "Product", "Contribution", "Plan",
-    "plan_ata", "plan_matmul", "evaluate_ata_plan", "evaluate_matmul_plan",
+    "plan_ata", "plan_matmul", "plan_symm",
+    "evaluate_ata_plan", "evaluate_matmul_plan", "evaluate_symm_plan",
 ]
 
 # A term is (row_block, col_block, sign) over the 2^levels leaf grid.
+# Right-operand terms of a "symm" plan carry a 4th element: the mirror flag
+# (1 = the leaf is stored at the mirrored (row, col) and must be read
+# transposed — see plan_symm).
 Term = Tuple[int, int, int]
 # A destination is (dest_row_block, dest_col_block, sign).
 Dest = Tuple[int, int, int]
@@ -194,9 +198,11 @@ class Plan:
         """Scalar multiplications the plan performs with the given leaf
         shapes.  ATA plans: A leaves are (mb, nb), SYRK leaves compute only
         the lower triangle (paper's n(n+1)/2 saving).  Matmul plans: leaves
-        (mb, kb) x (kb, nb).  Matches ``cost_model.ata_mults_exact`` /
-        ``strassen_mults_exact`` evaluated with ``leaf=0`` at the padded
-        shape (see tests/test_fused_ata.py).
+        (mb, kb) x (kb, nb).  Symm plans: X leaves (mb, nb) against square
+        (nb, nb) leaves of the packed operand.  Matches
+        ``cost_model.ata_mults_exact`` / ``strassen_mults_exact`` /
+        ``symm_mults_exact`` evaluated with ``leaf=0`` at the padded shape
+        (see tests/test_fused_ata.py, tests/test_properties.py).
         """
         total = 0
         for p in self.products:
@@ -204,6 +210,8 @@ class Plan:
                 total += mb * nb * (nb + 1) // 2
             elif self.kind == "ata":
                 total += nb * mb * nb          # (nb, mb) @ (mb, nb)
+            elif self.kind == "symm":
+                total += mb * nb * nb          # (mb, nb) @ (nb, nb)
             else:
                 total += mb * (kb if kb is not None else nb) * nb
         return total
@@ -259,6 +267,34 @@ def plan_matmul(levels: int, variant: str = "strassen") -> Plan:
     return Plan("matmul", levels, variant, tuple(products))
 
 
+@functools.lru_cache(maxsize=None)
+def plan_symm(levels: int, variant: str = "strassen") -> Plan:
+    """Flatten ``D = X @ Sym`` where ``Sym`` is *symmetric and stored only
+    as its lower triangle* (packed blocks) into leaf products.
+
+    This is the backward half of the paper's saving: the Gram VJP is
+    ``dA = A (S + S^t)`` with a symmetric right operand, so the dense
+    cotangent never needs to exist — every upper-triangle leaf read
+    ``(i, j)``, i < j, becomes a mirrored ``(j, i)`` read of the stored
+    lower triangle with the transpose folded into the executor's index
+    maps.  Structurally the plan is a :func:`plan_matmul` flattening with
+    the right-operand terms normalized to the lower triangle: each term is
+    a 4-tuple ``(r, c, sign, mirrored)`` with ``r >= c`` always; mirrored
+    terms (originally above the leaf diagonal) are read transposed.
+    Diagonal leaves (``r == c``) straddle the stored triangle at *tile*
+    granularity — the executor mirrors their upper tiles the same way at
+    runtime (``kernels/strassen_fused.py``).
+    """
+    base = plan_matmul(levels, variant)
+    products = tuple(
+        Product("mm", p.left,
+                tuple((r, c, s, 0) if r >= c else (c, r, s, 1)
+                      for (r, c, s) in p.right),
+                p.dests)
+        for p in base.products)
+    return Plan("symm", levels, variant, products)
+
+
 # ---------------------------------------------------------------------------
 # Dense reference evaluators (numpy) — oracle for the schedule itself,
 # independent of the Pallas executor.
@@ -295,6 +331,41 @@ def evaluate_ata_plan(plan: Plan, a: np.ndarray) -> np.ndarray:
         for di, dj, s in p.dests:
             c[di * nb:(di + 1) * nb, dj * nb:(dj + 1) * nb] += s * prod
     return np.tril(c)
+
+
+def evaluate_symm_plan(plan: Plan, x: np.ndarray,
+                       sym_lower: np.ndarray) -> np.ndarray:
+    """Execute a symm plan densely with numpy: ``x @ Sym`` where ``Sym``
+    is the symmetric completion of ``sym_lower`` (an (n, n) array whose
+    strict upper triangle is ignored — the evaluator provably never reads
+    it, mirroring the executor's packed-storage contract).
+
+    ``x`` is (m, n) pre-padded to ``plan.blocks`` multiples in both dims.
+    """
+    assert plan.kind == "symm", plan.kind
+    B = plan.blocks
+    m, n = x.shape
+    assert n == sym_lower.shape[0] == sym_lower.shape[1], (x.shape,
+                                                           sym_lower.shape)
+    assert m % B == 0 and n % B == 0, (x.shape, B)
+    mb, nb = m // B, n // B
+    xf = np.asarray(x, np.float64)
+    sl = np.tril(np.asarray(sym_lower, np.float64))  # upper never read
+    out = np.zeros((m, n), np.float64)
+    for p in plan.products:
+        left = _gather(xf, p.left, B)
+        right = None
+        for r, c, s, mirrored in p.right:
+            assert r >= c, "symm plan referenced the upper triangle"
+            leaf = sl[r * nb:(r + 1) * nb, c * nb:(c + 1) * nb]
+            if r == c:                       # rebuild the symmetric diagonal
+                leaf = leaf + np.tril(leaf, -1).T
+            blk = s * (leaf.T if mirrored else leaf)
+            right = blk if right is None else right + blk
+        prod = left @ right
+        for di, dj, s in p.dests:
+            out[di * mb:(di + 1) * mb, dj * nb:(dj + 1) * nb] += s * prod
+    return out
 
 
 def evaluate_matmul_plan(plan: Plan, a: np.ndarray, b: np.ndarray) -> np.ndarray:

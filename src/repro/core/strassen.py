@@ -97,6 +97,7 @@ def strassen_matmul(
     variant: str = "strassen",
     base_matmul: Optional[Callable] = None,
     mode: str = "auto",
+    bwd: str = "fused",
     out_dtype=None,
     block: Optional[int] = None,
     interpret: Optional[bool] = None,
@@ -116,6 +117,9 @@ def strassen_matmul(
         Forces reference mode under ``mode="auto"``.
       mode: "auto" | "fused" | "reference" — fused executes the flattened
         schedule in one Pallas kernel (no per-level HBM temporaries).
+      bwd: fused-path VJP engine — "fused" (default: both VJP products
+        through the schedule kernel, transposes folded into index maps)
+        or "dense" (classical jnp.dot VJP).  Reference mode ignores it.
       out_dtype: result dtype; defaults to the promoted *accumulation*
         dtype (fp32 for bf16/fp32 inputs) rather than downcasting.
       block: Pallas tile edge for the fused path (bm = bk = bn = block);
@@ -138,7 +142,7 @@ def strassen_matmul(
         from ..kernels.ops import matmul_fused
         return matmul_fused(a, b, levels=levels, variant=variant, bm=block,
                             bk=block, bn=block, out_dtype=out_dtype,
-                            interpret=interpret)
+                            interpret=interpret, bwd=bwd)
     base = base_matmul or _default_base_matmul
     res = _strassen_rec(a, b, levels, leaf, variant, base)
     return res.astype(out_dtype)

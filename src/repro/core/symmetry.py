@@ -82,6 +82,25 @@ def unpack_tril_blocks(packed: jax.Array, n: int, bn: int,
     return c
 
 
+def tril_vector_from_blocks(packed: jax.Array, bn: int, n: int) -> jax.Array:
+    """Element-packed tril vector (n(n+1)/2,) straight from a packed
+    lower-triangular *block* stack ((tri_count(T)*bn, bn), syrk /
+    fused-ATA layout over a padded T*bn >= n grid).
+
+    One static gather — the dense (n, n) matrix never materializes, and
+    (because the VJP of a gather is a scatter-add into the stack) packed
+    cotangents stay packed through ``jax.grad``: this is the bridge that
+    keeps ``gram.stream`` differentiable through the fused packed kernel
+    without a dense round-trip.
+    """
+    rows, cols = np.tril_indices(n)
+    bi, bj = rows // bn, cols // bn
+    blk = bi * (bi + 1) // 2 + bj
+    gr = jnp.asarray(blk * bn + rows % bn)
+    gc = jnp.asarray(cols % bn)
+    return packed[gr, gc]
+
+
 def symmetrize_from_lower(c_lower: jax.Array) -> jax.Array:
     """Mirror the strict lower triangle to the upper half (C12 = C21^t)."""
     tri = jnp.tril(c_lower, -1)

@@ -111,17 +111,31 @@ def candidate_space(M: int, N: int, *, backend: Optional[str] = None,
 
 
 def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
-                out_bytes: int = 4) -> float:
+                out_bytes: int = 4, kind: str = "ata") -> float:
     """HBM-bytes score (lower is better) used to seed the search.
 
-    Fused candidates use the exact analytic kernel model.  Reference
-    candidates use a closed-form upper estimate of what the recursion
-    materializes (operand sums + M_i products grow as (7/4)^levels) —
+    Fused candidates use the exact analytic kernel model (forward:
+    ``ata_traffic_model``; ``kind="ata_bwd"``: ``ata_bwd_traffic_model``
+    — the packed-cotangent symm-schedule backward).  Reference candidates
+    use a closed-form upper estimate of what the recursion (or, for the
+    backward, the dense-dot ``A (S + S^t)`` baseline) materializes —
     a deliberate heuristic.  Because the reference score is a heuristic
     while the fused score is exact, model-only search ranks fused
     candidates only — reference candidates compete through
     ``measure=True`` wall clock (see :func:`autotune`).
     """
+    if kind == "ata_bwd":
+        from ..kernels.strassen_fused import ata_bwd_traffic_model
+        # cotangent="dense": score the same entry point the measured
+        # runner (and the ata() consumer the winner applies to) drives —
+        # jax.grad through the dense forward packs the cotangent first.
+        t = ata_bwd_traffic_model(m, n, levels=cand["levels"],
+                                  variant=cand["variant"], bk=cand["bk"],
+                                  bn=cand["bn"], in_bytes=in_bytes,
+                                  cotangent="dense")
+        side = t if cand["mode"] == "fused" else t["dense_baseline"]
+        return float(side["read_bytes"] + side["write_bytes"]
+                     + side["intermediate_bytes"])
     if cand["mode"] == "fused":
         from ..kernels.strassen_fused import ata_traffic_model
         t = ata_traffic_model(m, n, levels=cand["levels"],
@@ -202,7 +216,7 @@ def resolve_block_defaults(kind: str, m: int, n: int, dtype,
     if all(v is not None for v in blocks.values()):
         return blocks
     best = None
-    if kind in ("ata", "matmul"):
+    if kind in ("ata", "matmul", "ata_bwd"):
         try:
             best = lookup(m, n, dtype=jnp.dtype(dtype).name, kind=kind)
         except Exception:
@@ -218,8 +232,21 @@ def resolve_block_defaults(kind: str, m: int, n: int, dtype,
 # The search
 # ---------------------------------------------------------------------------
 
-def _build_runner(M: int, N: int, dtype, cand: dict, interpret):
+def _build_runner(M: int, N: int, dtype, cand: dict, interpret,
+                  kind: str = "ata"):
     from ..core.ata import ata
+
+    if kind == "ata_bwd":
+        # time jax.grad through the fused forward; the candidate mode
+        # picks the VJP engine ("reference" = the dense-dot baseline).
+        bwd = "fused" if cand["mode"] == "fused" else "dense"
+
+        def fn(a):
+            return jax.grad(lambda x: ata(
+                x, levels=cand["levels"], variant=cand["variant"],
+                mode="fused", bwd=bwd, block=cand["bk"],
+                out_dtype=jnp.float32, interpret=interpret).sum())(a)
+        return jax.jit(fn)
 
     def fn(a):
         return ata(a, levels=cand["levels"], variant=cand["variant"],
@@ -253,6 +280,12 @@ def autotune(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
     top-K fused candidates plus the reference candidates are compiled and
     timed on the current device and wall clock picks the winner.  Returns
     the cached entry when one exists unless ``refresh``.
+
+    ``kind="ata_bwd"`` tunes the *backward*: candidates are scored with
+    ``ata_bwd_traffic_model`` (mode "fused" = the packed-cotangent symm
+    kernel, "reference" = the dense-dot ``A (S + S^t)`` baseline) and
+    measured — when requested — as ``jax.grad`` wall clock through the
+    fused forward with the corresponding ``bwd=`` engine.
     """
     backend = backend or jax.default_backend()
     M, N = bucket_shape(m, n, min_side=min_side)
@@ -265,7 +298,8 @@ def autotune(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
     in_bytes = jnp.dtype(dtype).itemsize
     cands = candidate_space(M, N, backend=backend, blocks=blocks,
                             levels=levels, modes=modes)
-    score = lambda c: model_score(M, N, c, in_bytes=in_bytes)  # noqa: E731
+    score = lambda c: model_score(M, N, c, in_bytes=in_bytes,  # noqa: E731
+                                  kind=kind)
     fused = sorted((c for c in cands if c["mode"] == "fused"), key=score)
     refs = sorted((c for c in cands if c["mode"] == "reference"), key=score)
     winner, measured = (fused or refs)[0], None
@@ -275,14 +309,16 @@ def autotune(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
         for cand in fused[:top_k] + refs:
             try:
                 timed.append((_time_candidate(
-                    _build_runner(M, N, dtype, cand, interpret), a), cand))
+                    _build_runner(M, N, dtype, cand, interpret, kind), a),
+                    cand))
             except Exception:
                 continue            # unrunnable candidate (e.g. VMEM clamp)
         if timed:
             measured, winner = min(timed, key=lambda tc: tc[0])
 
     entry = {**winner,
-             "model_bytes": model_score(M, N, winner, in_bytes=in_bytes),
+             "model_bytes": model_score(M, N, winner, in_bytes=in_bytes,
+                                        kind=kind),
              "measured_s": measured,
              "source": "measured" if measured is not None else "model"}
     _save_entry(key, entry, cache_path)

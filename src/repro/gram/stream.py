@@ -16,6 +16,13 @@ ragged final chunk — reproduces the one-shot ``ata_full(A)`` up to fp32
 accumulation-order rounding.  ``tests/test_gram_stream.py`` and the
 hypothesis property in ``tests/test_properties.py`` pin this down.
 
+Fused updates are end-to-end *packed* — the kernel's tri-block stack
+feeds the element-packed state through one static gather, so neither the
+forward delta nor (via the gather's scatter-add VJP composed with the
+packed kernel's packed-cotangent VJP) the backward ever materializes a
+dense (n, n) buffer (DESIGN.md §11); ``tests/test_fused_grads.py``
+checks streamed-update gradients against the reference recursion.
+
 Sharded variant: ``update_sharded`` composes with
 ``core.distributed.gram_reducescatter`` — each device streams its *row
 shard* of the chunk and holds only its block-row shard of C, so the
@@ -38,11 +45,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core.ata import ata
+from ..core.ata import ata, ata_levels_for
 from ..core.distributed import (assemble_ring_gram, gram_bfs25d,
                                 gram_reducescatter, gram_ring,
                                 ring_stack_len, shard_map_compat)
-from ..core.symmetry import pack_tril, unpack_tril
+from ..core.strassen import AUTO_MAX_LEVELS, resolve_mode
+from ..core.symmetry import pack_tril, tril_vector_from_blocks, unpack_tril
 
 __all__ = ["GramStream", "init", "update", "finalize",
            "sharded_init", "update_sharded",
@@ -74,11 +82,31 @@ def init(n: int, *, dtype=jnp.float32) -> GramStream:
 
 @functools.lru_cache(maxsize=None)
 def _updater(levels, leaf, variant, mode, block, interpret):
+    resolved = resolve_mode(mode)
+
     def step(packed, rows, chunk):
-        delta = ata(chunk, levels=levels, leaf=leaf, variant=variant,
-                    mode=mode, out_dtype=packed.dtype, block=block,
-                    interpret=interpret)
-        return packed + pack_tril(delta), rows + chunk.shape[0]
+        if resolved == "fused":
+            # End-to-end packed: the fused kernel's tri-block stack feeds
+            # the element-packed state through one static gather — the
+            # dense (n, n) delta never materializes, and because the
+            # gather's VJP is a scatter back into the stack (consumed by
+            # the packed kernel's own packed-cotangent VJP), jax.grad of
+            # a streamed update stays dense-free too (DESIGN.md §11).
+            from ..kernels.ops import ata_fused_packed
+            m, n = chunk.shape
+            lv = (min(ata_levels_for(m, n, leaf), AUTO_MAX_LEVELS)
+                  if levels == "auto" else levels)
+            stack = ata_fused_packed(chunk, levels=lv, variant=variant,
+                                     bk=block, bn=block,
+                                     out_dtype=packed.dtype,
+                                     interpret=interpret)
+            delta = tril_vector_from_blocks(stack, stack.shape[1], n)
+        else:
+            delta = pack_tril(ata(chunk, levels=levels, leaf=leaf,
+                                  variant=variant, mode=mode,
+                                  out_dtype=packed.dtype, block=block,
+                                  interpret=interpret))
+        return packed + delta, rows + chunk.shape[0]
     # donate the packed accumulator: the update runs in place, no second
     # n(n+1)/2 buffer per chunk
     return jax.jit(step, donate_argnums=(0,))

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the ATA hot spots (validated in interpret mode).
 
 - strassen_fused: the whole flattened ATA/Strassen schedule in one kernel
-                  (leaf tasks x K blocks; no per-level HBM round-trips)
+                  (leaf tasks x K blocks; no per-level HBM round-trips),
+                  forward AND backward (packed-cotangent symm schedule)
 - matmul:    tiled MXU matmul (ATA/HASA base case)
 - syrk:      lower-triangular-blocks-only gram (the paper's n(n+1)/2 saving)
 - combine:   fused Strassen recombination (HBM-traffic reduction)
@@ -11,9 +12,9 @@ from . import ops, ref
 from .ops import (
     matmul, syrk, syrk_packed, strassen_combine, transpose,
     pallas_base_matmul, pallas_base_syrk,
-    ata_fused, ata_fused_packed, matmul_fused,
+    ata_fused, ata_fused_packed, matmul_fused, symm_matmul,
 )
 
 __all__ = ["ops", "ref", "matmul", "syrk", "syrk_packed", "strassen_combine",
            "transpose", "pallas_base_matmul", "pallas_base_syrk",
-           "ata_fused", "ata_fused_packed", "matmul_fused"]
+           "ata_fused", "ata_fused_packed", "matmul_fused", "symm_matmul"]

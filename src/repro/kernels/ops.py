@@ -154,65 +154,97 @@ def pallas_base_syrk(bk=None, bn=None, interpret=None):
 # ---------------------------------------------------------------------------
 
 def ata_fused(a, *, levels=2, variant="strassen", bk=None, bn=None,
-              out_dtype=None, interpret=None):
+              out_dtype=None, interpret=None, bwd="fused"):
     """Dense ``tril(a.T @ a)`` via the fused leaf-task schedule.
     ``bk``/``bn`` default to the autotune-cache winner for this shape
-    bucket (256 when untuned)."""
+    bucket (256 when untuned).  ``bwd`` picks the VJP engine: ``"fused"``
+    (packed-cotangent symm schedule, the default) or ``"dense"`` (the
+    classical dense-dot baseline)."""
     bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
     return _ata_fused_jit(a, levels=levels, variant=variant, bk=bs["bk"],
                           bn=bs["bn"], out_dtype=out_dtype,
-                          interpret=interpret)
+                          interpret=interpret, bwd=bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bk", "bn", "out_dtype", "interpret"))
+    "levels", "variant", "bk", "bn", "out_dtype", "interpret", "bwd"))
 def _ata_fused_jit(a, *, levels, variant, bk, bn, out_dtype=None,
-                   interpret=None):
+                   interpret=None, bwd="fused"):
     from . import strassen_fused as _sf
     return _sf.fused_ata(a, levels=levels, variant=variant, bk=bk, bn=bn,
                          out_dtype=out_dtype,
-                         interpret=_auto_interpret(interpret))
+                         interpret=_auto_interpret(interpret), bwd=bwd)
 
 
 def ata_fused_packed(a, *, levels=2, variant="strassen", bk=None, bn=None,
-                     out_dtype=None, interpret=None):
+                     out_dtype=None, interpret=None, bwd="fused"):
     """Packed lower-tri block stack of ``a.T @ a`` via the fused schedule
-    (upper-triangular blocks are never computed or written)."""
+    (upper-triangular blocks are never computed or written).
+    Differentiable: the custom VJP consumes the *packed* cotangent
+    directly (``bwd="fused"``) — no dense n^2 buffer in the backward."""
     bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
     return _ata_fused_packed_jit(a, levels=levels, variant=variant,
                                  bk=bs["bk"], bn=bs["bn"],
-                                 out_dtype=out_dtype, interpret=interpret)
+                                 out_dtype=out_dtype, interpret=interpret,
+                                 bwd=bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bk", "bn", "out_dtype", "interpret"))
+    "levels", "variant", "bk", "bn", "out_dtype", "interpret", "bwd"))
 def _ata_fused_packed_jit(a, *, levels, variant, bk, bn, out_dtype=None,
-                          interpret=None):
+                          interpret=None, bwd="fused"):
     from . import strassen_fused as _sf
     packed, _ = _sf.fused_ata_packed(
         a, levels=levels, variant=variant, bk=bk, bn=bn,
-        out_dtype=out_dtype, interpret=_auto_interpret(interpret))
+        out_dtype=out_dtype, interpret=_auto_interpret(interpret), bwd=bwd)
     return packed
 
 
+def symm_matmul(x, s_packed, *, levels=2, variant="strassen", bm=None,
+                diag_sym=False, out_dtype=None, interpret=None):
+    """``x @ Sym`` where Sym is given only as its packed lower-triangular
+    tile stack (``syrk_packed`` / ``ata_fused_packed`` layout; the tile
+    edge is read off the stack) — the symm-schedule kernel that powers
+    the fused Gram backward.  ``diag_sym=True`` computes
+    ``x @ (S + S^t)`` instead (the VJP operand)."""
+    bs = _resolve_blocks("ata", x.shape[0], x.shape[1], x.dtype, bm=bm)
+    return _symm_matmul_jit(x, s_packed, levels=levels, variant=variant,
+                            bm=bs["bm"], diag_sym=diag_sym,
+                            out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "variant", "bm", "diag_sym", "out_dtype", "interpret"))
+def _symm_matmul_jit(x, s_packed, *, levels, variant, bm, diag_sym,
+                     out_dtype=None, interpret=None):
+    from . import strassen_fused as _sf
+    return _sf.fused_symm_matmul(
+        x, s_packed, levels=levels, variant=variant, bm=bm,
+        diag_sym=diag_sym, out_dtype=out_dtype,
+        interpret=_auto_interpret(interpret))
+
+
 def matmul_fused(a, b, *, levels=2, variant="strassen", bm=None, bk=None,
-                 bn=None, out_dtype=None, interpret=None):
-    """``a @ b`` via the fused Strassen schedule kernel."""
+                 bn=None, out_dtype=None, interpret=None, bwd="fused"):
+    """``a @ b`` via the fused Strassen schedule kernel.  ``bwd="fused"``
+    (default) runs both VJP products through the same schedule with the
+    operand transposes folded into the index maps."""
     bs = _resolve_blocks("matmul", a.shape[0], b.shape[1], a.dtype,
                          bm=bm, bk=bk, bn=bn)
     return _matmul_fused_jit(a, b, levels=levels, variant=variant,
                              bm=bs["bm"], bk=bs["bk"], bn=bs["bn"],
-                             out_dtype=out_dtype, interpret=interpret)
+                             out_dtype=out_dtype, interpret=interpret,
+                             bwd=bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bm", "bk", "bn", "out_dtype", "interpret"))
+    "levels", "variant", "bm", "bk", "bn", "out_dtype", "interpret", "bwd"))
 def _matmul_fused_jit(a, b, *, levels, variant, bm, bk, bn, out_dtype=None,
-                      interpret=None):
+                      interpret=None, bwd="fused"):
     from . import strassen_fused as _sf
     return _sf.fused_matmul(a, b, levels=levels, variant=variant, bm=bm,
                             bk=bk, bn=bn, out_dtype=out_dtype,
-                            interpret=_auto_interpret(interpret))
+                            interpret=_auto_interpret(interpret), bwd=bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(

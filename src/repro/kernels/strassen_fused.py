@@ -22,12 +22,21 @@ Contributions are sorted by destination (``schedule.Plan.contributions``),
 so the accumulator hand-off needs no HBM read-modify-write and the TPU
 grid's sequential execution guarantees a single store per tile.
 
-Everything here is forward-only (no custom VJP yet); ``repro.core.ata``
-keeps the reference recursion for autodiff and as a numerical oracle.
+Autodiff (DESIGN.md §11): every entry point carries a custom VJP that runs
+the *backward* through the same leaf-task machinery.  The Gram backward
+``dA = A (S + S^t)`` has a symmetric right operand, so it executes a
+``plan_symm`` schedule (:func:`fused_symm_matmul`) that reads the packed
+lower-triangular cotangent directly — upper-triangle tiles are mirrored
+``(j, i)`` reads with the transpose folded into the index maps, and the
+dense n^2 cotangent buffer of the old dense-dot backward never exists in
+HBM.  ``bwd="dense"`` keeps the dense-dot baseline selectable for
+benchmarking (``benchmarks/bench_grads.py``).
 """
 from __future__ import annotations
 
 import functools
+import math
+import warnings
 
 import numpy as np
 import jax
@@ -36,14 +45,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.ata import ata_levels_for
-from ..core.schedule import plan_ata, plan_matmul
+from ..core.schedule import plan_ata, plan_matmul, plan_symm
 from ..core.strassen import strassen_levels_for
 from ..core.symmetry import unpack_tril_blocks
 from .ops import _auto_interpret
 from .syrk import _tri_decode
 
 __all__ = ["fused_ata", "fused_ata_packed", "fused_matmul",
-           "ata_traffic_model"]
+           "fused_symm_matmul", "ata_traffic_model",
+           "ata_bwd_traffic_model"]
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -57,19 +67,48 @@ def _round_up(x: int, mult: int) -> int:
 # = 4 MB single-buffered.
 MAX_OPERAND_TERMS = 8
 
+# (kind, variant, requested, clamped) combinations already warned about —
+# the clamp silently changing the schedule depth bit users before, so it
+# warns exactly once per distinct clamp.
+_CLAMP_WARNED: set = set()
+
+
+def _warn_fan_in_clamp(kind: str, variant: str, requested: int,
+                       clamped: int) -> None:
+    key = (kind, variant, requested, clamped)
+    if key in _CLAMP_WARNED:
+        return
+    _CLAMP_WARNED.add(key)
+    warnings.warn(
+        f"fused {kind} schedule: levels={requested} (variant={variant!r}) "
+        f"exceeds the MAX_OPERAND_TERMS={MAX_OPERAND_TERMS} VMEM operand "
+        f"fan-in; clamped to levels={clamped}",
+        stacklevel=3)
+
+
+def _fan_in_clamp(kind: str, plan_fn, levels: int, variant: str) -> int:
+    """Clamp ``levels`` until the plan's operand fan-in fits VMEM,
+    warning once per distinct clamp (the shape-driven clamp above this is
+    expected behaviour and stays silent)."""
+    requested = levels
+    while levels > 0 and plan_fn(levels, variant).max_terms > \
+            MAX_OPERAND_TERMS:
+        levels -= 1
+    if levels < requested:
+        _warn_fan_in_clamp(kind, variant, requested, levels)
+    return levels
+
 
 def _ata_geometry(m: int, n: int, levels: int, variant: str,
                   bk: int, bn: int):
     """Shared executor/traffic-model geometry (single source of truth).
 
     Clamps ``levels`` so (a) every leaf block holds at least one (bk, bn)
-    tile of real data and (b) the operand fan-in fits VMEM, then derives
-    leaf/padded shapes and grid extents.
+    tile of real data and (b) the operand fan-in fits VMEM (warned once),
+    then derives leaf/padded shapes and grid extents.
     """
     levels = min(levels, ata_levels_for(m, n, max(bk, bn)))
-    while levels > 0 and plan_ata(levels, variant).max_terms > \
-            MAX_OPERAND_TERMS:
-        levels -= 1
+    levels = _fan_in_clamp("ata", plan_ata, levels, variant)
     plan = plan_ata(levels, variant)
     B = plan.blocks
     mb = _round_up(max(m, 1), B * bk) // B     # leaf rows (bk multiple)
@@ -173,6 +212,7 @@ def fused_ata_packed(
     bn: int = 256,
     out_dtype=None,
     interpret=None,
+    bwd: str = "fused",
 ):
     """Packed lower-triangular block stack of ``tril(a.T @ a)`` via the
     fused schedule executor.
@@ -189,9 +229,71 @@ def fused_ata_packed(
     so every leaf block holds at least one (bk, bn) tile of real data —
     a (128, 128) input with 256-tiles runs as a single SYRK leaf rather
     than padding each empty leaf level 2x per dimension — and so the
-    operand fan-in fits VMEM (``MAX_OPERAND_TERMS``).
+    operand fan-in fits VMEM (``MAX_OPERAND_TERMS``, warned once).
+
+    Differentiable: the custom VJP consumes the *packed* cotangent
+    directly through :func:`fused_symm_matmul` (``bwd="fused"``, the
+    default) — ``dA = A (S + S^t)`` with S the block-lower cotangent,
+    no dense n^2 buffer ever materialized.  ``bwd="dense"`` selects the
+    classical dense-dot baseline (unpack + ``A @ (S + S^t)``) for
+    benchmarking.
     """
     interpret = _auto_interpret(interpret)
+    m, n = a.shape
+    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+    packed = _fused_ata_packed_core(a, levels, variant, bk, bn, out_dtype,
+                                    interpret, bwd)
+    return packed, geo["N"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+def _fused_ata_packed_core(a, levels, variant, bk, bn, out_dtype, interpret,
+                           bwd):
+    return _fused_ata_packed_exec(a, levels, variant, bk, bn, out_dtype,
+                                  interpret)[0]
+
+
+def _fused_ata_packed_fwd(a, levels, variant, bk, bn, out_dtype, interpret,
+                          bwd):
+    return (_fused_ata_packed_core(a, levels, variant, bk, bn, out_dtype,
+                                   interpret, bwd), a)
+
+
+def _fused_ata_packed_bwd(levels, variant, bk, bn, out_dtype, interpret,
+                          bwd, a, gp):
+    # vdot(gp, packed(A)) has S = block-lower cotangent (diagonal tiles
+    # full — the forward computes them full), so dA = A (S + S^t): the
+    # packed stack *is* S and feeds the symm executor directly.
+    acc = jnp.promote_types(a.dtype, jnp.float32)
+    m, n = a.shape
+    if bwd == "dense":
+        geo = _ata_geometry(m, n, levels, variant, bk, bn)
+        M, N = geo["M"], geo["N"]
+        s = unpack_tril_blocks(gp.astype(acc), N, bn, symmetrize=False)
+        ap = jnp.pad(a.astype(acc), ((0, M - m), (0, N - n)))
+        da = jnp.dot(ap, s + s.T, preferred_element_type=acc)[:m, :n]
+    else:
+        da = fused_symm_matmul(a, gp, levels=levels, variant=variant,
+                               bm=bk, diag_sym=True, out_dtype=acc,
+                               interpret=interpret)[:, :n]
+    return (da.astype(a.dtype),)
+
+
+_fused_ata_packed_core.defvjp(_fused_ata_packed_fwd, _fused_ata_packed_bwd)
+
+
+def _fused_ata_packed_exec(
+    a: jax.Array,
+    levels: int,
+    variant: str,
+    bk: int,
+    bn: int,
+    out_dtype,
+    interpret,
+):
+    """Forward executor (no autodiff surface — see the custom VJP above)."""
     m, n = a.shape
     geo = _ata_geometry(m, n, levels, variant, bk, bn)
     plan, levels = geo["plan"], geo["levels"]
@@ -236,6 +338,11 @@ def fused_ata_packed(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_tri * bn, bn), out_dtype),
+        # output tiles (t) are independent -> megacore partitions them;
+        # the (contribution, K) sweep carries the VMEM accumulator and
+        # must stay sequential per tile.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(*tables, *([a] * (2 * tmax)))
     return packed, N
@@ -250,46 +357,300 @@ def fused_ata(
     bn: int = 256,
     out_dtype=None,
     interpret=None,
+    bwd: str = "fused",
 ) -> jax.Array:
     """Dense ``tril(a.T @ a)`` at the original size via the fused pipeline.
 
-    Differentiable: carries a custom VJP (``dA = A (S + S^t)`` with
-    ``S = tril(cotangent)``), so ``mode="auto"`` -> fused on TPU keeps
-    ``jax.grad`` working.  The packed entry point stays forward-only.
+    Differentiable: ``dA = A (S + S^t)`` with ``S = tril(cotangent)``.
+    ``bwd="fused"`` (default) runs the backward through the symm schedule
+    executor (:func:`fused_symm_matmul`): the cotangent is gathered
+    straight into the packed lower-triangular tile stack (n(n+1)/2
+    storage, per-tile slices — no dense S + S^t or padded-S buffer) and
+    the product runs the same leaf-task Strassen pipeline as the forward.
+    ``bwd="dense"`` keeps the classical ``jnp.dot(a, s + s.T)`` baseline.
     """
     interpret = _auto_interpret(interpret)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-    return _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret)
+    return _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret,
+                            bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
-def _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+def _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret, bwd):
     n = a.shape[1]
-    packed, n_pad = fused_ata_packed(
-        a, levels=levels, variant=variant, bk=bk, bn=bn,
-        out_dtype=out_dtype, interpret=interpret)
+    packed, n_pad = _fused_ata_packed_exec(
+        a, levels, variant, bk, bn, out_dtype, interpret)
     dense = unpack_tril_blocks(packed, n_pad, bn, symmetrize=False)
     # diagonal blocks are computed full — drop their upper halves
     return jnp.tril(dense)[:n, :n]
 
 
-def _fused_ata_dense_fwd(a, levels, variant, bk, bn, out_dtype, interpret):
+def _fused_ata_dense_fwd(a, levels, variant, bk, bn, out_dtype, interpret,
+                         bwd):
     return (_fused_ata_dense(a, levels, variant, bk, bn, out_dtype,
-                             interpret), a)
+                             interpret, bwd), a)
+
+
+def _pack_cotangent(g: jax.Array, n: int, n_pad: int, bn: int) -> jax.Array:
+    """Packed lower-triangular (bn, bn) tile stack of ``S = tril(g)``,
+    zero-padded to ``n_pad`` — built from per-tile slices of ``g``, so the
+    padded dense S (and a fortiori S + S^t) never materializes in HBM;
+    the stack is the only n(n+1)/2-sized temporary."""
+    t = n_pad // bn
+    blocks = []
+    for i in range(t):
+        r0 = i * bn
+        for j in range(i + 1):
+            c0 = j * bn
+            if r0 >= n or c0 >= n:
+                blocks.append(jnp.zeros((bn, bn), g.dtype))
+                continue
+            blk = g[r0:min(r0 + bn, n), c0:min(c0 + bn, n)]
+            pr, pc = bn - blk.shape[0], bn - blk.shape[1]
+            if pr or pc:
+                blk = jnp.pad(blk, ((0, pr), (0, pc)))
+            if i == j:
+                blk = jnp.tril(blk)
+            blocks.append(blk)
+    return jnp.concatenate(blocks, axis=0)
 
 
 def _fused_ata_dense_bwd(levels, variant, bk, bn, out_dtype, interpret,
-                         a, g):
+                         bwd, a, g):
     # C = tril(A^t A) => dL/dA = A (S + S^t), S = tril(dL/dC); the factor
     # 2 on the diagonal of S + S^t is exactly the quadratic term's.
     acc = jnp.promote_types(a.dtype, jnp.float32)
-    s = jnp.tril(g).astype(acc)
-    da = jnp.dot(a.astype(acc), s + s.T, preferred_element_type=acc)
+    m, n = a.shape
+    if bwd == "dense":
+        s = jnp.tril(g).astype(acc)
+        da = jnp.dot(a.astype(acc), s + s.T, preferred_element_type=acc)
+    else:
+        geo = _ata_geometry(m, n, levels, variant, bk, bn)
+        sp = _pack_cotangent(g.astype(acc), n, geo["N"], bn)
+        da = fused_symm_matmul(a, sp, levels=geo["levels"], variant=variant,
+                               bm=bk, diag_sym=True, out_dtype=acc,
+                               interpret=interpret)[:, :n]
     return (da.astype(a.dtype),)
 
 
 _fused_ata_dense.defvjp(_fused_ata_dense_fwd, _fused_ata_dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused symm matmul: D = X @ Sym where Sym is given ONLY as the packed
+# lower-triangular (bs, bs) tile stack of S (syrk / fused-ATA layout).
+# The executor for ``core.schedule.plan_symm`` — and the engine of the
+# Gram backward: dA = A (S + S^t) with S the (packed) cotangent.
+#
+# Upper-triangle tile reads (gr < gc) are mirrored (gc, gr) reads of the
+# stored stack with the transpose folded into the index maps; plan-level
+# mirrored leaves (the 4th element of symm right terms) swap their
+# within-leaf tile offsets the same way.  With ``diag_sym`` the diagonal
+# tiles contribute S_ii + S_ii^t — the packed cotangent IS the right
+# operand, and the dense n^2 cotangent never exists in HBM.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _symm_tables(levels: int, variant: str):
+    """plan_symm lowered to int32 scalar-prefetch tables; the extra
+    ``rtrn`` table carries the per-term mirror flag."""
+    plan = plan_symm(levels, variant)
+    b = plan.blocks
+    n_c, tmax = plan.max_contributions, plan.max_terms
+    sign = np.zeros((b * b, n_c), np.int32)
+    lrow = np.zeros((b * b, n_c, tmax), np.int32)
+    lcol = np.zeros_like(lrow)
+    lsgn = np.zeros_like(lrow)
+    rrow = np.zeros_like(lrow)
+    rcol = np.zeros_like(lrow)
+    rsgn = np.zeros_like(lrow)
+    rtrn = np.zeros_like(lrow)
+    for (di, dj), contribs in plan.by_dest().items():
+        ld = di * b + dj
+        for s, contrib in enumerate(contribs):
+            sign[ld, s] = contrib.sign
+            for p, (r, c, sg) in enumerate(contrib.left):
+                lrow[ld, s, p], lcol[ld, s, p], lsgn[ld, s, p] = r, c, sg
+            for q, (r, c, sg, tr) in enumerate(contrib.right):
+                rrow[ld, s, q], rcol[ld, s, q] = r, c
+                rsgn[ld, s, q], rtrn[ld, s, q] = sg, tr
+    return sign, lrow, lcol, lsgn, rrow, rcol, rsgn, rtrn
+
+
+def _symm_coords(rrow_ref, rcol_ref, rtrn_ref, ld, c, qt, q, k, jq):
+    """Conceptual global tile coords (gr, gc) of Sym for right term ``qt``.
+
+    Plan-mirrored leaves (rtrn == 1) store the transposed leaf, so their
+    within-leaf offsets swap; diagonal leaves straddle the stored triangle
+    at tile granularity, handled downstream by max/min + transpose."""
+    t = rtrn_ref[ld, c, qt]
+    gr = rrow_ref[ld, c, qt] * q + jnp.where(t != 0, jq, k)
+    gc = rcol_ref[ld, c, qt] * q + jnp.where(t != 0, k, jq)
+    return gr, gc
+
+
+def _fused_symm_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
+                       rrow_ref, rcol_ref, rsgn_ref, rtrn_ref, *refs,
+                       tmax: int, nbm: int, q: int, n_c: int, n_k: int,
+                       blocks: int, diag_sym: bool):
+    x_refs = refs[:tmax]
+    s_refs = refs[tmax:2 * tmax]
+    o_ref, acc_ref = refs[2 * tmax], refs[2 * tmax + 1]
+    i, j = pl.program_id(0), pl.program_id(1)
+    c, k = pl.program_id(2), pl.program_id(3)
+    ld = (i // nbm) * blocks + j // q
+    jq = j % q
+    sgn = sign_ref[ld, c]
+
+    @pl.when((c == 0) & (k == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(sgn != 0)
+    def _accumulate():
+        left = _signed_sum(x_refs, lsgn_ref, ld, c)
+        right = None
+        for qt, ref in enumerate(s_refs):
+            gr, gc = _symm_coords(rrow_ref, rcol_ref, rtrn_ref, ld, c, qt,
+                                  q, k, jq)
+            tile = ref[...].astype(jnp.float32)
+            # the index map fetched the stored (max, min) tile; transpose
+            # in VMEM whenever the conceptual read was above the diagonal
+            # or the leaf itself was plan-mirrored
+            mirrored = (rtrn_ref[ld, c, qt] != 0) | (gr < gc)
+            tile = jnp.where(mirrored, tile.T, tile)
+            if diag_sym:
+                # the S + S^t operand: diagonal tiles double symmetrically
+                tile = jnp.where(gr == gc, tile + tile.T, tile)
+            term = tile * rsgn_ref[ld, c, qt].astype(jnp.float32)
+            right = term if right is None else right + term
+        acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
+            left, right, preferred_element_type=jnp.float32)
+
+    @pl.when((c == n_c - 1) & (k == n_k - 1))
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _symm_geometry(m: int, T: int, levels: int, variant: str, bm: int):
+    """Level clamp + padded-row geometry for the symm executor (shared
+    with ``ata_bwd_traffic_model``).  ``T`` is the packed stack's tile
+    count per side; the column side cannot be padded (the stack layout is
+    fixed), so levels clamp to divisors of T."""
+    while levels > 0 and T % (1 << levels):
+        levels -= 1
+    levels = _fan_in_clamp("symm", plan_symm, levels, variant)
+    plan = plan_symm(levels, variant)
+    B = plan.blocks
+    mb = _round_up(max(m, 1), B * bm) // B
+    return {"plan": plan, "levels": levels, "M": B * mb,
+            "nbm": mb // bm, "q": T // B}
+
+
+def fused_symm_matmul(
+    x: jax.Array,
+    s_packed: jax.Array,
+    *,
+    levels: int = 2,
+    variant: str = "strassen",
+    bm: int = 256,
+    diag_sym: bool = False,
+    out_dtype=None,
+    interpret=None,
+) -> jax.Array:
+    """``x @ Sym`` via the flattened symm schedule, one fused kernel.
+
+    ``s_packed`` is the packed lower-triangular tile stack of S —
+    shape (T(T+1)/2 * bs, bs) in ``kernels.syrk`` / ``fused_ata_packed``
+    ordering (the tile edge ``bs`` is read off the stack's trailing dim).
+
+    * ``diag_sym=False``: Sym is the symmetric completion of the stack
+      (diagonal tiles stored full); computes ``x @ Sym``.
+    * ``diag_sym=True``: Sym = S + S^t with S the block-lower matrix the
+      stack represents — the Gram-VJP operand.  Identical mirrored reads;
+      diagonal tiles contribute ``tile + tile^t``.
+
+    ``x`` is zero-padded on the right to the stack's T*bs columns (exact:
+    the padded columns multiply rows of Sym that padded-A gradients
+    discard) and on the bottom to leaf multiples.  Returns
+    ``(x.shape[0], T*bs)``.
+
+    Same fusion contract as the forward: operand sums and mirrored
+    transposes live in VMEM only, fp32 VMEM accumulation, one HBM write
+    per output tile, no dense Sym (or S + S^t) buffer ever exists.
+    """
+    interpret = _auto_interpret(interpret)
+    if x.ndim != 2 or s_packed.ndim != 2:
+        raise ValueError(f"bad ranks: {x.shape} x packed {s_packed.shape}")
+    bs = s_packed.shape[1]
+    if s_packed.shape[0] % bs:
+        raise ValueError(f"packed stack {s_packed.shape} not a (bs, bs) "
+                         "tile stack")
+    n_tri = s_packed.shape[0] // bs
+    T = (math.isqrt(8 * n_tri + 1) - 1) // 2
+    if T * (T + 1) // 2 != n_tri:
+        raise ValueError(f"stack of {n_tri} tiles is not triangular")
+    N = T * bs
+    m, nx = x.shape
+    if nx > N:
+        raise ValueError(f"x has {nx} cols but the stack spans {N}")
+    if nx < N:
+        x = jnp.pad(x, ((0, 0), (0, N - nx)))
+    out_dtype = (jnp.promote_types(jnp.promote_types(x.dtype,
+                                                     s_packed.dtype),
+                                   jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+
+    geo = _symm_geometry(m, T, levels, variant, bm)
+    plan, levels = geo["plan"], geo["levels"]
+    B, M, nbm, q = plan.blocks, geo["M"], geo["nbm"], geo["q"]
+    if M != m:
+        x = jnp.pad(x, ((0, M - m), (0, 0)))
+    n_k = q
+    tmax, n_c = plan.max_terms, plan.max_contributions
+    tables = _symm_tables(levels, variant)
+
+    def left_map(p):
+        def index_map(i, j, c, k, sign, lrow, lcol, lsgn,
+                      rrow, rcol, rsgn, rtrn):
+            ld = (i // nbm) * B + j // q
+            return (lrow[ld, c, p] * nbm + i % nbm, lcol[ld, c, p] * q + k)
+        return index_map
+
+    def right_map(qt):
+        def index_map(i, j, c, k, sign, lrow, lcol, lsgn,
+                      rrow, rcol, rsgn, rtrn):
+            ld = (i // nbm) * B + j // q
+            gr, gc = _symm_coords(rrow, rcol, rtrn, ld, c, qt, q, k, j % q)
+            # the mirror, folded into the index map: always fetch the
+            # stored lower-triangle tile
+            fr = jnp.maximum(gr, gc)
+            fc = jnp.minimum(gr, gc)
+            return (fr * (fr + 1) // 2 + fc, 0)
+        return index_map
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=8,
+        grid=(M // bm, T, n_c, n_k),
+        in_specs=[pl.BlockSpec((bm, bs), left_map(p)) for p in range(tmax)]
+        + [pl.BlockSpec((bs, bs), right_map(qt)) for qt in range(tmax)],
+        out_specs=pl.BlockSpec((bm, bs), lambda i, j, c, k, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
+    )
+    kernel = functools.partial(_fused_symm_kernel, tmax=tmax, nbm=nbm, q=q,
+                               n_c=n_c, n_k=n_k, blocks=B,
+                               diag_sym=diag_sym)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(*tables, *([x] * tmax), *([s_packed] * tmax))
+    return out[:m]
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +697,63 @@ def ata_traffic_model(
     }
 
 
+def ata_bwd_traffic_model(
+    m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    bk: int = 256, bn: int = 256, in_bytes: int = 4, cot_bytes: int = 4,
+    cotangent: str = "packed",
+) -> dict:
+    """HBM bytes of the Gram *backward* ``dA = A (S + S^t)`` on an (m, n)
+    forward problem — the fused symm-schedule kernel vs the dense-dot
+    baseline it replaces.  Shares ``_ata_geometry`` / ``_symm_geometry``
+    with the executors, so the model cannot drift from their clamping.
+
+    ``cotangent="packed"``: the cotangent arrives as the packed stack
+    (``fused_ata_packed``'s VJP) and feeds the kernel directly — zero
+    HBM intermediates beyond an optional pad copy of A.
+    ``cotangent="dense"``: the dense entry point first gathers tril(g)
+    into the packed stack (the stack — n(n+1)/2-ish bytes — is the only
+    temporary).
+
+    The baseline models what the dense-dot backward materializes
+    semantically: ``tril(g)`` (select), ``S^t`` (transpose) and
+    ``S + S^t`` (add) — three dense N^2 buffers.  An
+    ``hbm_intermediate_census`` of its compiled HLO lands near this
+    (XLA fusion may materialize fewer; the packed entry's unpack scatter
+    adds more).  The fused read term honestly includes the
+    contribution-slot padding amplification, same as the forward model.
+    """
+    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    M, N = geo["M"], geo["N"]
+    T = N // bn
+    sgeo = _symm_geometry(M, T, geo["levels"], variant, bk)
+    plan, q = sgeo["plan"], sgeo["q"]
+    assert sgeo["M"] == M, (sgeo["M"], M)   # bwd reuses the forward padding
+    grid = (M // bk) * T * plan.max_contributions * q
+    reads = grid * plan.max_terms * (bk * bn * in_bytes
+                                     + bn * bn * cot_bytes)
+    writes = M * N * 4                       # dA in the fp32 accum dtype
+    stack_bytes = T * (T + 1) // 2 * bn * bn * cot_bytes
+    pad_copy = M * N * in_bytes if (M, N) != (m, n) else 0
+    fused_inter = pad_copy + (stack_bytes if cotangent == "dense" else 0)
+    dense_inter = 3 * N * N * cot_bytes
+    return {
+        "grid_steps": grid,
+        "read_bytes": reads,
+        "write_bytes": writes,
+        "intermediate_bytes": fused_inter,
+        "packed_stack_bytes": stack_bytes,
+        "padded_shape": (M, N),
+        "levels": sgeo["levels"],
+        "dense_baseline": {
+            "read_bytes": M * N * in_bytes + N * N * cot_bytes,
+            "write_bytes": M * N * 4,
+            "intermediate_bytes": dense_inter,
+        },
+        "intermediate_ratio_dense_over_fused": (
+            dense_inter / fused_inter if fused_inter else None),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Fused Strassen matmul: C = A @ B, dense output.
 # ---------------------------------------------------------------------------
@@ -343,7 +761,7 @@ def ata_traffic_model(
 def _fused_matmul_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
                          rrow_ref, rcol_ref, rsgn_ref, *refs,
                          tmax: int, nbm: int, nbn: int, n_c: int, n_k: int,
-                         blocks: int):
+                         blocks: int, trans_a: bool, trans_b: bool):
     a_refs = refs[:tmax]
     b_refs = refs[tmax:2 * tmax]
     o_ref, acc_ref = refs[2 * tmax], refs[2 * tmax + 1]
@@ -358,8 +776,15 @@ def _fused_matmul_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
 
     @pl.when(sgn != 0)
     def _accumulate():
+        # transposed operands are fetched mirrored (see the index maps)
+        # and flipped in VMEM *after* the signed sum — (sum s_p X_p)^t =
+        # sum s_p X_p^t, so one transpose serves the whole gather.
         left = _signed_sum(a_refs, lsgn_ref, ld, c)
+        if trans_a:
+            left = left.T
         right = _signed_sum(b_refs, rsgn_ref, ld, c)
+        if trans_b:
+            right = right.T
         acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
             left, right, preferred_element_type=jnp.float32)
 
@@ -379,14 +804,21 @@ def fused_matmul(
     bn: int = 256,
     out_dtype=None,
     interpret=None,
+    bwd: str = "fused",
 ) -> jax.Array:
     """``a @ b`` via the flattened Strassen schedule, one fused kernel.
 
     Same fusion contract as :func:`fused_ata_packed`: operand sums live in
     VMEM only, every output tile is written once, no ``M_i`` in HBM; the
     same level/fan-in clamps keep leaves at tile granularity and the
-    operand gather inside VMEM.  Differentiable via the standard matmul
-    VJP.
+    operand gather inside VMEM.
+
+    Differentiable: ``bwd="fused"`` (default) runs both VJP products
+    through the same schedule executor with the transposes *folded into
+    the index maps* (``da = g b^t`` fetches b tiles mirrored, ``db =
+    a^t g`` fetches a tiles mirrored — neither transpose materializes in
+    HBM), so the backward costs what the forward costs.  ``bwd="dense"``
+    keeps the classical ``jnp.dot`` VJP.
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes for matmul: {a.shape} x {b.shape}")
@@ -395,28 +827,31 @@ def fused_matmul(
                                    jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
     return _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
-                              interpret)
+                              interpret, bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
-def _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
-                       interpret):
-    m, k_dim = a.shape
-    _, n = b.shape
+def _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
+                       interpret, trans_a=False, trans_b=False):
+    """Schedule executor for C = op(a) @ op(b), op = transpose when the
+    flag is set — the transpose is folded into the BlockSpec index maps
+    (mirrored tile fetches) and undone tile-wise in VMEM, so no
+    transposed copy of an operand ever exists in HBM."""
+    m, k_dim = a.shape[::-1] if trans_a else a.shape
+    n, _ = b.shape if trans_b else b.shape[::-1]
     levels = min(levels, strassen_levels_for(m, k_dim, n, max(bm, bk, bn)))
-    while levels > 0 and plan_matmul(levels, variant).max_terms > \
-            MAX_OPERAND_TERMS:
-        levels -= 1
+    levels = _fan_in_clamp("matmul", plan_matmul, levels, variant)
     plan = plan_matmul(levels, variant)
     B = plan.blocks
     mb = _round_up(max(m, 1), B * bm) // B
     kb = _round_up(max(k_dim, 1), B * bk) // B
     nb = _round_up(max(n, 1), B * bn) // B
     M, K, N = B * mb, B * kb, B * nb
-    if (M, K) != (m, k_dim):
-        a = jnp.pad(a, ((0, M - m), (0, K - k_dim)))
-    if (K, N) != (k_dim, n):
-        b = jnp.pad(b, ((0, K - k_dim), (0, N - n)))
+    a_shape = (K, M) if trans_a else (M, K)
+    b_shape = (N, K) if trans_b else (K, N)
+    if a.shape != a_shape:
+        a = jnp.pad(a, [(0, t - s) for s, t in zip(a.shape, a_shape)])
+    if b.shape != b_shape:
+        b = jnp.pad(b, [(0, t - s) for s, t in zip(b.shape, b_shape)])
 
     n_k = kb // bk
     nbm, nbn = mb // bm, nb // bn
@@ -426,47 +861,74 @@ def _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
     def left_map(p):
         def index_map(i, j, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
             ld = (i // nbm) * B + j // nbn
-            return (lrow[ld, c, p] * nbm + i % nbm, lcol[ld, c, p] * n_k + k)
+            r = lrow[ld, c, p] * nbm + i % nbm
+            kk = lcol[ld, c, p] * n_k + k
+            return (kk, r) if trans_a else (r, kk)
         return index_map
 
     def right_map(q):
         def index_map(i, j, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
             ld = (i // nbm) * B + j // nbn
-            return (rrow[ld, c, q] * n_k + k, rcol[ld, c, q] * nbn + j % nbn)
+            kk = rrow[ld, c, q] * n_k + k
+            cc = rcol[ld, c, q] * nbn + j % nbn
+            return (cc, kk) if trans_b else (kk, cc)
         return index_map
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(M // bm, N // bn, n_c, n_k),
-        in_specs=[pl.BlockSpec((bm, bk), left_map(p)) for p in range(tmax)]
-        + [pl.BlockSpec((bk, bn), right_map(q)) for q in range(tmax)],
+        in_specs=[pl.BlockSpec((bk, bm) if trans_a else (bm, bk),
+                               left_map(p)) for p in range(tmax)]
+        + [pl.BlockSpec((bn, bk) if trans_b else (bk, bn),
+                        right_map(q)) for q in range(tmax)],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, c, k, *_: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     kernel = functools.partial(_fused_matmul_kernel, tmax=tmax, nbm=nbm,
-                               nbn=nbn, n_c=n_c, n_k=n_k, blocks=B)
+                               nbn=nbn, n_c=n_c, n_k=n_k, blocks=B,
+                               trans_a=trans_a, trans_b=trans_b)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
         interpret=interpret,
     )(*tables, *([a] * tmax), *([b] * tmax))
     return out[:m, :n]
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
+def _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
+                       interpret, bwd):
+    return _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
+                              interpret)
+
+
 def _fused_matmul_fwd(a, b, levels, variant, bm, bk, bn, out_dtype,
-                      interpret):
+                      interpret, bwd):
     return (_fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
-                               interpret), (a, b))
+                               interpret, bwd), (a, b))
 
 
 def _fused_matmul_bwd(levels, variant, bm, bk, bn, out_dtype, interpret,
-                      res, g):
+                      bwd, res, g):
     a, b = res
     acc = jnp.promote_types(jnp.promote_types(a.dtype, b.dtype), jnp.float32)
     gf = g.astype(acc)
-    da = jnp.dot(gf, b.T.astype(acc), preferred_element_type=acc)
-    db = jnp.dot(a.T.astype(acc), gf, preferred_element_type=acc)
+    if bwd == "dense":
+        da = jnp.dot(gf, b.T.astype(acc), preferred_element_type=acc)
+        db = jnp.dot(a.T.astype(acc), gf, preferred_element_type=acc)
+    else:
+        # the kernel upcasts tile-wise in VMEM, so bf16 residuals feed the
+        # backward without an HBM-wide fp32 copy
+        # da = g @ b^t — (m, n) x (n, k): K-dim is n, output cols k
+        da = _fused_matmul_exec(gf, b, levels, variant,
+                                bm, bn, bk, acc, interpret, trans_b=True)
+        # db = a^t @ g — (k, m) x (m, n): K-dim is m, output rows k
+        db = _fused_matmul_exec(a, gf, levels, variant,
+                                bk, bm, bn, acc, interpret, trans_a=True)
     return da.astype(a.dtype), db.astype(b.dtype)
 
 

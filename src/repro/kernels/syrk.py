@@ -89,5 +89,9 @@ def syrk_packed(
         out_specs=pl.BlockSpec((bn, bn), lambda t, k: (t, 0)),
         out_shape=jax.ShapeDtypeStruct((n_tri * bn, bn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
+        # output tiles (t) are independent -> megacore can partition them;
+        # the K sweep carries the VMEM accumulator and stays sequential.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, a)

@@ -205,6 +205,60 @@ def test_fused_fan_in_clamp():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_fan_in_clamp_warns_once_with_clamped_value():
+    """The MAX_OPERAND_TERMS clamp used to silently shallow the schedule;
+    it must warn (naming the clamped value), exactly once per distinct
+    clamp, and the shallower plan must actually be used."""
+    import warnings as _warnings
+    from repro.kernels import strassen_fused as sf
+
+    sf._CLAMP_WARNED.clear()
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
+        # shape alone allows 3+ levels (4096/256 tiles); winograd ATA L3
+        # fan-in is 16 > MAX_OPERAND_TERMS -> clamp to 2 with a warning
+        geo = sf._ata_geometry(1 << 12, 1 << 12, 3, "winograd", 256, 256)
+        assert geo["levels"] == 2 < 3          # the shallower plan is used
+        msgs = [str(w.message) for w in caught
+                if "MAX_OPERAND_TERMS" in str(w.message)]
+        assert len(msgs) == 1, msgs
+        assert "levels=3" in msgs[0] and "clamped to levels=2" in msgs[0]
+        # same clamp again -> no second warning
+        sf._ata_geometry(1 << 12, 1 << 12, 3, "winograd", 256, 256)
+        msgs = [str(w.message) for w in caught
+                if "MAX_OPERAND_TERMS" in str(w.message)]
+        assert len(msgs) == 1, msgs
+    # shape-driven clamps stay silent (expected behaviour, not a surprise)
+    sf._CLAMP_WARNED.clear()
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
+        sf._ata_geometry(128, 128, 3, "strassen", 256, 256)
+        assert not [w for w in caught
+                    if "MAX_OPERAND_TERMS" in str(w.message)]
+
+
+def test_dimension_semantics_parity_interpret():
+    """All three Pallas grids now declare dimension_semantics (output
+    tiles "parallel", contribution/K sweeps "arbitrary") so TPU megacore
+    can partition output tiles; results must be bit-for-bit unchanged in
+    interpret mode."""
+    from repro.kernels import ops
+
+    a = _rand((96, 64), seed=31)
+    want = _oracle(a)
+    # syrk grid (parallel, arbitrary)
+    got = ops.syrk(a, bk=16, bn=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+    # fused-ATA grid (parallel, arbitrary, arbitrary)
+    got = fused_ata(a, levels=2, bk=16, bn=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+    # fused-matmul grid (parallel, parallel, arbitrary, arbitrary)
+    b = _rand((64, 48), seed=32)
+    got = fused_matmul(a, b, levels=2, bm=16, bk=16, bn=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_fused_level_clamp_avoids_empty_leaves():
     """Small inputs must not pad to 2^levels x block per dim: the unroll
     depth clamps so each leaf holds at least one tile of real data."""

@@ -102,3 +102,36 @@ def test_tuned_blocks_run_correctly(tmp_cache):
     a64 = np.asarray(a, np.float64)
     want = np.tril(a64.T @ a64)
     assert np.abs(got - want).max() / np.abs(want).max() < 1e-5
+
+
+def test_autotune_bwd_candidates(tmp_cache):
+    """kind="ata_bwd" tunes the backward: fused candidates scored with
+    the exact backward traffic model, persisted under their own kind key,
+    and measurable as jax.grad wall clock through either VJP engine."""
+    entry = at.autotune(64, 64, kind="ata_bwd", blocks=(16, 32),
+                        levels=(0, 1), measure=False)
+    assert entry["mode"] == "fused"        # model-only ranks fused only
+    key_kinds = {k.split("/")[2] for k in at.load_cache()}
+    assert "ata_bwd" in key_kinds
+    # the backward model score separates the engines: the dense baseline
+    # carries the 3 n^2 buffers the fused path does not
+    fused_s = at.model_score(64, 64, {**entry, "mode": "fused"},
+                             kind="ata_bwd")
+    dense_s = at.model_score(64, 64, {**entry, "mode": "reference"},
+                             kind="ata_bwd")
+    assert fused_s != dense_s
+    # forward and backward entries live side by side
+    at.autotune(64, 64, kind="ata", blocks=(16,), levels=(0,),
+                measure=False)
+    assert at.lookup(64, 64, kind="ata_bwd") is not None
+    assert at.lookup(64, 64, kind="ata") is not None
+    assert at.lookup(64, 64, kind="ata_bwd") != at.lookup(64, 64, kind="ata")
+
+
+def test_autotune_bwd_measured(tmp_cache):
+    """measure=True times jax.grad through the fused forward with the
+    candidate's VJP engine."""
+    entry = at.autotune(32, 32, kind="ata_bwd", blocks=(16,), levels=(0, 1),
+                        measure=True, top_k=1, interpret=True)
+    assert entry["source"] == "measured"
+    assert entry["measured_s"] > 0

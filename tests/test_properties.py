@@ -11,10 +11,12 @@ from hypothesis import given, settings, strategies as st, HealthCheck
 from repro.core.ata import ata, ata_full
 from repro.core.distributed import (assemble_ring_gram, ring_layout_coords,
                                     ring_stack_len)
+from repro.core.schedule import plan_symm
 from repro.core.strassen import strassen_matmul
 from repro.core.symmetry import (pack_tril, unpack_tril, tri_index,
                                  tri_coords, tri_count)
 from repro.core.cost_model import (ata_mults_exact, strassen_mults_exact,
+                                   symm_leaf_count, symm_mults_exact,
                                    npl, lmax, latency_messages)
 from repro.data.pipeline import DataConfig, get_batch
 from repro.optim.grad_compress import int8_quantize, int8_dequantize
@@ -92,6 +94,26 @@ def test_mult_counts_monotone_and_below_classical(m, n):
     assert e > 0
     s = strassen_mults_exact(n, m, n, leaf=32)
     assert s <= m * n * n
+
+
+@given(st.integers(0, 4),
+       st.sampled_from(["strassen", "winograd", "classical"]),
+       st.integers(1, 8), st.integers(1, 8))
+@settings(**SET)
+def test_plan_symm_counts_match_cost_model(levels, variant, mb, nb):
+    """The flattened X @ Sym schedule (the fused Gram backward) has
+    exactly the leaf/multiplication counts of the cost model's closed
+    forms at every depth <= 4 — and never references the upper triangle
+    of the packed operand."""
+    plan = plan_symm(levels, variant)
+    assert plan.kind == "symm"
+    assert len(plan.products) == symm_leaf_count(levels, variant)
+    B = plan.blocks
+    assert plan.mult_count(mb, nb) == symm_mults_exact(
+        mb * B, nb * B, levels, variant)
+    for p in plan.products:
+        for r, c, _s, _t in p.right:
+            assert r >= c, "symm plan referenced the upper triangle"
 
 
 @given(st.integers(1, 5000))
