@@ -21,12 +21,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ata
-from repro.kernels.strassen_fused import ata_traffic_model
+from repro.kernels.strassen_fused import (aat_traffic_model,
+                                          ata_traffic_model,
+                                          rank_k_traffic_model)
 from repro.kernels import ops
 from repro.roofline.hlo_census import hbm_intermediate_census
 from .common import timeit, write_json
 
 LEVELS = 2
+
+
+def _rank_k_zero_stack(n, block):
+    t = -(-n // block)
+    return jnp.zeros((t * (t + 1) // 2 * block, block), jnp.float32)
 
 
 def run(quick: bool = False):
@@ -35,6 +42,20 @@ def run(quick: bool = False):
     leaf = block // 2          # forces the reference recursion to unroll
     a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
 
+    stack0 = _rank_k_zero_stack(n, block)
+
+    def rank_k_fused(x):
+        # ONE accumulating kernel: the state seeds the VMEM accumulator
+        from repro.kernels.strassen_fused import fused_rank_k_update
+        return fused_rank_k_update(stack0, x, levels=LEVELS, bk=block)
+
+    def rank_k_delta_baseline(x):
+        # status quo (PR 2-4 streamed update): compute the delta stack,
+        # then add it into the state — two HBM round trips of the stack
+        delta = ops.ata_fused_packed(x, levels=LEVELS, bk=block, bn=block,
+                                     out_dtype=jnp.float32)
+        return stack0 + delta
+
     treatments = {
         "dot": lambda x: jnp.tril(
             jnp.dot(x.T, x, preferred_element_type=jnp.float32)),
@@ -42,6 +63,20 @@ def run(quick: bool = False):
                                    mode="reference"),
         "fused": lambda x: ops.ata_fused_packed(x, levels=LEVELS, bk=block,
                                                 bn=block),
+        # the two new leaf-IR programs, tracked from day one:
+        # row gram (aat) — fused vs reference recursion vs jnp.dot
+        "aat_dot": lambda x: jnp.tril(
+            jnp.dot(x, x.T, preferred_element_type=jnp.float32)),
+        "aat_reference": lambda x: ata(x, gram_of="rows", levels=LEVELS,
+                                       leaf=leaf, mode="reference"),
+        "aat_fused": lambda x: ops.aat_fused_packed(x, levels=LEVELS,
+                                                    bm=block, bk=block),
+        # accumulating rank-k update — the fused single-kernel C += A^tA
+        # vs the status-quo streamed update (delta stack + add) vs dot
+        "rank_k_dot": lambda x: jnp.tril(
+            jnp.dot(x.T, x, preferred_element_type=jnp.float32)),
+        "rank_k_delta": rank_k_delta_baseline,
+        "rank_k_fused": rank_k_fused,
     }
 
     rows = []
@@ -60,8 +95,16 @@ def run(quick: bool = False):
             "census_total_bytes": census["total_bytes"],
             "census_by_opcode": census["by_opcode"],
         }
-        if name == "fused":
-            model = ata_traffic_model(n, n, levels=LEVELS, bk=block, bn=block)
+        if name in ("fused", "aat_fused", "rank_k_fused"):
+            if name == "fused":
+                model = ata_traffic_model(n, n, levels=LEVELS, bk=block,
+                                          bn=block)
+            elif name == "aat_fused":
+                model = aat_traffic_model(n, n, levels=LEVELS, bm=block,
+                                          bk=block)
+            else:
+                model = rank_k_traffic_model(n, n, levels=LEVELS, bk=block,
+                                             bn=block)
             row["hbm_intermediate_bytes"] = model["intermediate_bytes"]
             row["hbm_write_bytes"] = model["write_bytes"]
             row["hbm_read_bytes"] = model["read_bytes"]
@@ -85,12 +128,27 @@ def run(quick: bool = False):
           f"fused {fus_b/1e6:.3f} MB "
           f"({'ratio %.1fx' % ratio if ratio else 'fused has none'}; "
           f"acceptance: reference >= 2x fused)")
+    # the new leaf-IR programs' trajectories: aat (row gram) and the
+    # accumulating rank-k update, fused vs their baselines
+    aat_ref_b = by["aat_reference"]["hbm_intermediate_bytes"]
+    aat_fus_b = by["aat_fused"]["hbm_intermediate_bytes"]
+    rk_model = rank_k_traffic_model(n, n, levels=LEVELS, bk=block, bn=block)
+    rk_base = rk_model["baseline"]
     payload = {
         "rows": rows,
         "reference_intermediate_bytes": ref_b,
         "fused_intermediate_bytes": fus_b,
         "intermediate_ratio_ref_over_fused": ratio,
         "acceptance_ref_ge_2x_fused": ref_b >= 2 * fus_b,
+        "aat_reference_intermediate_bytes": aat_ref_b,
+        "aat_fused_intermediate_bytes": aat_fus_b,
+        "aat_acceptance_ref_ge_2x_fused": aat_ref_b >= 2 * aat_fus_b,
+        "rank_k_modeled_total_bytes": (
+            rk_model["read_bytes"] + rk_model["write_bytes"]
+            + rk_model["intermediate_bytes"]),
+        "rank_k_baseline_total_bytes": (
+            rk_base["read_bytes"] + rk_base["write_bytes"]
+            + rk_base["intermediate_bytes"]),
     }
     path = write_json("BENCH_ata.json", payload)
     print(f"[ata] wrote {path}")

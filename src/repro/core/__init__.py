@@ -13,13 +13,19 @@ from .distributed import (
 from .schedule import (
     plan_ata, plan_matmul, evaluate_ata_plan, evaluate_matmul_plan,
 )
-from . import cost_model, schedule
+from .leaf_ir import (
+    compile_program, interpret_program, register_algebra,
+    registered_algebras, PROGRAM_KINDS,
+)
+from . import cost_model, leaf_ir, schedule
 
 __all__ = [
     "ata", "ata_full", "ata_levels_for",
     "strassen_matmul", "strassen_levels_for",
     "plan_ata", "plan_matmul", "evaluate_ata_plan", "evaluate_matmul_plan",
-    "schedule",
+    "schedule", "leaf_ir",
+    "compile_program", "interpret_program", "register_algebra",
+    "registered_algebras", "PROGRAM_KINDS",
     "pack_tril", "unpack_tril", "pack_tril_blocks", "unpack_tril_blocks",
     "symmetrize_from_lower", "tri_count", "tri_index", "tri_coords",
     "gram_allreduce", "gram_reducescatter", "gram_ring", "gram_bfs25d",

@@ -51,6 +51,7 @@ def _default_base_syrk(a: jax.Array) -> jax.Array:
 def ata(
     a: jax.Array,
     *,
+    gram_of: str = "cols",
     levels: Union[int, str] = DEFAULT_LEVELS,
     leaf: int = DEFAULT_LEAF,
     variant: str = "strassen",
@@ -66,6 +67,18 @@ def ata(
 
     Args:
       a: (m, n) array — general rectangular, any size.
+      gram_of: which gram to compute — ``"cols"`` (default, the paper's
+        ``tril(a.T @ a)``, an (n, n) result) or ``"rows"``
+        (``tril(a @ a.T)``, an (m, m) result — the Arrigoni-Massini 2021
+        transpose-gram recursion).  On the fused path ``"rows"`` runs
+        the dedicated ``aat`` leaf program: the transpose of ``a`` never
+        materializes in HBM.  The reference recursion computes it as
+        ``ATA(a.T)`` (the identity the 2021 paper exploits), which is
+        the oracle but does materialize the transpose.  NOTE: the row
+        gram currently differentiates through the dense-dot VJP
+        (``dA = (S + S^t) A`` — a symmetric-LEFT product the symm
+        program does not yet express), so ``bwd=`` applies to the
+        ``"cols"`` path only.
       levels: recursion depth cap (0 => classical SYRK), or ``"auto"`` to
         recurse until a dimension reaches ``leaf`` (capped at
         ``AUTO_MAX_LEVELS`` — see strassen.py for the rationale).
@@ -97,12 +110,25 @@ def ata(
     """
     if a.ndim != 2:
         raise ValueError(f"ata expects a matrix, got shape {a.shape}")
+    if gram_of not in ("cols", "rows"):
+        raise ValueError(f"gram_of must be 'cols' or 'rows', got "
+                         f"{gram_of!r}")
     m, n = a.shape
     if levels == "auto":
         levels = min(ata_levels_for(m, n, leaf), AUTO_MAX_LEVELS)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
     mode = resolve_mode(mode, base_syrk, base_matmul)
+    if gram_of == "rows":
+        if mode == "fused":
+            from ..kernels.ops import aat_fused
+            return aat_fused(a, levels=levels, variant=variant, bm=block,
+                             bk=block, out_dtype=out_dtype,
+                             interpret=interpret)
+        # reference oracle: AAT(A) = ATA(A^t) — the 2021 paper's identity
+        syrk = base_syrk or _default_base_syrk
+        out = _ata_rec(a.T, levels, leaf, variant, syrk, base_matmul)
+        return out.astype(out_dtype)
     if mode == "fused":
         from ..kernels.ops import ata_fused
         return ata_fused(a, levels=levels, variant=variant, bk=block,

@@ -65,6 +65,64 @@ def ata_mults_exact(m: int, n: int, leaf: int = 32, levels: int | None = None,
     return res
 
 
+# ---------------------------------------------------------------------------
+# Leaf-IR closed forms (core/leaf_ir.py): leaf-op and operand-term counts
+# of every compiled program kind, as functions of the algebra table's two
+# scalars — products per level t and max operand fan-in q.  The property
+# suite (tests/test_leaf_ir.py) pins compile_program against these for
+# every registered algebra x kind x levels 0-3.
+# ---------------------------------------------------------------------------
+
+def _algebra_scalars(variant: str) -> tuple[int, int]:
+    """(products per level, max operand quadrant fan-in) of a registered
+    algebra table — derived from the table itself so user-registered
+    algebras are covered, but pure table inspection (no compilation)."""
+    from .leaf_ir import get_algebra
+    table = get_algebra(variant)
+    t = len(table)
+    q = max(max(len(a), len(b)) for a, b, _d in table)
+    return t, q
+
+
+def ir_leaf_count(kind: str, levels: int, variant: str = "strassen") -> int:
+    """Leaf ops of ``compile_program(kind, levels, variant)``.
+
+    matmul/symm: t^levels (one table row choice per level).
+    Gram kinds (ata/aat/rank_k): G(l) = 4 G(l-1) + 2 t^(l-1), G(0) = 1 —
+    four recursive gram quadrant calls plus two off-diagonal products
+    expanded with the table.
+    """
+    t, _q = _algebra_scalars(variant)
+    if kind in ("matmul", "symm"):
+        return t ** levels
+    if kind in ("ata", "aat", "rank_k"):
+        g = 1
+        for lv in range(1, levels + 1):
+            g = 4 * g + 2 * t ** (lv - 1)
+        return g
+    raise ValueError(f"unknown IR kind {kind!r}")
+
+
+def ir_max_terms(kind: str, levels: int, variant: str = "strassen") -> int:
+    """Max operand-term fan-in of a compiled program: q^levels for
+    matmul/symm; gram kinds expand their off-diagonal products one level
+    shallower (SYRK leaves are single-term), so q^(levels-1)."""
+    _t, q = _algebra_scalars(variant)
+    if kind in ("matmul", "symm"):
+        return q ** levels
+    if kind in ("ata", "aat", "rank_k"):
+        return q ** max(levels - 1, 0)
+    raise ValueError(f"unknown IR kind {kind!r}")
+
+
+def aat_mults_exact(m: int, n: int, leaf: int = 32,
+                    levels: int | None = None) -> int:
+    """Exact multiplication count of the row-gram recursion (Arrigoni-
+    Massini 2021, C = A A^t): AAT(A) = ATA(A^t) exactly, so the count is
+    the column-gram count with the dimensions swapped."""
+    return ata_mults_exact(n, m, leaf, levels)
+
+
 def symm_leaf_count(levels: int, variant: str = "strassen") -> int:
     """Leaf products of a flattened ``X @ Sym`` schedule
     (``core.schedule.plan_symm``): 7 per level for the fast variants,

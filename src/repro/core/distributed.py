@@ -183,9 +183,12 @@ def gram_ring(a_local: jax.Array, col_axis: str,
         # overlaps it with the *previous* iteration's block product because
         # there is no data dependence between them.
         cur = jax.lax.ppermute(cur, col_axis, perm)
-        # Device c now holds column block (c - s) % T.
-        blk = strassen_matmul(a_local.T, cur, levels=levels, leaf=leaf,
-                              variant=variant, mode=mode,
+        # Device c now holds column block (c - s) % T.  The A_loc^t
+        # operand runs through the leaf-program executor's trans_a index
+        # maps — no transposed copy of the shard in HBM (reference mode
+        # materializes it, as before).
+        blk = strassen_matmul(a_local, cur, trans_a=True, levels=levels,
+                              leaf=leaf, variant=variant, mode=mode,
                               out_dtype=out_dtype, interpret=interpret)
         if s == half and T % 2 == 0:
             # At the antipodal step each unordered pair {c, c-T/2} appears on
@@ -283,8 +286,8 @@ def gram_bfs25d(a_local: jax.Array, col_axis: str, rep_axis: str,
                 # product (same pattern as gram_ring).
                 cur = jax.lax.ppermute(cur, col_axis, hop)
             s = r + 1 + t * c          # this group's global ring step
-            blk = strassen_matmul(a_local.T, cur, levels=levels, leaf=leaf,
-                                  variant=variant, mode=mode,
+            blk = strassen_matmul(a_local, cur, trans_a=True, levels=levels,
+                                  leaf=leaf, variant=variant, mode=mode,
                                   out_dtype=out_dtype, interpret=interpret)
             valid = s <= half
             if T % 2 == 0:

@@ -1,0 +1,573 @@
+"""Leaf-program IR: one compilable representation for every fused variant.
+
+PRs 1-4 grew three separately hand-specialized planner/executor stacks —
+the forward ATA flattening, the symm (Gram-backward) flattening and the
+trans_a/trans_b matmul paths.  Benson & Ballard ("A Framework for
+Practical Parallel Fast Matrix Multiplication") make the observation this
+module encodes: a fast-matmul variant is *data* — an algebra table of
+(operand quadrants, output quadrants) coefficient rows — fed to one
+generic executor.  Arrigoni & Massini's follow-up ("Efficiently
+Parallelizable Strassen-Based Multiplication of a Matrix by its
+Transpose", 2021) is then just one more recursion over the same tables:
+``A A^t`` instead of ``A^t A``.
+
+The IR has three layers:
+
+* **Algebra tables** (:data:`ALGEBRAS`, :func:`register_algebra`) — the
+  per-level expansion rules.  Each table is a tuple of rows
+  ``(a_quads, b_quads, dest_quads)`` with entries ``(row, col, sign)``
+  over the 2x2 quadrant grid.  strassen / winograd / classical ship
+  registered; a new variant is one :func:`register_algebra` call away
+  (DESIGN.md §12).
+
+* **LeafProgram** (:func:`compile_program`) — a *kind* (``ata`` |
+  ``aat`` | ``matmul`` | ``symm`` | ``rank_k``) recursively flattened
+  against a table into leaf ops.  Every operand term is a uniform
+  4-tuple ``(row, col, sign, trans)`` naming a **stored** leaf block of
+  the operand plus a per-term transpose/mirror flag; every destination
+  is ``(di, dj, sign)``.  Whole-operand properties (storage layout,
+  operand-level transpose, which input the side reads) live on
+  :class:`OperandSpec`; output packing and the accumulate flag live on
+  :class:`OutputSpec`.  The executor in ``kernels/strassen_fused.py``
+  binds a program to tile sizes and lowers it to scalar-prefetch tables
+  for ONE generic ``pallas_call``.
+
+* **Interpreter** (:func:`interpret_program`) — a dense numpy evaluation
+  of a program, the parity oracle the Pallas executor (and the property
+  suite) is checked against.
+
+Kinds:
+
+``ata``     C = tril(A^t A)       — paper Alg. 1 (column gram).
+``aat``     C = tril(A A^t)       — Arrigoni-Massini 2021 (row gram):
+            C11 = AAT(A11)+AAT(A12); C22 = AAT(A21)+AAT(A22);
+            C21 = A21 A11^t + A22 A12^t (Strassen, right transposed).
+``matmul``  C = op(A) @ op(B)     — level-capped Strassen; the
+            ``trans_a``/``trans_b`` variants are the same op list with
+            the OperandSpec transposes set (terms always name stored
+            blocks, so the executor folds the swap into its index maps).
+``symm``    D = X @ Sym           — Sym symmetric, stored as its lower
+            triangle only; upper-triangle terms are mirrored onto the
+            stored triangle with the per-term trans flag set.
+``rank_k``  C += A^t A            — the ``ata`` program with the output
+            accumulate flag: the executor seeds each output tile from
+            the incoming packed stack instead of zero, so streamed Gram
+            chunks never re-materialize C.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "ALGEBRAS", "register_algebra", "get_algebra", "registered_algebras",
+    "OperandSpec", "OutputSpec", "LeafOp", "Contribution", "LeafProgram",
+    "PROGRAM_KINDS", "compile_program", "interpret_program",
+]
+
+# A term is (row_block, col_block, sign, trans) over the 2^levels leaf
+# grid of the STORED operand; trans = 1 means the leaf is read transposed
+# (symm: the term was mirrored onto the stored lower triangle).
+Term = Tuple[int, int, int, int]
+# A destination is (dest_row_block, dest_col_block, sign).
+Dest = Tuple[int, int, int]
+
+PROGRAM_KINDS = ("ata", "aat", "matmul", "symm", "rank_k")
+
+
+# ---------------------------------------------------------------------------
+# Algebra-table registry (Benson-Ballard: variants are data, not code)
+# ---------------------------------------------------------------------------
+
+# Strassen's 7 products, matching strassen.py (incl. the M7 sign erratum
+# fix recorded in DESIGN.md §9: second operand of M7 is B21 + B22).
+_STRASSEN = (
+    # M1 = (A11 + A22)(B11 + B22) -> C11 + C22
+    (((0, 0, 1), (1, 1, 1)), ((0, 0, 1), (1, 1, 1)), ((0, 0, 1), (1, 1, 1))),
+    # M2 = (A21 + A22) B11 -> C21 - C22
+    (((1, 0, 1), (1, 1, 1)), ((0, 0, 1),), ((1, 0, 1), (1, 1, -1))),
+    # M3 = A11 (B12 - B22) -> C12 + C22
+    (((0, 0, 1),), ((0, 1, 1), (1, 1, -1)), ((0, 1, 1), (1, 1, 1))),
+    # M4 = A22 (B21 - B11) -> C11 + C21
+    (((1, 1, 1),), ((1, 0, 1), (0, 0, -1)), ((0, 0, 1), (1, 0, 1))),
+    # M5 = (A11 + A12) B22 -> -C11 + C12
+    (((0, 0, 1), (0, 1, 1)), ((1, 1, 1),), ((0, 0, -1), (0, 1, 1))),
+    # M6 = (A21 - A11)(B11 + B12) -> C22
+    (((1, 0, 1), (0, 0, -1)), ((0, 0, 1), (0, 1, 1)), ((1, 1, 1),)),
+    # M7 = (A12 - A22)(B21 + B22) -> C11
+    (((0, 1, 1), (1, 1, -1)), ((1, 0, 1), (1, 1, 1)), ((0, 0, 1),)),
+)
+
+# Winograd's variant (7 mults / 15 adds), destinations expanded from the
+# u-term recombination in strassen.py.
+_WINOGRAD = (
+    # M1 = A11 B11
+    (((0, 0, 1),), ((0, 0, 1),),
+     ((0, 0, 1), (0, 1, 1), (1, 0, 1), (1, 1, 1))),
+    # M2 = A12 B21
+    (((0, 1, 1),), ((1, 0, 1),), ((0, 0, 1),)),
+    # M3 = (A11 + A12 - A21 - A22) B22
+    (((0, 0, 1), (0, 1, 1), (1, 0, -1), (1, 1, -1)), ((1, 1, 1),),
+     ((0, 1, 1),)),
+    # M4 = A22 (B11 - B12 - B21 + B22)
+    (((1, 1, 1),), ((0, 0, 1), (0, 1, -1), (1, 0, -1), (1, 1, 1)),
+     ((1, 0, -1),)),
+    # M5 = (A21 + A22)(B12 - B11)
+    (((1, 0, 1), (1, 1, 1)), ((0, 1, 1), (0, 0, -1)),
+     ((0, 1, 1), (1, 1, 1))),
+    # M6 = (A21 + A22 - A11)(B11 + B22 - B12)
+    (((1, 0, 1), (1, 1, 1), (0, 0, -1)), ((0, 0, 1), (1, 1, 1), (0, 1, -1)),
+     ((0, 1, 1), (1, 0, 1), (1, 1, 1))),
+    # M7 = (A11 - A21)(B22 - B12)
+    (((0, 0, 1), (1, 0, -1)), ((1, 1, 1), (0, 1, -1)),
+     ((1, 0, 1), (1, 1, 1))),
+)
+
+# Classical 2x2 block multiply in the same representation (8 products).
+_CLASSICAL = tuple(
+    (((i, k, 1),), ((k, j, 1),), ((i, j, 1),))
+    for i in (0, 1) for j in (0, 1) for k in (0, 1)
+)
+
+#: name -> algebra table.  Mutated only through :func:`register_algebra`.
+ALGEBRAS: Dict[str, tuple] = {}
+
+#: callbacks run whenever the registry changes — downstream lru caches
+#: keyed on the variant name (the executor's scalar-prefetch tables in
+#: ``kernels/strassen_fused.py``) register here so a re-registration
+#: cannot leave a stale compiled table behind.
+_INVALIDATION_HOOKS: list = []
+
+
+def on_algebra_change(fn) -> None:
+    """Register ``fn()`` to run whenever an algebra table is
+    (re)registered.  Used by variant-keyed caches downstream."""
+    _INVALIDATION_HOOKS.append(fn)
+
+
+def register_algebra(name: str, table, *, overwrite: bool = False) -> None:
+    """Register a 2x2-recursion algebra table under ``name``.
+
+    ``table`` is a tuple of rows ``(a_quads, b_quads, dest_quads)``;
+    each quad list holds ``(row, col, sign)`` entries over {0, 1}^2 with
+    sign in {+1, -1}.  Registration validates the format (not the
+    algebraic identity — :func:`interpret_program` against a dense
+    oracle is the correctness check; see tests/test_leaf_ir.py).
+    """
+    if not overwrite and name in ALGEBRAS:
+        raise ValueError(f"algebra {name!r} already registered")
+    for row in table:
+        if len(row) != 3:
+            raise ValueError(f"algebra row must be (a, b, dest) triple: "
+                             f"{row!r}")
+        for quads in row:
+            for q in quads:
+                r, c, s = q
+                if r not in (0, 1) or c not in (0, 1) or s not in (1, -1):
+                    raise ValueError(f"bad quadrant entry {q!r} in {name!r}")
+    ALGEBRAS[name] = tuple(tuple(map(tuple, (a, b, d))) for a, b, d in table)
+    # re-registration changes what compile_program(levels, name) means —
+    # and every downstream cache keyed on the variant name
+    if "compile_program" in globals():
+        compile_program.cache_clear()
+    for fn in _INVALIDATION_HOOKS:
+        fn()
+
+
+def get_algebra(name: str) -> tuple:
+    try:
+        return ALGEBRAS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algebra {name!r}; registered: "
+            f"{sorted(ALGEBRAS)}") from None
+
+
+def registered_algebras() -> Tuple[str, ...]:
+    return tuple(sorted(ALGEBRAS))
+
+
+register_algebra("strassen", _STRASSEN)
+register_algebra("winograd", _WINOGRAD)
+register_algebra("classical", _CLASSICAL)
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OperandSpec:
+    """Whole-side properties of one program operand.
+
+    source:    which executor input the side reads (0 = first array,
+               1 = second; ``ata``/``aat``/``rank_k`` read the same
+               array on both sides).
+    layout:    "dense" (a plain (rows, cols) array over the leaf grid)
+               or "tri" (the packed lower-triangular tile stack of
+               ``kernels/syrk.py`` — terms then carry the mirror flag).
+    transpose: the side is *used* transposed: the executor swaps the
+               roles of the stored axes in its index maps and flips the
+               gathered sum tile-wise in VMEM.  Never set together with
+               layout="tri" (tri mirroring is per-term).
+    """
+    source: int = 0
+    layout: str = "dense"
+    transpose: bool = False
+
+
+@dataclass(frozen=True)
+class OutputSpec:
+    """packing: "tri" = packed lower-triangular tile stack (di >= dj
+    always), "dense" = full block grid.  accumulate: seed each output
+    tile from an incoming stack (C += ...) instead of zero."""
+    packing: str = "dense"
+    accumulate: bool = False
+
+
+@dataclass(frozen=True)
+class LeafOp:
+    """One leaf product: (signed sum of stored blocks) x (signed sum)."""
+    kind: str                 # "syrk" (gram diagonal leaf) | "mm"
+    left: Tuple[Term, ...]
+    right: Tuple[Term, ...]
+    dests: Tuple[Dest, ...]
+
+
+@dataclass(frozen=True)
+class Contribution:
+    """One (leaf op, destination) pair — the unit the executor runs."""
+    di: int
+    dj: int
+    sign: int
+    left: Tuple[Term, ...]
+    right: Tuple[Term, ...]
+    kind: str
+
+
+@dataclass(frozen=True)
+class LeafProgram:
+    """A fully flattened schedule over a ``2^levels`` leaf-block grid.
+
+    This is the compat superset of the old ``core.schedule.Plan``:
+    ``products`` / ``blocks`` / ``max_terms`` / ``contributions`` /
+    ``by_dest`` / ``max_contributions`` / ``mult_count`` keep their
+    PR-1 meanings, and the new ``left_spec`` / ``right_spec`` /
+    ``out_spec`` fields carry what used to be implicit in the kind.
+    """
+    kind: str
+    levels: int
+    variant: str
+    ops: Tuple[LeafOp, ...]
+    left_spec: OperandSpec
+    right_spec: OperandSpec
+    out_spec: OutputSpec
+
+    # -- compat surface (Plan) ---------------------------------------------
+    @property
+    def products(self) -> Tuple[LeafOp, ...]:
+        return self.ops
+
+    @property
+    def blocks(self) -> int:
+        """Leaf blocks per matrix dimension."""
+        return 1 << self.levels
+
+    @property
+    def max_terms(self) -> int:
+        return max(max(len(p.left), len(p.right)) for p in self.ops)
+
+    @functools.lru_cache(maxsize=None)
+    def contributions(self) -> Tuple[Contribution, ...]:
+        """(op, destination) pairs, sorted by destination block."""
+        out = [
+            Contribution(di, dj, s, p.left, p.right, p.kind)
+            for p in self.ops for (di, dj, s) in p.dests
+        ]
+        out.sort(key=lambda c: (c.di, c.dj))
+        return tuple(out)
+
+    @functools.lru_cache(maxsize=None)
+    def by_dest(self) -> Dict[Tuple[int, int], Tuple[Contribution, ...]]:
+        grouped: Dict[Tuple[int, int], list] = {}
+        for c in self.contributions():
+            grouped.setdefault((c.di, c.dj), []).append(c)
+        return {k: tuple(v) for k, v in grouped.items()}
+
+    @property
+    def max_contributions(self) -> int:
+        return max(len(v) for v in self.by_dest().values())
+
+    def n_dests(self) -> int:
+        """Distinct leaf destinations of the output packing."""
+        B = self.blocks
+        return B * (B + 1) // 2 if self.out_spec.packing == "tri" else B * B
+
+    def dest_index(self, di: int, dj: int) -> int:
+        if self.out_spec.packing == "tri":
+            return di * (di + 1) // 2 + dj
+        return di * self.blocks + dj
+
+    def mult_count(self, mb: int, nb: int, kb: Optional[int] = None) -> int:
+        """Scalar multiplications the program performs with the given
+        leaf shapes.  Gram kinds (``ata``/``rank_k``: A leaves (mb, nb);
+        ``aat``: (mb, nb) with the roles of the grids swapped): SYRK
+        leaves compute only the lower triangle — the paper's n(n+1)/2
+        saving.  ``matmul``: leaves (mb, kb) x (kb, nb).  ``symm``: X
+        leaves (mb, nb) against square (nb, nb) leaves of the packed
+        operand.  Matches the ``cost_model`` closed forms evaluated with
+        ``leaf=0`` at the padded shape (tests/test_properties.py).
+        """
+        total = 0
+        for p in self.ops:
+            if p.kind == "syrk":
+                if self.kind == "aat":
+                    total += nb * mb * (mb + 1) // 2
+                else:
+                    total += mb * nb * (nb + 1) // 2
+            elif self.kind in ("ata", "rank_k"):
+                total += nb * mb * nb          # (nb, mb) @ (mb, nb)
+            elif self.kind == "aat":
+                total += mb * nb * mb          # (mb, nb) @ (nb, mb)
+            elif self.kind == "symm":
+                total += mb * nb * nb          # (mb, nb) @ (nb, nb)
+            else:
+                total += mb * (kb if kb is not None else nb) * nb
+        return total
+
+
+# ---------------------------------------------------------------------------
+# The compiler: kind x levels x algebra -> LeafProgram
+# ---------------------------------------------------------------------------
+
+def _expand(level: int, left, right, dests, kind, transpose_left,
+            transpose_right, table, out: List[LeafOp]):
+    """Recursively expand a block product ``level`` more times.
+
+    ``transpose_left`` / ``transpose_right``: that side is conceptually
+    ``X^t`` while its terms name stored blocks of ``X`` — quadrant
+    (qi, qj) of ``X^t`` is stored block (qj, qi), so quadrant bits
+    append swapped on that side.
+    """
+    if level <= 0:
+        out.append(LeafOp(kind, tuple(left), tuple(right), tuple(dests)))
+        return
+    for a_quads, b_quads, d_quads in table:
+        nl = []
+        for qi, qj, s in a_quads:
+            rb, cb = (qj, qi) if transpose_left else (qi, qj)
+            nl.extend((r * 2 + rb, c * 2 + cb, s0 * s, 0)
+                      for r, c, s0, _t in left)
+        nr = []
+        for qi, qj, s in b_quads:
+            rb, cb = (qj, qi) if transpose_right else (qi, qj)
+            nr.extend((r * 2 + rb, c * 2 + cb, s0 * s, 0)
+                      for r, c, s0, _t in right)
+        nd = []
+        for ci, cj, s in d_quads:
+            nd.extend((di * 2 + ci, dj * 2 + cj, s0 * s)
+                      for di, dj, s0 in dests)
+        _expand(level - 1, nl, nr, nd, kind, transpose_left,
+                transpose_right, table, out)
+
+
+def _compile_gram(levels: int, table, *, rows: bool) -> Tuple[LeafOp, ...]:
+    """Flatten the gram recursion (Alg. 1, or its 2021 row-space dual).
+
+    ``rows=False`` (ATA, C = A^t A over the column grid):
+      C11 = ATA(A11) + ATA(A21);  C22 = ATA(A12) + ATA(A22)
+      C21 = HASA(A12^t, A11) + HASA(A22^t, A21)
+    SYRK leaves land on diagonal destinations of the *column* grid, HASA
+    leaves strictly below — the left side is conceptually transposed.
+
+    ``rows=True`` (AAT, C = A A^t over the row grid — Arrigoni-Massini):
+      C11 = AAT(A11) + AAT(A12);  C22 = AAT(A21) + AAT(A22)
+      C21 = HASA(A21, A11^t) + HASA(A22, A12^t)
+    SYRK leaves land on diagonal destinations of the *row* grid; the
+    right side is conceptually transposed.
+    """
+    ops: List[LeafOp] = []
+
+    def node(r: int, c: int, depth: int):
+        if depth == levels:
+            d = r if rows else c
+            ops.append(LeafOp("syrk", ((r, c, 1, 0),), ((r, c, 1, 0),),
+                              ((d, d, 1),)))
+            return
+        for rb in (0, 1):
+            for cb in (0, 1):
+                node(r * 2 + rb, c * 2 + cb, depth + 1)
+        # the off-diagonal C21 of this node, expanded the remaining
+        # levels with the algebra table; terms name STORED blocks of A —
+        # the transpose flags handle the quadrant mirroring, the
+        # executor transposes tiles in VMEM.
+        for b in (0, 1):
+            if rows:
+                left = [(r * 2 + 1, c * 2 + b, 1, 0)]
+                right = [(r * 2 + 0, c * 2 + b, 1, 0)]
+                dest = [(r * 2 + 1, r * 2 + 0, 1)]
+            else:
+                left = [(r * 2 + b, c * 2 + 1, 1, 0)]
+                right = [(r * 2 + b, c * 2 + 0, 1, 0)]
+                dest = [(c * 2 + 1, c * 2 + 0, 1)]
+            _expand(levels - depth - 1, left, right, dest, "mm",
+                    not rows, rows, table, ops)
+
+    node(0, 0, 0)
+    return tuple(ops)
+
+
+@functools.lru_cache(maxsize=None)
+def compile_program(kind: str, levels: int, variant: str = "strassen", *,
+                    trans_a: bool = False,
+                    trans_b: bool = False) -> LeafProgram:
+    """Compile ``kind`` at ``levels`` against a registered algebra table.
+
+    ``trans_a`` / ``trans_b`` apply to ``matmul`` only: the op list is
+    identical (terms name stored blocks either way); only the operand
+    specs change, and the executor folds the swap into its index maps.
+    """
+    if levels < 0:
+        raise ValueError(f"levels must be >= 0, got {levels}")
+    if kind not in PROGRAM_KINDS:
+        raise ValueError(f"unknown program kind {kind!r} "
+                         f"(want one of {PROGRAM_KINDS})")
+    if (trans_a or trans_b) and kind != "matmul":
+        raise ValueError(f"trans_a/trans_b only apply to matmul, not {kind!r}")
+    table = get_algebra(variant)
+
+    if kind in ("ata", "rank_k"):
+        ops = _compile_gram(levels, table, rows=False)
+        return LeafProgram(
+            kind, levels, variant, ops,
+            left_spec=OperandSpec(source=0, transpose=True),
+            right_spec=OperandSpec(source=0),
+            out_spec=OutputSpec(packing="tri", accumulate=kind == "rank_k"))
+
+    if kind == "aat":
+        ops = _compile_gram(levels, table, rows=True)
+        return LeafProgram(
+            kind, levels, variant, ops,
+            left_spec=OperandSpec(source=0),
+            right_spec=OperandSpec(source=0, transpose=True),
+            out_spec=OutputSpec(packing="tri"))
+
+    if kind == "matmul":
+        ops: List[LeafOp] = []
+        _expand(levels, [(0, 0, 1, 0)], [(0, 0, 1, 0)], [(0, 0, 1)], "mm",
+                trans_a, trans_b, table, ops)
+        return LeafProgram(
+            kind, levels, variant, tuple(ops),
+            left_spec=OperandSpec(source=0, transpose=trans_a),
+            right_spec=OperandSpec(source=1, transpose=trans_b),
+            out_spec=OutputSpec(packing="dense"))
+
+    # symm: a matmul flattening with the right terms normalized onto the
+    # stored lower triangle — mirrored terms read transposed (trans = 1).
+    base = compile_program("matmul", levels, variant)
+    ops = tuple(
+        LeafOp("mm", p.left,
+               tuple((r, c, s, 0) if r >= c else (c, r, s, 1)
+                     for (r, c, s, _t) in p.right),
+               p.dests)
+        for p in base.ops)
+    return LeafProgram(
+        "symm", levels, variant, ops,
+        left_spec=OperandSpec(source=0),
+        right_spec=OperandSpec(source=1, layout="tri"),
+        out_spec=OutputSpec(packing="dense"))
+
+
+# ---------------------------------------------------------------------------
+# Dense numpy interpreter — the parity oracle, independent of Pallas.
+# ---------------------------------------------------------------------------
+
+def _leaf(a: np.ndarray, r: int, c: int, blocks: int) -> np.ndarray:
+    mb, nb = a.shape[0] // blocks, a.shape[1] // blocks
+    return a[r * mb:(r + 1) * mb, c * nb:(c + 1) * nb]
+
+
+def _gather_side(arr: np.ndarray, terms, blocks: int, spec: OperandSpec,
+                 diag_sym: bool = False) -> np.ndarray:
+    """Signed sum of one side's stored leaves, mirrors/transposes applied."""
+    out = None
+    for r, c, s, trans in terms:
+        if spec.layout == "tri":
+            assert r >= c, "tri-layout term referenced the upper triangle"
+            leaf = _leaf(arr, r, c, blocks)
+            if r == c:
+                low = np.tril(leaf)
+                # diag_sym: Sym = S + S^t, so the diagonal leaf doubles
+                # symmetrically; otherwise rebuild the symmetric completion
+                leaf = low + (low.T if diag_sym else np.tril(low, -1).T)
+            if trans:
+                leaf = leaf.T
+        else:
+            leaf = _leaf(arr, r, c, blocks)
+            if trans:
+                leaf = leaf.T
+        blk = s * leaf
+        out = blk if out is None else out + blk
+    if spec.layout != "tri" and spec.transpose:
+        out = out.T
+    return out
+
+
+def interpret_program(prog: LeafProgram, a: np.ndarray,
+                      b: Optional[np.ndarray] = None, *,
+                      c0: Optional[np.ndarray] = None,
+                      diag_sym: bool = False) -> np.ndarray:
+    """Execute a program densely in float64 numpy.
+
+    ``a`` (and ``b`` for two-input kinds) must be pre-padded to
+    ``prog.blocks`` multiples in both dims.  For ``symm``, ``b`` is the
+    dense (n, n) array whose strict upper triangle is provably never
+    read (the packed-storage contract); ``diag_sym`` computes
+    ``x @ (S + S^t)`` instead.  For ``rank_k``, ``c0`` is the (n, n)
+    initial C (lower triangle; defaults to zero).
+
+    Returns: tril(C) for tri-packed outputs, dense C otherwise.
+    """
+    B = prog.blocks
+    af = np.asarray(a, np.float64)
+    m, n = af.shape
+    assert m % B == 0 and n % B == 0, (af.shape, B)
+    operands = {0: af}
+    if prog.left_spec.source == 1 or prog.right_spec.source == 1:
+        assert b is not None, f"{prog.kind} needs a second operand"
+        operands[1] = np.asarray(b, np.float64)
+        if prog.right_spec.layout == "tri":
+            operands[1] = np.tril(operands[1])     # upper provably unread
+
+    # output geometry per kind
+    if prog.kind in ("ata", "rank_k"):
+        out_n = (n, n)
+    elif prog.kind == "aat":
+        out_n = (m, m)
+    elif prog.kind == "symm":
+        out_n = (m, operands[1].shape[1])
+    else:
+        la, lb = operands[0].shape, operands[1].shape
+        out_n = ((la[1] if prog.left_spec.transpose else la[0]),
+                 (lb[0] if prog.right_spec.transpose else lb[1]))
+    out = np.zeros(out_n, np.float64)
+    if c0 is not None:
+        assert prog.out_spec.accumulate, \
+            f"{prog.kind} output does not accumulate"
+        out += np.tril(np.asarray(c0, np.float64))
+    mb, nb = out_n[0] // B, out_n[1] // B
+
+    for p in prog.ops:
+        left = _gather_side(operands[prog.left_spec.source], p.left, B,
+                            prog.left_spec)
+        right = _gather_side(operands[prog.right_spec.source], p.right, B,
+                             prog.right_spec, diag_sym=diag_sym)
+        prod = left @ right
+        for di, dj, s in p.dests:
+            out[di * mb:(di + 1) * mb, dj * nb:(dj + 1) * nb] += s * prod
+    if prog.out_spec.packing == "tri":
+        out = np.tril(out)
+    return out

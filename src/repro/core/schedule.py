@@ -1,39 +1,31 @@
-"""Leaf-task schedule: the ATA/HASA recursion flattened at trace time.
+"""Leaf-task schedules — thin compatibility wrappers over the leaf IR.
 
-The reference recursion in ``ata.py``/``strassen.py`` materializes every
-Strassen operand sum, all 7 ``M_i`` products and per-level ``pad``/
-``concatenate`` copies in HBM.  This module removes the recursion entirely:
-for a fixed ``levels`` the whole computation is *planned* ahead of time as a
-flat list of leaf products, each of the form
+The flattening machinery that used to live here (PR 1: hand-rolled ATA /
+matmul expansion; PR 4: the symm variant) moved into ``core.leaf_ir`` as
+``compile_program(kind, levels, variant)`` against the registered algebra
+tables, together with aat (A A^t) and rank_k (C += A^t A) programs the
+old per-kind planners could not express.  These wrappers keep the PR-1
+``plan_*`` / ``evaluate_*`` names working for existing call sites and
+tests; new code should target :mod:`repro.core.leaf_ir` directly.
 
-    P = (sum_p s_p * A[r_p, c_p])^T  @  (sum_q t_q * A[r_q, c_q])
-
-where ``A[r, c]`` is a leaf block of the (zero-padded) input on a
-``2^levels x 2^levels`` grid, ``s_p, t_q`` are +-1 Strassen operand signs,
-and each product carries a list of +-1-signed *destinations* — leaf blocks
-of the lower triangle of C = A^t A.  Because C12 = C21^t is never computed
-(paper Alg. 1), every destination satisfies ``di >= dj``.
-
-The flattening rests on two identities:
-
-* a quadrant of ``X^t`` is the transpose of the mirrored quadrant of ``X``,
-  so Strassen operand sums over quadrants of ``A12^t`` are (transposes of)
-  signed sums of sub-blocks of ``A`` — no transpose is ever materialized;
-* Strassen recombination is linear with +-1 coefficients, so destinations
-  compose level by level into +-1-signed leaf destinations.
-
-``plan_ata(levels)`` / ``plan_matmul(levels)`` depend only on ``levels`` and
-``variant`` (never on shapes), so plans are cached and shared across every
-call site; the executor in ``repro.kernels.strassen_fused`` binds a plan to
-concrete block sizes.  See DESIGN.md §4 for the memory model.
+``Plan`` is an alias of :class:`repro.core.leaf_ir.LeafProgram` (the IR
+type is a compat superset: ``products`` / ``blocks`` / ``max_terms`` /
+``contributions`` / ``by_dest`` / ``max_contributions`` / ``mult_count``
+all keep their meanings).  Operand terms are uniformly 4-tuples
+``(row, col, sign, trans)`` — the old 3-tuple ata/matmul terms gained a
+trailing ``trans=0``.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Dict, List, Tuple
-
 import numpy as np
+
+from .leaf_ir import (
+    Contribution, LeafOp, LeafProgram, compile_program, interpret_program,
+)
+
+# compat aliases — the IR types subsume the PR-1 dataclasses
+Plan = LeafProgram
+Product = LeafOp
 
 __all__ = [
     "Product", "Contribution", "Plan",
@@ -41,344 +33,40 @@ __all__ = [
     "evaluate_ata_plan", "evaluate_matmul_plan", "evaluate_symm_plan",
 ]
 
-# A term is (row_block, col_block, sign) over the 2^levels leaf grid.
-# Right-operand terms of a "symm" plan carry a 4th element: the mirror flag
-# (1 = the leaf is stored at the mirrored (row, col) and must be read
-# transposed — see plan_symm).
-Term = Tuple[int, int, int]
-# A destination is (dest_row_block, dest_col_block, sign).
-Dest = Tuple[int, int, int]
 
-
-@dataclass(frozen=True)
-class Product:
-    """One leaf product: (signed sum of A blocks)^T-or-not @ (signed sum)."""
-    kind: str                 # "syrk" (diagonal gram leaf) | "mm" (matmul leaf)
-    left: Tuple[Term, ...]
-    right: Tuple[Term, ...]
-    dests: Tuple[Dest, ...]
-
-
-@dataclass(frozen=True)
-class Contribution:
-    """One (product, destination) pair — the unit the fused kernel executes."""
-    di: int
-    dj: int
-    sign: int
-    left: Tuple[Term, ...]
-    right: Tuple[Term, ...]
-    kind: str
-
-
-# ---------------------------------------------------------------------------
-# Per-level expansion tables: (a_quads, b_quads, dest_quads), each entry
-# (row, col, sign) over the 2x2 quadrant grid of the operand / output.
-# ---------------------------------------------------------------------------
-
-# Strassen's 7 products, matching strassen.py (incl. the M7 sign erratum
-# fix recorded in DESIGN.md §9: second operand of M7 is B21 + B22).
-_STRASSEN = (
-    # M1 = (A11 + A22)(B11 + B22) -> C11 + C22
-    (((0, 0, 1), (1, 1, 1)), ((0, 0, 1), (1, 1, 1)), ((0, 0, 1), (1, 1, 1))),
-    # M2 = (A21 + A22) B11 -> C21 - C22
-    (((1, 0, 1), (1, 1, 1)), ((0, 0, 1),), ((1, 0, 1), (1, 1, -1))),
-    # M3 = A11 (B12 - B22) -> C12 + C22
-    (((0, 0, 1),), ((0, 1, 1), (1, 1, -1)), ((0, 1, 1), (1, 1, 1))),
-    # M4 = A22 (B21 - B11) -> C11 + C21
-    (((1, 1, 1),), ((1, 0, 1), (0, 0, -1)), ((0, 0, 1), (1, 0, 1))),
-    # M5 = (A11 + A12) B22 -> -C11 + C12
-    (((0, 0, 1), (0, 1, 1)), ((1, 1, 1),), ((0, 0, -1), (0, 1, 1))),
-    # M6 = (A21 - A11)(B11 + B12) -> C22
-    (((1, 0, 1), (0, 0, -1)), ((0, 0, 1), (0, 1, 1)), ((1, 1, 1),)),
-    # M7 = (A12 - A22)(B21 + B22) -> C11
-    (((0, 1, 1), (1, 1, -1)), ((1, 0, 1), (1, 1, 1)), ((0, 0, 1),)),
-)
-
-# Winograd's variant (7 mults / 15 adds), destinations expanded from the
-# u-term recombination in strassen.py.
-_WINOGRAD = (
-    # M1 = A11 B11
-    (((0, 0, 1),), ((0, 0, 1),),
-     ((0, 0, 1), (0, 1, 1), (1, 0, 1), (1, 1, 1))),
-    # M2 = A12 B21
-    (((0, 1, 1),), ((1, 0, 1),), ((0, 0, 1),)),
-    # M3 = (A11 + A12 - A21 - A22) B22
-    (((0, 0, 1), (0, 1, 1), (1, 0, -1), (1, 1, -1)), ((1, 1, 1),),
-     ((0, 1, 1),)),
-    # M4 = A22 (B11 - B12 - B21 + B22)
-    (((1, 1, 1),), ((0, 0, 1), (0, 1, -1), (1, 0, -1), (1, 1, 1)),
-     ((1, 0, -1),)),
-    # M5 = (A21 + A22)(B12 - B11)
-    (((1, 0, 1), (1, 1, 1)), ((0, 1, 1), (0, 0, -1)),
-     ((0, 1, 1), (1, 1, 1))),
-    # M6 = (A21 + A22 - A11)(B11 + B22 - B12)
-    (((1, 0, 1), (1, 1, 1), (0, 0, -1)), ((0, 0, 1), (1, 1, 1), (0, 1, -1)),
-     ((0, 1, 1), (1, 0, 1), (1, 1, 1))),
-    # M7 = (A11 - A21)(B22 - B12)
-    (((0, 0, 1), (1, 0, -1)), ((1, 1, 1), (0, 1, -1)),
-     ((1, 0, 1), (1, 1, 1))),
-)
-
-# Classical 2x2 block multiply in the same representation (8 products) —
-# lets the planner/kernel serve variant="classical" with zero extra code.
-_CLASSICAL = tuple(
-    (((i, k, 1),), ((k, j, 1),), ((i, j, 1),))
-    for i in (0, 1) for j in (0, 1) for k in (0, 1)
-)
-
-_VARIANTS = {"strassen": _STRASSEN, "winograd": _WINOGRAD,
-             "classical": _CLASSICAL}
-
-
-def _expand(level: int, left, right, dests, kind, transpose_left,
-            table, out: List[Product]):
-    """Recursively expand a block product ``level`` more times.
-
-    ``transpose_left``: the left operand is conceptually ``X^t`` while terms
-    are stored as blocks of ``X`` — quadrant (qi, qj) of ``X^t`` is block
-    (qj, qi) of ``X``, so quadrant bits append swapped.
-    """
-    if level <= 0:
-        out.append(Product(kind, tuple(left), tuple(right), tuple(dests)))
-        return
-    for a_quads, b_quads, d_quads in table:
-        nl = []
-        for qi, qj, s in a_quads:
-            rb, cb = (qj, qi) if transpose_left else (qi, qj)
-            nl.extend((r * 2 + rb, c * 2 + cb, s0 * s) for r, c, s0 in left)
-        nr = []
-        for qi, qj, s in b_quads:
-            nr.extend((r * 2 + qi, c * 2 + qj, s0 * s) for r, c, s0 in right)
-        nd = []
-        for ci, cj, s in d_quads:
-            nd.extend((di * 2 + ci, dj * 2 + cj, s0 * s)
-                      for di, dj, s0 in dests)
-        _expand(level - 1, nl, nr, nd, kind, transpose_left, table, out)
-
-
-@dataclass(frozen=True)
-class Plan:
-    """A fully flattened schedule over a ``2^levels`` leaf-block grid."""
-    kind: str                       # "ata" | "matmul"
-    levels: int
-    variant: str
-    products: Tuple[Product, ...]
-
-    @property
-    def blocks(self) -> int:
-        """Leaf blocks per matrix dimension."""
-        return 1 << self.levels
-
-    @property
-    def max_terms(self) -> int:
-        return max(max(len(p.left), len(p.right)) for p in self.products)
-
-    @functools.lru_cache(maxsize=None)
-    def contributions(self) -> Tuple[Contribution, ...]:
-        """(product, destination) pairs, sorted by destination block."""
-        out = [
-            Contribution(di, dj, s, p.left, p.right, p.kind)
-            for p in self.products for (di, dj, s) in p.dests
-        ]
-        out.sort(key=lambda c: (c.di, c.dj))
-        return tuple(out)
-
-    @functools.lru_cache(maxsize=None)
-    def by_dest(self) -> Dict[Tuple[int, int], Tuple[Contribution, ...]]:
-        grouped: Dict[Tuple[int, int], list] = {}
-        for c in self.contributions():
-            grouped.setdefault((c.di, c.dj), []).append(c)
-        return {k: tuple(v) for k, v in grouped.items()}
-
-    @property
-    def max_contributions(self) -> int:
-        return max(len(v) for v in self.by_dest().values())
-
-    def mult_count(self, mb: int, nb: int, kb: int | None = None) -> int:
-        """Scalar multiplications the plan performs with the given leaf
-        shapes.  ATA plans: A leaves are (mb, nb), SYRK leaves compute only
-        the lower triangle (paper's n(n+1)/2 saving).  Matmul plans: leaves
-        (mb, kb) x (kb, nb).  Symm plans: X leaves (mb, nb) against square
-        (nb, nb) leaves of the packed operand.  Matches
-        ``cost_model.ata_mults_exact`` / ``strassen_mults_exact`` /
-        ``symm_mults_exact`` evaluated with ``leaf=0`` at the padded shape
-        (see tests/test_fused_ata.py, tests/test_properties.py).
-        """
-        total = 0
-        for p in self.products:
-            if p.kind == "syrk":
-                total += mb * nb * (nb + 1) // 2
-            elif self.kind == "ata":
-                total += nb * mb * nb          # (nb, mb) @ (mb, nb)
-            elif self.kind == "symm":
-                total += mb * nb * nb          # (mb, nb) @ (nb, nb)
-            else:
-                total += mb * (kb if kb is not None else nb) * nb
-        return total
-
-
-@functools.lru_cache(maxsize=None)
 def plan_ata(levels: int, variant: str = "strassen") -> Plan:
-    """Flatten Algorithm 1 (ATA) into leaf products over a 2^levels grid.
-
-    Recursion being flattened (paper Alg. 1 / ata.py):
-      C11 = ATA(A11) + ATA(A21);  C22 = ATA(A12) + ATA(A22)
-      C21 = HASA(A12^t, A11) + HASA(A22^t, A21)
-    SYRK leaves land on diagonal destinations, HASA leaves strictly below
-    the diagonal — all destinations satisfy di >= dj.
-    """
-    if levels < 0:
-        raise ValueError(f"levels must be >= 0, got {levels}")
-    table = _VARIANTS[variant]
-    products: List[Product] = []
-
-    def node(r: int, c: int, depth: int):
-        if depth == levels:
-            products.append(
-                Product("syrk", ((r, c, 1),), ((r, c, 1),), ((c, c, 1),)))
-            return
-        for rb in (0, 1):
-            for cb in (0, 1):
-                node(r * 2 + rb, c * 2 + cb, depth + 1)
-        # C21 of this node: HASA(A12^t, A11) + HASA(A22^t, A21), expanded
-        # the remaining levels with the Strassen-variant table.  Left terms
-        # are stored untransposed (blocks of A12/A22) — transpose_left
-        # handles the quadrant mirroring, the kernel transposes tiles in
-        # VMEM.
-        for rb in (0, 1):
-            _expand(levels - depth - 1,
-                    [(r * 2 + rb, c * 2 + 1, 1)],
-                    [(r * 2 + rb, c * 2 + 0, 1)],
-                    [(c * 2 + 1, c * 2 + 0, 1)],
-                    "mm", True, table, products)
-
-    node(0, 0, 0)
-    return Plan("ata", levels, variant, tuple(products))
+    """Flatten Algorithm 1 (ATA) into leaf ops over a 2^levels grid."""
+    return compile_program("ata", levels, variant)
 
 
-@functools.lru_cache(maxsize=None)
 def plan_matmul(levels: int, variant: str = "strassen") -> Plan:
-    """Flatten (level-capped) Strassen C = A @ B into leaf products."""
-    if levels < 0:
-        raise ValueError(f"levels must be >= 0, got {levels}")
-    products: List[Product] = []
-    _expand(levels, [(0, 0, 1)], [(0, 0, 1)], [(0, 0, 1)], "mm", False,
-            _VARIANTS[variant], products)
-    return Plan("matmul", levels, variant, tuple(products))
+    """Flatten (level-capped) Strassen C = A @ B into leaf ops."""
+    return compile_program("matmul", levels, variant)
 
 
-@functools.lru_cache(maxsize=None)
 def plan_symm(levels: int, variant: str = "strassen") -> Plan:
-    """Flatten ``D = X @ Sym`` where ``Sym`` is *symmetric and stored only
-    as its lower triangle* (packed blocks) into leaf products.
-
-    This is the backward half of the paper's saving: the Gram VJP is
-    ``dA = A (S + S^t)`` with a symmetric right operand, so the dense
-    cotangent never needs to exist — every upper-triangle leaf read
-    ``(i, j)``, i < j, becomes a mirrored ``(j, i)`` read of the stored
-    lower triangle with the transpose folded into the executor's index
-    maps.  Structurally the plan is a :func:`plan_matmul` flattening with
-    the right-operand terms normalized to the lower triangle: each term is
-    a 4-tuple ``(r, c, sign, mirrored)`` with ``r >= c`` always; mirrored
-    terms (originally above the leaf diagonal) are read transposed.
-    Diagonal leaves (``r == c``) straddle the stored triangle at *tile*
-    granularity — the executor mirrors their upper tiles the same way at
-    runtime (``kernels/strassen_fused.py``).
-    """
-    base = plan_matmul(levels, variant)
-    products = tuple(
-        Product("mm", p.left,
-                tuple((r, c, s, 0) if r >= c else (c, r, s, 1)
-                      for (r, c, s) in p.right),
-                p.dests)
-        for p in base.products)
-    return Plan("symm", levels, variant, products)
-
-
-# ---------------------------------------------------------------------------
-# Dense reference evaluators (numpy) — oracle for the schedule itself,
-# independent of the Pallas executor.
-# ---------------------------------------------------------------------------
-
-def _leaf(a: np.ndarray, r: int, c: int, blocks: int) -> np.ndarray:
-    mb, nb = a.shape[0] // blocks, a.shape[1] // blocks
-    return a[r * mb:(r + 1) * mb, c * nb:(c + 1) * nb]
-
-
-def _gather(a: np.ndarray, terms, blocks: int) -> np.ndarray:
-    out = None
-    for r, c, s in terms:
-        blk = s * _leaf(a, r, c, blocks)
-        out = blk if out is None else out + blk
-    return out
+    """Flatten ``D = X @ Sym`` (Sym symmetric, stored lower-tri only)."""
+    return compile_program("symm", levels, variant)
 
 
 def evaluate_ata_plan(plan: Plan, a: np.ndarray) -> np.ndarray:
-    """Execute an ATA plan densely with numpy: lower triangle of a^T a.
+    """Dense numpy execution of an ATA program: lower triangle of a^T a.
 
     ``a`` must be pre-padded to a multiple of ``plan.blocks`` in both dims.
     """
-    B = plan.blocks
-    m, n = a.shape
-    assert m % B == 0 and n % B == 0, (a.shape, B)
-    nb = n // B
-    c = np.zeros((n, n), np.float64)
-    af = np.asarray(a, np.float64)
-    for p in plan.products:
-        left = _gather(af, p.left, B)
-        right = _gather(af, p.right, B)
-        prod = left.T @ right
-        for di, dj, s in p.dests:
-            c[di * nb:(di + 1) * nb, dj * nb:(dj + 1) * nb] += s * prod
-    return np.tril(c)
+    return interpret_program(plan, a)
 
 
 def evaluate_symm_plan(plan: Plan, x: np.ndarray,
                        sym_lower: np.ndarray) -> np.ndarray:
-    """Execute a symm plan densely with numpy: ``x @ Sym`` where ``Sym``
-    is the symmetric completion of ``sym_lower`` (an (n, n) array whose
-    strict upper triangle is ignored — the evaluator provably never reads
-    it, mirroring the executor's packed-storage contract).
-
-    ``x`` is (m, n) pre-padded to ``plan.blocks`` multiples in both dims.
-    """
+    """Dense numpy execution of a symm program: ``x @ Sym`` where ``Sym``
+    is the symmetric completion of ``sym_lower`` (strict upper triangle
+    provably never read — the packed-storage contract)."""
     assert plan.kind == "symm", plan.kind
-    B = plan.blocks
-    m, n = x.shape
-    assert n == sym_lower.shape[0] == sym_lower.shape[1], (x.shape,
-                                                           sym_lower.shape)
-    assert m % B == 0 and n % B == 0, (x.shape, B)
-    mb, nb = m // B, n // B
-    xf = np.asarray(x, np.float64)
-    sl = np.tril(np.asarray(sym_lower, np.float64))  # upper never read
-    out = np.zeros((m, n), np.float64)
-    for p in plan.products:
-        left = _gather(xf, p.left, B)
-        right = None
-        for r, c, s, mirrored in p.right:
-            assert r >= c, "symm plan referenced the upper triangle"
-            leaf = sl[r * nb:(r + 1) * nb, c * nb:(c + 1) * nb]
-            if r == c:                       # rebuild the symmetric diagonal
-                leaf = leaf + np.tril(leaf, -1).T
-            blk = s * (leaf.T if mirrored else leaf)
-            right = blk if right is None else right + blk
-        prod = left @ right
-        for di, dj, s in p.dests:
-            out[di * mb:(di + 1) * mb, dj * nb:(dj + 1) * nb] += s * prod
-    return out
+    return interpret_program(plan, x, sym_lower)
 
 
-def evaluate_matmul_plan(plan: Plan, a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Execute a matmul plan densely with numpy: a @ b (pre-padded)."""
-    B = plan.blocks
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2 and not (m % B or k % B or n % B), (a.shape, b.shape, B)
-    mb, nb = m // B, n // B
-    c = np.zeros((m, n), np.float64)
-    af, bf = np.asarray(a, np.float64), np.asarray(b, np.float64)
-    for p in plan.products:
-        prod = _gather(af, p.left, B) @ _gather(bf, p.right, B)
-        for di, dj, s in p.dests:
-            c[di * mb:(di + 1) * mb, dj * nb:(dj + 1) * nb] += s * prod
-    return c
+def evaluate_matmul_plan(plan: Plan, a: np.ndarray,
+                         b: np.ndarray) -> np.ndarray:
+    """Dense numpy execution of a matmul program: a @ b (pre-padded)."""
+    return interpret_program(plan, a, b)

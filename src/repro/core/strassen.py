@@ -98,14 +98,23 @@ def strassen_matmul(
     base_matmul: Optional[Callable] = None,
     mode: str = "auto",
     bwd: str = "fused",
+    trans_a: bool = False,
+    trans_b: bool = False,
     out_dtype=None,
     block: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Compute ``a @ b`` via (level-capped) Strassen recursion.
+    """Compute ``op(a) @ op(b)`` via (level-capped) Strassen recursion,
+    ``op`` = transpose where the flag is set.
 
     Args:
-      a: (m, k) array.  b: (k, n) array.
+      a: (m, k) array — or (k, m) with ``trans_a``.
+      b: (k, n) array — or (n, k) with ``trans_b``.
+      trans_a, trans_b: use an operand transposed.  The fused path folds
+        the transpose into the executor's index maps (no transposed HBM
+        copy — this is how ``core.distributed``'s ``A_loc^t A_perm``
+        ring block tasks run); the reference recursion materializes
+        ``.T`` (the oracle).
       levels: max recursion depth (0 => classical), or ``"auto"`` to
         recurse until a dim hits ``leaf`` (capped at AUTO_MAX_LEVELS).
       leaf: stop recursing when min(m, k, n) <= leaf (reference mode; also
@@ -128,12 +137,16 @@ def strassen_matmul(
 
     Returns (m, n) array in ``out_dtype``.
     """
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+    if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"bad shapes for matmul: {a.shape} x {b.shape}")
+    m, k_a = a.shape[::-1] if trans_a else a.shape
+    k_b, n = b.shape[::-1] if trans_b else b.shape
+    if k_a != k_b:
+        raise ValueError(
+            f"bad shapes for matmul: {a.shape} x {b.shape} "
+            f"(trans_a={trans_a}, trans_b={trans_b})")
     if levels == "auto":
-        levels = min(
-            strassen_levels_for(a.shape[0], a.shape[1], b.shape[1], leaf),
-            AUTO_MAX_LEVELS)
+        levels = min(strassen_levels_for(m, k_a, n, leaf), AUTO_MAX_LEVELS)
     out_dtype = (jnp.promote_types(jnp.promote_types(a.dtype, b.dtype),
                                    jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
@@ -141,10 +154,14 @@ def strassen_matmul(
     if mode == "fused":
         from ..kernels.ops import matmul_fused
         return matmul_fused(a, b, levels=levels, variant=variant, bm=block,
-                            bk=block, bn=block, out_dtype=out_dtype,
+                            bk=block, bn=block, trans_a=trans_a,
+                            trans_b=trans_b, out_dtype=out_dtype,
                             interpret=interpret, bwd=bwd)
     base = base_matmul or _default_base_matmul
-    res = _strassen_rec(a, b, levels, leaf, variant, base)
+    # reference oracle: materialize the transposes (the fused executor's
+    # index-map folding is exactly what removes these copies)
+    res = _strassen_rec(a.T if trans_a else a, b.T if trans_b else b,
+                        levels, leaf, variant, base)
     return res.astype(out_dtype)
 
 

@@ -21,7 +21,9 @@ from .autotune import (  # noqa: F401
 from .engine import GramEngine, GramRequest, batched_gram  # noqa: F401
 from .stream import (  # noqa: F401
     GramStream, init as stream_init, update as stream_update,
-    finalize as stream_finalize, sharded_init, update_sharded,
+    finalize as stream_finalize,
+    GramStackStream, stack_init, stack_update, stack_finalize,
+    sharded_init, update_sharded,
     distributed_init, distributed_update, distributed_finalize,
 )
 
@@ -31,6 +33,7 @@ __all__ = [
     "resolve_block_defaults",
     "GramEngine", "GramRequest", "batched_gram",
     "GramStream", "stream_init", "stream_update", "stream_finalize",
+    "GramStackStream", "stack_init", "stack_update", "stack_finalize",
     "sharded_init", "update_sharded",
     "distributed_init", "distributed_update", "distributed_finalize",
 ]

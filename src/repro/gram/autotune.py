@@ -16,18 +16,28 @@ full per-bucket config (mode + levels + blocks).
 
 Cache file format (``gram_autotune.json``)::
 
-    {"version": 1,
+    {"version": 2,
      "entries": {
-       "<backend>/<dtype>/<kind>/<M>x<N>": {
+       "<backend>/jax-<version>/<dtype>/<kind>/<M>x<N>": {
           "mode": "fused", "levels": 2, "variant": "strassen",
           "bm": 256, "bk": 256, "bn": 256,
-          "model_bytes": 1234, "measured_s": null, "source": "model"}}}
+          "model_bytes": 1234, "measured_s": null, "source": "model",
+          "jax": "<version>", "backend": "<backend>"}}}
 
 Keys are *bucketed* shapes (``bucket_shape``), so one entry serves every
-request shape that rounds up to the same bucket.  Invalidation: the file
-is re-read whenever its mtime changes (delete it, or re-run ``autotune``
-with ``refresh=True``, to invalidate).  Set ``REPRO_AUTOTUNE_CACHE`` to
-relocate the cache (tests point it at a tmp dir).
+request shape that rounds up to the same bucket — and they pin the
+persist-time (backend, jax version) pair: winners are measurements of
+one toolchain, and before v2 a stale winner from a different jax
+silently applied after an upgrade (pre-v2 files are ignored wholesale;
+see ``load_cache``).  Invalidation: the file is re-read whenever its
+mtime changes (delete it, or re-run ``autotune`` with ``refresh=True``,
+to invalidate).  Set ``REPRO_AUTOTUNE_CACHE`` to relocate the cache
+(tests point it at a tmp dir).
+
+Kinds: ``ata`` (forward column gram), ``aat`` (row gram,
+``gram_of="rows"``), ``rank_k`` (the accumulating streamed update),
+``ata_bwd`` (the Gram backward) — all scored by the one IR-driven
+traffic core in ``kernels.strassen_fused``.
 """
 from __future__ import annotations
 
@@ -48,7 +58,10 @@ __all__ = [
 ]
 
 DEFAULT_BLOCK = 256
-_CACHE_VERSION = 1
+# v2: cache keys gained the jax-version segment (see _key) — a winner
+# measured under one jax/backend silently applying after an upgrade was a
+# real bug; v1 files are ignored wholesale (stale by construction).
+_CACHE_VERSION = 2
 
 # (path, mtime) -> parsed entries; re-read on mtime change (invalidation).
 _memo: dict = {}
@@ -75,7 +88,16 @@ def bucket_shape(m: int, n: int, *, min_side: int = 32) -> tuple[int, int]:
 
 
 def _key(backend: str, dtype: str, kind: str, M: int, N: int) -> str:
-    return f"{backend}/{dtype}/{kind}/{M}x{N}"
+    """Cache key for one tuned bucket.
+
+    Includes the *persist-time* backend name AND the jax version: tuned
+    winners are measurements of one (jax, backend) pair — block sizes
+    and mode crossovers move across jax upgrades, and before v2 a stale
+    winner from a different jax silently applied after an upgrade
+    (lookups key on the same two values, so mismatched entries simply
+    never match).
+    """
+    return f"{backend}/jax-{jax.__version__}/{dtype}/{kind}/{M}x{N}"
 
 
 # ---------------------------------------------------------------------------
@@ -84,11 +106,14 @@ def _key(backend: str, dtype: str, kind: str, M: int, N: int) -> str:
 
 def candidate_space(M: int, N: int, *, backend: Optional[str] = None,
                     blocks=(128, 256, 512), levels=(0, 1, 2),
-                    modes=("fused", "reference")):
+                    modes=("fused", "reference"), kind: str = "ata"):
     """Enumerate (mode, levels, bm/bk/bn) candidates for an (M, N) bucket.
 
     Blocks larger than the bucket only add padding, so they are dropped
-    (keeping at least the smallest candidate).
+    (keeping at least the smallest candidate).  The grid only varies the
+    knobs ``kind`` actually uses — ``aat`` ties bm=bk and ignores bn, so
+    enumerating bn would fill the measured top-K with identically-scored
+    duplicates.
     """
     usable = [b for b in blocks if b <= max(M, N)] or [min(blocks)]
     out = []
@@ -103,7 +128,8 @@ def candidate_space(M: int, N: int, *, backend: Optional[str] = None,
                             "bn": min(usable)})
                 continue
             for bk in usable:
-                for bn in usable:
+                bns = [bk] if kind == "aat" else usable
+                for bn in bns:
                     out.append({"mode": "fused", "levels": lv,
                                 "variant": "strassen",
                                 "bm": bk, "bk": bk, "bn": bn})
@@ -114,14 +140,16 @@ def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
                 out_bytes: int = 4, kind: str = "ata") -> float:
     """HBM-bytes score (lower is better) used to seed the search.
 
-    Fused candidates use the exact analytic kernel model (forward:
-    ``ata_traffic_model``; ``kind="ata_bwd"``: ``ata_bwd_traffic_model``
-    — the packed-cotangent symm-schedule backward).  Reference candidates
-    use a closed-form upper estimate of what the recursion (or, for the
-    backward, the dense-dot ``A (S + S^t)`` baseline) materializes —
-    a deliberate heuristic.  Because the reference score is a heuristic
-    while the fused score is exact, model-only search ranks fused
-    candidates only — reference candidates compete through
+    Fused candidates use the exact analytic kernel models — all thin
+    wrappers over the one IR-driven traffic core in
+    ``kernels.strassen_fused`` (``_traffic`` over a bound program spec),
+    so every kind (``ata``, ``aat``, ``rank_k``, ``ata_bwd``) is scored
+    by the same machinery the executor is built on rather than a
+    per-kind closed form.  Reference candidates use a closed-form upper
+    estimate of what the recursion (or the relevant dense baseline)
+    materializes — a deliberate heuristic.  Because the reference score
+    is a heuristic while the fused score is exact, model-only search
+    ranks fused candidates only — reference candidates compete through
     ``measure=True`` wall clock (see :func:`autotune`).
     """
     if kind == "ata_bwd":
@@ -136,19 +164,38 @@ def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
         side = t if cand["mode"] == "fused" else t["dense_baseline"]
         return float(side["read_bytes"] + side["write_bytes"]
                      + side["intermediate_bytes"])
+    if kind == "rank_k":
+        from ..kernels.strassen_fused import rank_k_traffic_model
+        t = rank_k_traffic_model(m, n, levels=cand["levels"],
+                                 variant=cand["variant"], bk=cand["bk"],
+                                 bn=cand["bn"], in_bytes=in_bytes,
+                                 state_bytes=out_bytes)
+        # "reference" = the status-quo streamed update (delta stack +
+        # gather-add) the accumulating kernel replaces
+        side = t if cand["mode"] == "fused" else t["baseline"]
+        return float(side["read_bytes"] + side["write_bytes"]
+                     + side["intermediate_bytes"])
     if cand["mode"] == "fused":
-        from ..kernels.strassen_fused import ata_traffic_model
-        t = ata_traffic_model(m, n, levels=cand["levels"],
-                              variant=cand["variant"], bk=cand["bk"],
-                              bn=cand["bn"], in_bytes=in_bytes,
-                              out_bytes=out_bytes)
+        from ..kernels.strassen_fused import (aat_traffic_model,
+                                              ata_traffic_model)
+        if kind == "aat":
+            t = aat_traffic_model(m, n, levels=cand["levels"],
+                                  variant=cand["variant"], bm=cand["bm"],
+                                  bk=cand["bk"], in_bytes=in_bytes,
+                                  out_bytes=out_bytes)
+        else:
+            t = ata_traffic_model(m, n, levels=cand["levels"],
+                                  variant=cand["variant"], bk=cand["bk"],
+                                  bn=cand["bn"], in_bytes=in_bytes,
+                                  out_bytes=out_bytes)
         return float(t["read_bytes"] + t["write_bytes"]
                      + t["intermediate_bytes"])
     lv = cand["levels"]
     amplification = (7.0 / 4.0) ** lv
+    d = m if kind == "aat" else n          # gram output dimension
     reads = m * n * in_bytes * max(amplification, 1.0)
-    writes = n * n * out_bytes
-    intermediates = (m * n + n * n) * in_bytes * (amplification - 1.0) * 2
+    writes = d * d * out_bytes
+    intermediates = (m * n + d * d) * in_bytes * (amplification - 1.0) * 2
     return float(reads + writes + intermediates)
 
 
@@ -171,6 +218,12 @@ def load_cache(path: Optional[os.PathLike] = None) -> dict:
         with open(p) as f:
             raw = json.load(f)
         entries = raw.get("entries", {}) if isinstance(raw, dict) else {}
+        # pre-v2 files keyed without the jax version — every entry is
+        # potentially a stale winner from another jax; drop them all and
+        # let autotune repopulate (the migration path)
+        if not isinstance(raw, dict) or raw.get("version", 0) \
+                < _CACHE_VERSION:
+            entries = {}
     except (OSError, ValueError):
         entries = {}
     _memo.clear()           # one live file snapshot is enough
@@ -216,7 +269,7 @@ def resolve_block_defaults(kind: str, m: int, n: int, dtype,
     if all(v is not None for v in blocks.values()):
         return blocks
     best = None
-    if kind in ("ata", "matmul", "ata_bwd"):
+    if kind in ("ata", "matmul", "ata_bwd", "aat", "rank_k"):
         try:
             best = lookup(m, n, dtype=jnp.dtype(dtype).name, kind=kind)
         except Exception:
@@ -235,6 +288,39 @@ def resolve_block_defaults(kind: str, m: int, n: int, dtype,
 def _build_runner(M: int, N: int, dtype, cand: dict, interpret,
                   kind: str = "ata"):
     from ..core.ata import ata
+
+    if kind == "aat":
+        def fn(a):
+            return ata(a, gram_of="rows", levels=cand["levels"],
+                       variant=cand["variant"], mode=cand["mode"],
+                       block=cand["bk"], out_dtype=jnp.float32,
+                       interpret=interpret)
+        return jax.jit(fn)
+
+    if kind == "rank_k":
+        # fused: the accumulating kernel on a live stack; reference: the
+        # status-quo element-packed streamed update it replaces.
+        if cand["mode"] == "fused":
+            from ..kernels.ops import rank_k_update
+
+            def fn(a):
+                t = -(-N // cand["bn"])
+                stack = jnp.zeros((t * (t + 1) // 2 * cand["bn"],
+                                   cand["bn"]), jnp.float32)
+                return rank_k_update(stack, a, levels=cand["levels"],
+                                     variant=cand["variant"],
+                                     bk=cand["bk"], interpret=interpret,
+                                     donate=False)
+            return jax.jit(fn)
+
+        from . import stream as _stream
+
+        def fn(a):
+            state = _stream.init(N)
+            return _stream.update(state, a, levels=cand["levels"],
+                                  variant=cand["variant"], mode="auto",
+                                  interpret=interpret).packed
+        return fn                      # stream.update jits internally
 
     if kind == "ata_bwd":
         # time jax.grad through the fused forward; the candidate mode
@@ -297,7 +383,7 @@ def autotune(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
 
     in_bytes = jnp.dtype(dtype).itemsize
     cands = candidate_space(M, N, backend=backend, blocks=blocks,
-                            levels=levels, modes=modes)
+                            levels=levels, modes=modes, kind=kind)
     score = lambda c: model_score(M, N, c, in_bytes=in_bytes,  # noqa: E731
                                   kind=kind)
     fused = sorted((c for c in cands if c["mode"] == "fused"), key=score)
@@ -320,6 +406,10 @@ def autotune(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
              "model_bytes": model_score(M, N, winner, in_bytes=in_bytes,
                                         kind=kind),
              "measured_s": measured,
-             "source": "measured" if measured is not None else "model"}
+             "source": "measured" if measured is not None else "model",
+             # introspection copies of what the key already pins: the
+             # (jax, backend) pair this winner was tuned under
+             "jax": jax.__version__,
+             "backend": backend}
     _save_entry(key, entry, cache_path)
     return entry

@@ -72,6 +72,7 @@ class GramRequest:
     a: np.ndarray                     # host copy; padded/stacked at batch time
     shape: Tuple[int, int]
     full: bool                        # symmetric result vs lower triangle
+    gram_of: str                      # "cols" (A^tA) | "rows" (AA^t)
     t_submit: float
     t_done: Optional[float] = None
     result: Optional[np.ndarray] = None
@@ -118,21 +119,28 @@ class GramEngine:
         self.ticks = 0
 
     # -- request intake ----------------------------------------------------
-    def submit(self, a, *, full: bool = True) -> int:
+    def submit(self, a, *, full: bool = True,
+               gram_of: str = "cols") -> int:
         """Enqueue one Gram request; returns its uid.  ``full`` selects the
-        mirrored symmetric C (default) vs the lower triangle only."""
+        mirrored symmetric C (default) vs the lower triangle only;
+        ``gram_of="rows"`` serves ``a @ a.T`` (the Arrigoni-Massini row
+        gram — the ``aat`` leaf program on the fused path) instead of the
+        default ``a.T @ a``."""
         a = np.asarray(a)
         if a.ndim != 2:
             raise ValueError(f"gram request must be 2-D, got {a.shape}")
+        if gram_of not in ("cols", "rows"):
+            raise ValueError(f"gram_of must be 'cols' or 'rows', got "
+                             f"{gram_of!r}")
         r = GramRequest(uid=next(self._uid), a=a, shape=a.shape, full=full,
-                        t_submit=time.perf_counter())
-        key = self._bucket_key(a.shape, a.dtype)
+                        gram_of=gram_of, t_submit=time.perf_counter())
+        key = self._bucket_key(a.shape, a.dtype, gram_of)
         self.waiting.setdefault(key, []).append(r)
         return r.uid
 
-    def _bucket_key(self, shape, dtype) -> tuple:
+    def _bucket_key(self, shape, dtype, gram_of: str = "cols") -> tuple:
         M, N = _autotune.bucket_shape(*shape, min_side=self.min_bucket)
-        return (M, N, jnp.dtype(dtype).name)
+        return (M, N, jnp.dtype(dtype).name, gram_of)
 
     # -- executable cache --------------------------------------------------
     def _bucket_config(self, key) -> dict:
@@ -143,13 +151,15 @@ class GramEngine:
         entry must not flip the backend-appropriate "auto" dispatch);
         block sizes only from fused winners (reference entries carry
         placeholder blocks)."""
-        M, N, dtype = key
+        M, N, dtype, gram_of = key
         cfg = {"mode": self.mode, "levels": self.levels, "leaf": self.leaf,
                "variant": self.variant, "block": self.block}
         if self.use_autotune_cache:
             try:
-                hit = _autotune.lookup(M, N, dtype=dtype,
-                                       min_side=self.min_bucket)
+                hit = _autotune.lookup(
+                    M, N, dtype=dtype,
+                    kind="aat" if gram_of == "rows" else "ata",
+                    min_side=self.min_bucket)
             except Exception:
                 hit = None
             if hit:
@@ -168,7 +178,11 @@ class GramEngine:
         "auto", any feasible scheme; otherwise dist_scheme itself must be
         feasible, or the bucket stays local rather than failing mid-step
         on a shard_map divisibility error)."""
-        M, N, _ = key
+        M, N, _, gram_of = key
+        if gram_of == "rows":
+            # the distributed schemes decompose A^t A; row-gram buckets
+            # stay on the local aat executor
+            return False
         if self.mesh is None or M * N < self.dist_threshold:
             return False
         feas = feasible_schemes(M, N, self.mesh, **self.dist_axes)
@@ -179,7 +193,7 @@ class GramEngine:
     def _executable(self, key):
         if key in self._executables:
             return self._executables[key]
-        M, N, dtype = key
+        M, N, dtype, gram_of = key
         cfg = self._bucket_config(key)
         if self._is_distributed(key):
             # one request at a time on the whole mesh: the mesh IS the
@@ -196,10 +210,10 @@ class GramEngine:
             spec = jax.ShapeDtypeStruct((M, N), jnp.dtype(dtype))
         else:
             def single(x):
-                return ata(x, levels=cfg["levels"], leaf=cfg["leaf"],
-                           variant=cfg["variant"], mode=cfg["mode"],
-                           out_dtype=self.out_dtype, block=cfg["block"],
-                           interpret=self.interpret)
+                return ata(x, gram_of=gram_of, levels=cfg["levels"],
+                           leaf=cfg["leaf"], variant=cfg["variant"],
+                           mode=cfg["mode"], out_dtype=self.out_dtype,
+                           block=cfg["block"], interpret=self.interpret)
             one = jax.vmap(single)
             spec = jax.ShapeDtypeStruct((self.slots, M, N),
                                         jnp.dtype(dtype))
@@ -238,7 +252,7 @@ class GramEngine:
         else:
             del self.waiting[key]
 
-        M, N, dtype = key
+        M, N, dtype, gram_of = key
         if self._is_distributed(key):
             # mesh path: the device mesh is the parallel dimension — serve
             # the drained requests one at a time through distributed_gram
@@ -265,7 +279,9 @@ class GramEngine:
         out = np.asarray(self._executable(key)(jnp.asarray(stack)))
         t_done = time.perf_counter()
         for s, r in enumerate(batch):
-            n = r.shape[1]
+            # the result spans the gram'd dimension: cols for A^tA,
+            # rows for the gram_of="rows" AA^t buckets
+            n = r.shape[0] if gram_of == "rows" else r.shape[1]
             c = out[s, :n, :n]
             if r.full:
                 c = np.asarray(symmetrize_from_lower(jnp.asarray(c)))

@@ -53,6 +53,7 @@ from ..core.strassen import AUTO_MAX_LEVELS, resolve_mode
 from ..core.symmetry import pack_tril, tril_vector_from_blocks, unpack_tril
 
 __all__ = ["GramStream", "init", "update", "finalize",
+           "GramStackStream", "stack_init", "stack_update", "stack_finalize",
            "sharded_init", "update_sharded",
            "distributed_init", "distributed_update", "distributed_finalize"]
 
@@ -136,6 +137,96 @@ def finalize(state: GramStream, *, symmetrize: bool = True,
     """Dense (n, n) Gram from the packed state (mirrored when
     ``symmetrize``, else lower-triangular like ``ata``)."""
     c = unpack_tril(state.packed, state.n, symmetrize=symmetrize)
+    return c.astype(out_dtype) if out_dtype is not None else c
+
+
+# ---------------------------------------------------------------------------
+# Rank-k streaming: the state IS the kernel's packed tile stack, and each
+# chunk folds in through the accumulating (rank_k) leaf program — the
+# kernel seeds its VMEM accumulator from the stack, so no per-chunk delta
+# stack, no unpack and no gather ever materializes (the PR-2 element-
+# packed ``update`` above computes a full n(n+1)/2 delta per chunk and
+# adds it; this path replaces that with ONE kernel per chunk).
+# ---------------------------------------------------------------------------
+
+class GramStackStream(NamedTuple):
+    """Running Gram state in the executor's packed tile-stack layout.
+
+    stack: (T(T+1)/2 * block, block) lower-triangular tile stack of the
+           accumulated C (``kernels.syrk`` / ``fused_ata_packed``
+           ordering; diagonal tiles full).
+    rows:  scalar int32, total rows streamed so far.
+    """
+    stack: jax.Array
+    rows: jax.Array
+
+    @property
+    def block(self) -> int:
+        return self.stack.shape[1]
+
+    @property
+    def n_padded(self) -> int:
+        n_tri = self.stack.shape[0] // self.block
+        t = (math.isqrt(8 * n_tri + 1) - 1) // 2
+        return t * self.block
+
+
+def stack_init(n: int, *, block: Optional[int] = None,
+               dtype=jnp.float32) -> GramStackStream:
+    """Fresh rank-k accumulator for an n-column stream.
+
+    ``block`` is the stack's tile edge (``None`` consults the autotune
+    cache for the (n, n) bucket, 256 when untuned); the stack spans
+    ``ceil(n / block)`` tiles — padded columns are exact zeros.
+    """
+    if block is None:
+        from ..kernels.ops import _resolve_blocks
+        block = _resolve_blocks("rank_k", n, n, dtype, bn=None)["bn"]
+    t = -(-n // block)
+    return GramStackStream(
+        stack=jnp.zeros((t * (t + 1) // 2 * block, block), dtype),
+        rows=jnp.zeros((), jnp.int32))
+
+
+def stack_update(state: GramStackStream, chunk: jax.Array, *,
+                 levels: Union[int, str] = 2, leaf: int = 256,
+                 variant: str = "strassen", block: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> GramStackStream:
+    """Fold one row chunk in: ``state.stack += packed(tril(chunk^t chunk))``
+    — one accumulating kernel, state donated, no intermediate delta.
+
+    ``chunk`` is (m_chunk, n) with n <= the stack's padded span.
+    ``block`` is the *contraction* tile (rows of the chunk; the output
+    tile edge is fixed by the stack).  ``levels`` clamps to depths the
+    stack layout divides, like the symm executor.
+    """
+    if chunk.ndim != 2 or chunk.shape[1] > state.n_padded:
+        raise ValueError(
+            f"chunk shape {chunk.shape} does not fit stream "
+            f"n_padded={state.n_padded}")
+    from ..kernels.ops import rank_k_update
+    m, n = chunk.shape
+    lv = (min(ata_levels_for(m, n, leaf), AUTO_MAX_LEVELS)
+          if levels == "auto" else levels)
+    stack = rank_k_update(state.stack, chunk, levels=lv, variant=variant,
+                          bk=block, interpret=interpret)
+    return GramStackStream(stack=stack, rows=state.rows + m)
+
+
+def stack_finalize(state: GramStackStream, n: Optional[int] = None, *,
+                   symmetrize: bool = True, out_dtype=None) -> jax.Array:
+    """Dense (n, n) Gram from the stacked state (mirrored when
+    ``symmetrize``, else lower-triangular like ``ata``)."""
+    from ..core.symmetry import unpack_tril_blocks
+    n_pad = state.n_padded
+    c = unpack_tril_blocks(state.stack, n_pad, state.block,
+                           symmetrize=False)
+    c = jnp.tril(c)
+    if symmetrize:
+        from ..core.symmetry import symmetrize_from_lower
+        c = symmetrize_from_lower(c)
+    if n is not None:
+        c = c[:n, :n]
     return c.astype(out_dtype) if out_dtype is not None else c
 
 

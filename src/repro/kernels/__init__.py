@@ -1,8 +1,10 @@
 """Pallas TPU kernels for the ATA hot spots (validated in interpret mode).
 
-- strassen_fused: the whole flattened ATA/Strassen schedule in one kernel
-                  (leaf tasks x K blocks; no per-level HBM round-trips),
-                  forward AND backward (packed-cotangent symm schedule)
+- strassen_fused: ONE generic leaf-program executor (core/leaf_ir.py)
+                  behind a single pallas_call — forward grams (ata AND
+                  the 2021 aat row gram), matmul with trans folding,
+                  the packed-cotangent symm backward, and the
+                  accumulating rank-k update
 - matmul:    tiled MXU matmul (ATA/HASA base case)
 - syrk:      lower-triangular-blocks-only gram (the paper's n(n+1)/2 saving)
 - combine:   fused Strassen recombination (HBM-traffic reduction)
@@ -12,9 +14,11 @@ from . import ops, ref
 from .ops import (
     matmul, syrk, syrk_packed, strassen_combine, transpose,
     pallas_base_matmul, pallas_base_syrk,
-    ata_fused, ata_fused_packed, matmul_fused, symm_matmul,
+    ata_fused, ata_fused_packed, aat_fused, aat_fused_packed,
+    matmul_fused, symm_matmul, rank_k_update,
 )
 
 __all__ = ["ops", "ref", "matmul", "syrk", "syrk_packed", "strassen_combine",
            "transpose", "pallas_base_matmul", "pallas_base_syrk",
-           "ata_fused", "ata_fused_packed", "matmul_fused", "symm_matmul"]
+           "ata_fused", "ata_fused_packed", "aat_fused", "aat_fused_packed",
+           "matmul_fused", "symm_matmul", "rank_k_update"]

@@ -225,26 +225,105 @@ def _symm_matmul_jit(x, s_packed, *, levels, variant, bm, diag_sym,
 
 
 def matmul_fused(a, b, *, levels=2, variant="strassen", bm=None, bk=None,
-                 bn=None, out_dtype=None, interpret=None, bwd="fused"):
-    """``a @ b`` via the fused Strassen schedule kernel.  ``bwd="fused"``
-    (default) runs both VJP products through the same schedule with the
-    operand transposes folded into the index maps."""
-    bs = _resolve_blocks("matmul", a.shape[0], b.shape[1], a.dtype,
-                         bm=bm, bk=bk, bn=bn)
+                 bn=None, trans_a=False, trans_b=False, out_dtype=None,
+                 interpret=None, bwd="fused"):
+    """``op(a) @ op(b)`` via the fused Strassen program kernel;
+    ``trans_a``/``trans_b`` transpose an operand *through the index
+    maps* — no transposed HBM copy (the distributed ring/2.5D block
+    tasks route here).  ``bwd="fused"`` (default) runs both VJP products
+    through the same program with the transposes likewise folded."""
+    m = a.shape[1] if trans_a else a.shape[0]
+    n = b.shape[0] if trans_b else b.shape[1]
+    bs = _resolve_blocks("matmul", m, n, a.dtype, bm=bm, bk=bk, bn=bn)
     return _matmul_fused_jit(a, b, levels=levels, variant=variant,
                              bm=bs["bm"], bk=bs["bk"], bn=bs["bn"],
+                             trans_a=trans_a, trans_b=trans_b,
                              out_dtype=out_dtype, interpret=interpret,
                              bwd=bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bm", "bk", "bn", "out_dtype", "interpret", "bwd"))
-def _matmul_fused_jit(a, b, *, levels, variant, bm, bk, bn, out_dtype=None,
-                      interpret=None, bwd="fused"):
+    "levels", "variant", "bm", "bk", "bn", "trans_a", "trans_b",
+    "out_dtype", "interpret", "bwd"))
+def _matmul_fused_jit(a, b, *, levels, variant, bm, bk, bn, trans_a=False,
+                      trans_b=False, out_dtype=None, interpret=None,
+                      bwd="fused"):
     from . import strassen_fused as _sf
     return _sf.fused_matmul(a, b, levels=levels, variant=variant, bm=bm,
-                            bk=bk, bn=bn, out_dtype=out_dtype,
+                            bk=bk, bn=bn, trans_a=trans_a, trans_b=trans_b,
+                            out_dtype=out_dtype,
                             interpret=_auto_interpret(interpret), bwd=bwd)
+
+
+def aat_fused(a, *, levels=2, variant="strassen", bm=None, bk=None,
+              out_dtype=None, interpret=None):
+    """Dense ``tril(a @ a.T)`` — the Arrigoni-Massini row gram
+    (``ata(x, gram_of="rows")``) via the same leaf-program executor; the
+    transpose of ``a`` never exists in HBM."""
+    bs = _resolve_blocks("aat", a.shape[0], a.shape[1], a.dtype,
+                         bm=bm, bk=bk)
+    return _aat_fused_jit(a, levels=levels, variant=variant, bm=bs["bm"],
+                          bk=bs["bk"], out_dtype=out_dtype,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "variant", "bm", "bk", "out_dtype", "interpret"))
+def _aat_fused_jit(a, *, levels, variant, bm, bk, out_dtype=None,
+                   interpret=None):
+    from . import strassen_fused as _sf
+    return _sf.fused_aat(a, levels=levels, variant=variant, bm=bm, bk=bk,
+                         out_dtype=out_dtype,
+                         interpret=_auto_interpret(interpret))
+
+
+def aat_fused_packed(a, *, levels=2, variant="strassen", bm=None, bk=None,
+                     out_dtype=None, interpret=None):
+    """Packed lower-tri block stack of ``a @ a.T`` (row-gram dual of
+    :func:`ata_fused_packed`)."""
+    bs = _resolve_blocks("aat", a.shape[0], a.shape[1], a.dtype,
+                         bm=bm, bk=bk)
+    return _aat_fused_packed_jit(a, levels=levels, variant=variant,
+                                 bm=bs["bm"], bk=bs["bk"],
+                                 out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "variant", "bm", "bk", "out_dtype", "interpret"))
+def _aat_fused_packed_jit(a, *, levels, variant, bm, bk, out_dtype=None,
+                          interpret=None):
+    from . import strassen_fused as _sf
+    packed, _ = _sf.fused_aat_packed(
+        a, levels=levels, variant=variant, bm=bm, bk=bk,
+        out_dtype=out_dtype, interpret=_auto_interpret(interpret))
+    return packed
+
+
+def rank_k_update(c_stack, a, *, levels=2, variant="strassen", bk=None,
+                  out_dtype=None, interpret=None, donate=True):
+    """``C += tril(a.T @ a)`` on a packed tile stack in ONE kernel — the
+    accumulating (rank-k) program.  The stack seeds the kernel's VMEM
+    accumulator, so a streamed Gram chunk materializes no delta stack
+    and no unpack/gather; with ``donate`` (default) the state buffer is
+    donated so XLA updates it in place at the jit boundary."""
+    bs = _resolve_blocks("rank_k", a.shape[0], a.shape[1], a.dtype, bk=bk)
+    fn = _rank_k_jit_donated if donate else _rank_k_jit
+    return fn(c_stack, a, levels=levels, variant=variant, bk=bs["bk"],
+              out_dtype=out_dtype, interpret=interpret)
+
+
+def _rank_k_impl(c_stack, a, *, levels, variant, bk, out_dtype=None,
+                 interpret=None):
+    from . import strassen_fused as _sf
+    return _sf.fused_rank_k_update(
+        c_stack, a, levels=levels, variant=variant, bk=bk,
+        out_dtype=out_dtype, interpret=_auto_interpret(interpret))
+
+
+_rank_k_static = ("levels", "variant", "bk", "out_dtype", "interpret")
+_rank_k_jit = jax.jit(_rank_k_impl, static_argnames=_rank_k_static)
+_rank_k_jit_donated = jax.jit(_rank_k_impl, static_argnames=_rank_k_static,
+                              donate_argnums=(0,))
 
 
 @functools.partial(jax.jit, static_argnames=(

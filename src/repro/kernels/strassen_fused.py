@@ -1,42 +1,58 @@
-"""Fused Pallas executor for flattened ATA / Strassen schedules.
+"""The generic Pallas executor for compiled leaf programs.
 
-This is the single-kernel replacement for the materialize-everything
-recursion (DESIGN.md §4): a ``pallas_call`` whose grid enumerates
-``(output tile, contribution slot, K block)`` over the leaf-task plans from
-``repro.core.schedule``.  Per grid step the kernel
+One kernel, one ``pallas_call`` site, every fused variant.  PRs 1-4 grew
+three hand-specialized executors (forward ATA, symm backward, trans_a /
+trans_b matmul) that differed only in grid decode, index-map axis roles
+and which side transposes in VMEM.  This module rewrites them as a
+single executor driven by the :mod:`repro.core.leaf_ir` IR: a
+``LeafProgram`` (kind x levels x algebra table) is bound to tile sizes
+(:class:`_Spec`), lowered to int32 scalar-prefetch tables, and executed
+by ONE scalar-prefetch ``pallas_call`` whose grid enumerates
+``(output tile, contribution slot, K block)``.  Per grid step the kernel
 
-  1. gathers up to ``max_terms`` (bk, bn) tiles of the *original* padded A
-     straight from HBM (scalar-prefetched index tables drive the BlockSpec
-     index maps — the per-level ``pad``/``concatenate`` copies of the
-     reference recursion become index arithmetic),
-  2. forms the +-1-signed Strassen operand sums tile-wise in VMEM (the
-     ``S``/``T`` operand temporaries never exist in HBM),
+  1. gathers up to ``max_terms`` stored tiles per side straight from HBM
+     (the prefetched tables drive the BlockSpec index maps — pad /
+     concatenate / transpose copies of the reference recursions become
+     index arithmetic),
+  2. forms the +-1-signed operand sums tile-wise in VMEM, applying the
+     per-term tri-mirror transposes (packed symm operand) and the
+     whole-side transposes (ATA's left, AAT's right, trans_a/trans_b),
   3. runs the leaf product on the MXU into an fp32 VMEM accumulator that
-     lives across the whole (contribution, K) sweep of one output tile,
-  4. writes each output tile to HBM exactly once, directly into the packed
-     lower-triangular block stack of ``kernels/syrk.py`` — no ``M_i``
-     product, no operand sum and no upper-triangular block ever touches
-     HBM.
+     lives across the whole (contribution, K) sweep of one output tile
+     — seeded from the incoming packed stack for accumulating (rank-k)
+     programs instead of zero,
+  4. writes each output tile to HBM exactly once — packed
+     lower-triangular stack for gram kinds, dense grid otherwise.
 
-Contributions are sorted by destination (``schedule.Plan.contributions``),
-so the accumulator hand-off needs no HBM read-modify-write and the TPU
-grid's sequential execution guarantees a single store per tile.
+Because the planner/executor split is IR-shaped, the two programs the
+old stacks could not express fall out of the same machinery:
 
-Autodiff (DESIGN.md §11): every entry point carries a custom VJP that runs
-the *backward* through the same leaf-task machinery.  The Gram backward
-``dA = A (S + S^t)`` has a symmetric right operand, so it executes a
-``plan_symm`` schedule (:func:`fused_symm_matmul`) that reads the packed
-lower-triangular cotangent directly — upper-triangle tiles are mirrored
-``(j, i)`` reads with the transpose folded into the index maps, and the
-dense n^2 cotangent buffer of the old dense-dot backward never exists in
-HBM.  ``bwd="dense"`` keeps the dense-dot baseline selectable for
-benchmarking (``benchmarks/bench_grads.py``).
+* ``aat`` — C = tril(A A^t), the Arrigoni-Massini 2021 row-gram
+  recursion (:func:`fused_aat` / :func:`fused_aat_packed`, surfaced as
+  ``ata(x, gram_of="rows")``): the transpose of A never exists in HBM.
+* ``rank_k`` — C += A^t A (:func:`fused_rank_k_update`): the running
+  packed stack seeds the accumulator, so streamed Gram chunks
+  (``gram/stream.py``) stop re-materializing a per-chunk delta.
+
+Autodiff (DESIGN.md §11) is unchanged in spirit: custom VJPs route every
+backward through the same executor (symm schedule for the gram kinds,
+transpose-folded matmul programs for matmul), with ``bwd="dense"``
+keeping the dense-dot baselines selectable for benchmarking.
+
+The analytic HBM traffic model is likewise IR-driven: :func:`_traffic`
+scores a bound :class:`_Spec` (reads = grid DMA tile fetches including
+the padded contribution slots, writes = one store per output tile), and
+the per-kind models (``ata_traffic_model`` etc.) are thin geometry
+wrappers over it — the model shares the executor's binding code, so it
+cannot drift from the kernel's clamping/padding.
 """
 from __future__ import annotations
 
 import functools
 import math
 import warnings
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 import jax
@@ -44,16 +60,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core import leaf_ir
 from ..core.ata import ata_levels_for
-from ..core.schedule import plan_ata, plan_matmul, plan_symm
+from ..core.leaf_ir import LeafProgram, compile_program
 from ..core.strassen import strassen_levels_for
 from ..core.symmetry import unpack_tril_blocks
 from .ops import _auto_interpret
 from .syrk import _tri_decode
 
-__all__ = ["fused_ata", "fused_ata_packed", "fused_matmul",
-           "fused_symm_matmul", "ata_traffic_model",
-           "ata_bwd_traffic_model"]
+__all__ = ["fused_ata", "fused_ata_packed", "fused_aat", "fused_aat_packed",
+           "fused_matmul", "fused_symm_matmul", "fused_rank_k_update",
+           "ata_traffic_model", "aat_traffic_model", "ata_bwd_traffic_model",
+           "rank_k_traffic_model"]
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -62,9 +80,9 @@ def _round_up(x: int, mult: int) -> int:
 
 # VMEM guard: the kernel gathers 2 * max_terms input tiles per grid step
 # (double-buffered by the pipeline).  Each Strassen level doubles the
-# operand fan-in (Winograd can quadruple it), so deep plans are clamped to
-# keep the working set well under per-core VMEM: 2*8 tiles of 256x256 fp32
-# = 4 MB single-buffered.
+# operand fan-in (Winograd can quadruple it), so deep programs are clamped
+# to keep the working set well under per-core VMEM: 2*8 tiles of 256x256
+# fp32 = 4 MB single-buffered.
 MAX_OPERAND_TERMS = 8
 
 # (kind, variant, requested, clamped) combinations already warned about —
@@ -86,30 +104,38 @@ def _warn_fan_in_clamp(kind: str, variant: str, requested: int,
         stacklevel=3)
 
 
-def _fan_in_clamp(kind: str, plan_fn, levels: int, variant: str) -> int:
-    """Clamp ``levels`` until the plan's operand fan-in fits VMEM,
+def _fan_in_clamp(kind: str, levels: int, variant: str) -> int:
+    """Clamp ``levels`` until the program's operand fan-in fits VMEM,
     warning once per distinct clamp (the shape-driven clamp above this is
-    expected behaviour and stays silent)."""
+    expected behaviour and stays silent).  ``rank_k`` shares the ``ata``
+    program, ``symm`` warns under its own name as before."""
+    prog_kind = "ata" if kind == "rank_k" else kind
     requested = levels
-    while levels > 0 and plan_fn(levels, variant).max_terms > \
-            MAX_OPERAND_TERMS:
+    while levels > 0 and compile_program(prog_kind, levels, variant) \
+            .max_terms > MAX_OPERAND_TERMS:
         levels -= 1
     if levels < requested:
         _warn_fan_in_clamp(kind, variant, requested, levels)
     return levels
 
 
+# ---------------------------------------------------------------------------
+# Geometry: bind a program kind to concrete shapes/tiles (single source of
+# truth shared by the executor and the traffic models).
+# ---------------------------------------------------------------------------
+
 def _ata_geometry(m: int, n: int, levels: int, variant: str,
-                  bk: int, bn: int):
-    """Shared executor/traffic-model geometry (single source of truth).
+                  bk: int, bn: int, kind: str = "ata"):
+    """Executor/traffic-model geometry for the column-gram kinds.
 
     Clamps ``levels`` so (a) every leaf block holds at least one (bk, bn)
     tile of real data and (b) the operand fan-in fits VMEM (warned once),
     then derives leaf/padded shapes and grid extents.
     """
     levels = min(levels, ata_levels_for(m, n, max(bk, bn)))
-    levels = _fan_in_clamp("ata", plan_ata, levels, variant)
-    plan = plan_ata(levels, variant)
+    levels = _fan_in_clamp(kind, levels, variant)
+    plan = compile_program("rank_k" if kind == "rank_k" else "ata",
+                           levels, variant)
     B = plan.blocks
     mb = _round_up(max(m, 1), B * bk) // B     # leaf rows (bk multiple)
     nb = _round_up(max(n, 1), B * bn) // B     # leaf cols (bn multiple)
@@ -122,14 +148,132 @@ def _ata_geometry(m: int, n: int, levels: int, variant: str,
     }
 
 
+def _aat_geometry(m: int, n: int, levels: int, variant: str,
+                  bm: int, bk: int):
+    """Geometry for the row-gram (A A^t) kind — the column-gram geometry
+    with the roles of the two grids swapped: output tiles tile the *row*
+    dimension, the contraction sweeps the columns."""
+    levels = min(levels, ata_levels_for(m, n, max(bm, bk)))
+    levels = _fan_in_clamp("aat", levels, variant)
+    plan = compile_program("aat", levels, variant)
+    B = plan.blocks
+    mb = _round_up(max(m, 1), B * bm) // B     # leaf rows (bm multiple)
+    nb = _round_up(max(n, 1), B * bk) // B     # leaf cols (bk multiple)
+    M, N = B * mb, B * nb
+    t_blocks = M // bm
+    return {
+        "plan": plan, "levels": levels, "mb": mb, "nb": nb, "M": M, "N": N,
+        "n_k": nb // bk, "nbt": mb // bm,
+        "n_tri": t_blocks * (t_blocks + 1) // 2,
+    }
+
+
+def _symm_geometry(m: int, T: int, levels: int, variant: str, bm: int):
+    """Level clamp + padded-row geometry for the symm executor (shared
+    with ``ata_bwd_traffic_model``).  ``T`` is the packed stack's tile
+    count per side; the column side cannot be padded (the stack layout is
+    fixed), so levels clamp to divisors of T."""
+    while levels > 0 and T % (1 << levels):
+        levels -= 1
+    levels = _fan_in_clamp("symm", levels, variant)
+    plan = compile_program("symm", levels, variant)
+    B = plan.blocks
+    mb = _round_up(max(m, 1), B * bm) // B
+    return {"plan": plan, "levels": levels, "M": B * mb,
+            "nbm": mb // bm, "q": T // B}
+
+
+def _rank_k_geometry(m: int, T: int, levels: int, variant: str, bk: int):
+    """Geometry for C += A^t A against an existing packed (T-tile) stack:
+    the ata geometry with the column side pinned to the stack layout, so
+    levels clamp to divisors of T (like symm)."""
+    while levels > 0 and T % (1 << levels):
+        levels -= 1
+    levels = min(levels, ata_levels_for(m, T, 1))   # never exceed the grid
+    levels = _fan_in_clamp("rank_k", levels, variant)
+    plan = compile_program("rank_k", levels, variant)
+    B = plan.blocks
+    mb = _round_up(max(m, 1), B * bk) // B
+    return {"plan": plan, "levels": levels, "M": B * mb, "mb": mb,
+            "n_k": mb // bk, "nbt": T // B,
+            "n_tri": T * (T + 1) // 2}
+
+
 # ---------------------------------------------------------------------------
-# Scalar-prefetch tables: the plan lowered to int32 arrays indexed by
-# (leaf destination, contribution slot[, term slot]).  Empty slots carry
-# sign 0 (the kernel skips them) and index block (0, 0) (a harmless fetch).
+# Binding: a program + concrete tiles/grid, as a static (hashable) spec.
 # ---------------------------------------------------------------------------
 
-def _lower_tables(plan, n_dest: int, dest_index):
-    n_c, tmax = plan.max_contributions, plan.max_terms
+@dataclass(frozen=True)
+class _Spec:
+    """Static binding of a LeafProgram to tiles and a flattened grid.
+
+    Grid is uniformly ``(n_out, n_c, n_k)``: output tiles (tri-decoded
+    for packed outputs, row-major ``divmod(t, n_tj)`` for dense), the
+    padded contribution sweep, and the K sweep.  ``q_i``/``q_j`` are
+    output tiles per leaf block along each output dim; ``bi``/``bj`` the
+    output tile edges; ``bc`` the contraction tile edge.
+    """
+    kind: str
+    levels: int
+    variant: str
+    trans_a: bool               # matmul-only operand-spec transposes
+    trans_b: bool
+    tmax: int
+    n_c: int
+    n_k: int
+    n_out: int
+    n_tj: int                   # dense outputs: tiles along j (0 for tri)
+    q_i: int
+    q_j: int
+    blocks: int
+    bi: int
+    bj: int
+    bc: int
+    out_tri: bool
+    left_trans: bool
+    right_trans: bool
+    right_tri: bool
+    diag_sym: bool
+    accumulate: bool
+
+    @property
+    def grid_steps(self) -> int:
+        return self.n_out * self.n_c * self.n_k
+
+
+def _bind(prog: LeafProgram, *, n_out, n_tj, q_i, q_j, n_k, bi, bj, bc,
+          diag_sym=False) -> _Spec:
+    ls, rs, os_ = prog.left_spec, prog.right_spec, prog.out_spec
+    return _Spec(
+        kind=prog.kind, levels=prog.levels, variant=prog.variant,
+        trans_a=ls.transpose if prog.kind == "matmul" else False,
+        trans_b=rs.transpose if prog.kind == "matmul" else False,
+        tmax=prog.max_terms, n_c=prog.max_contributions, n_k=n_k,
+        n_out=n_out, n_tj=n_tj, q_i=q_i, q_j=q_j, blocks=prog.blocks,
+        bi=bi, bj=bj, bc=bc,
+        out_tri=os_.packing == "tri",
+        left_trans=ls.transpose, right_trans=rs.transpose,
+        right_tri=rs.layout == "tri",
+        diag_sym=diag_sym, accumulate=os_.accumulate)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-prefetch tables: the program lowered to int32 arrays indexed by
+# (leaf destination, contribution slot[, term slot]).  Empty slots carry
+# sign 0 (the kernel skips them) and index block (0, 0) (a harmless
+# fetch).  Uniform across kinds: sign + (row, col, sign) per side + the
+# right-side trans table (per-term mirrors only ever occur on tri-stored
+# right operands; left per-term trans is asserted unused at lowering —
+# the left side's transposes are whole-operand OperandSpec flags).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _program_tables(kind: str, levels: int, variant: str,
+                    trans_a: bool = False, trans_b: bool = False):
+    prog = compile_program(kind, levels, variant,
+                           trans_a=trans_a, trans_b=trans_b)
+    n_dest, n_c, tmax = prog.n_dests(), prog.max_contributions, \
+        prog.max_terms
     sign = np.zeros((n_dest, n_c), np.int32)
     lrow = np.zeros((n_dest, n_c, tmax), np.int32)
     lcol = np.zeros_like(lrow)
@@ -137,29 +281,55 @@ def _lower_tables(plan, n_dest: int, dest_index):
     rrow = np.zeros_like(lrow)
     rcol = np.zeros_like(lrow)
     rsgn = np.zeros_like(lrow)
-    for (di, dj), contribs in plan.by_dest().items():
-        ld = dest_index(di, dj)
+    rtrn = np.zeros_like(lrow)
+    for (di, dj), contribs in prog.by_dest().items():
+        ld = prog.dest_index(di, dj)
         for s, contrib in enumerate(contribs):
             sign[ld, s] = contrib.sign
-            for p, (r, c, sg) in enumerate(contrib.left):
+            for p, (r, c, sg, tr) in enumerate(contrib.left):
+                assert tr == 0, "per-term left transposes are not lowered"
                 lrow[ld, s, p], lcol[ld, s, p], lsgn[ld, s, p] = r, c, sg
-            for q, (r, c, sg) in enumerate(contrib.right):
-                rrow[ld, s, q], rcol[ld, s, q], rsgn[ld, s, q] = r, c, sg
-    return sign, lrow, lcol, lsgn, rrow, rcol, rsgn
+            for q, (r, c, sg, tr) in enumerate(contrib.right):
+                rrow[ld, s, q], rcol[ld, s, q] = r, c
+                rsgn[ld, s, q], rtrn[ld, s, q] = sg, tr
+    return sign, lrow, lcol, lsgn, rrow, rcol, rsgn, rtrn
 
 
-@functools.lru_cache(maxsize=None)
-def _ata_tables(levels: int, variant: str):
-    plan = plan_ata(levels, variant)
-    n_dest = plan.blocks * (plan.blocks + 1) // 2
-    return _lower_tables(plan, n_dest, lambda di, dj: di * (di + 1) // 2 + dj)
+# a re-registered algebra table must invalidate the lowered tables too —
+# compile_program.cache_clear() alone would leave these stale
+leaf_ir.on_algebra_change(_program_tables.cache_clear)
 
 
-@functools.lru_cache(maxsize=None)
-def _matmul_tables(levels: int, variant: str):
-    plan = plan_matmul(levels, variant)
-    b = plan.blocks
-    return _lower_tables(plan, b * b, lambda di, dj: di * b + dj)
+# ---------------------------------------------------------------------------
+# The ONE kernel + pallas_call site.
+# ---------------------------------------------------------------------------
+
+def _decode_out(t, spec: _Spec):
+    """Flattened output-tile index -> (global tile i, global tile j)."""
+    if spec.out_tri:
+        return _tri_decode(t)
+    return t // spec.n_tj, t % spec.n_tj
+
+
+def _dest_ld(gi, gj, spec: _Spec):
+    """Output tile coords -> leaf-destination table index."""
+    di, dj = gi // spec.q_i, gj // spec.q_j
+    if spec.out_tri:
+        return di * (di + 1) // 2 + dj
+    return di * spec.blocks + dj
+
+
+def _tri_term_coords(rrow_ref, rcol_ref, rtrn_ref, ld, c, qt, spec, k, jq):
+    """Conceptual global tile coords (gr, gc) of a tri-stored right term.
+
+    Program-mirrored terms (rtrn == 1) store the transposed leaf, so
+    their within-leaf offsets swap; diagonal leaves straddle the stored
+    triangle at tile granularity, handled downstream by max/min +
+    transpose."""
+    t = rtrn_ref[ld, c, qt]
+    gr = rrow_ref[ld, c, qt] * spec.q_j + jnp.where(t != 0, jq, k)
+    gc = rcol_ref[ld, c, qt] * spec.q_j + jnp.where(t != 0, k, jq)
+    return gr, gc
 
 
 def _signed_sum(refs, sgn_ref, ld, c):
@@ -172,36 +342,164 @@ def _signed_sum(refs, sgn_ref, ld, c):
     return acc
 
 
-# ---------------------------------------------------------------------------
-# Fused ATA: C = tril(A^t A) into the packed triangular block stack.
-# ---------------------------------------------------------------------------
-
-def _fused_ata_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
-                      rrow_ref, rcol_ref, rsgn_ref, *refs,
-                      tmax: int, nbt: int, n_c: int, n_k: int):
-    a_refs = refs[:2 * tmax]
-    o_ref, acc_ref = refs[2 * tmax], refs[2 * tmax + 1]
+def _leaf_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
+                 rrow_ref, rcol_ref, rsgn_ref, rtrn_ref, *refs,
+                 spec: _Spec):
+    tmax = spec.tmax
+    l_refs = refs[:tmax]
+    r_refs = refs[tmax:2 * tmax]
+    cin_ref = refs[2 * tmax] if spec.accumulate else None
+    o_ref, acc_ref = refs[-2], refs[-1]
     t, c, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
-    gi, gj = _tri_decode(t)
-    di = gi // nbt
-    ld = di * (di + 1) // 2 + gj // nbt
+    gi, gj = _decode_out(t, spec)
+    ld = _dest_ld(gi, gj, spec)
+    jq = gj % spec.q_j
     sgn = sign_ref[ld, c]
 
     @pl.when((c == 0) & (k == 0))
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def _init():
+        if spec.accumulate:
+            # rank-k: the running packed stack seeds the accumulator —
+            # the incoming C is read once per tile, never re-materialized
+            acc_ref[...] = cin_ref[...].astype(jnp.float32)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
 
     @pl.when(sgn != 0)
     def _accumulate():
-        left = _signed_sum(a_refs[:tmax], lsgn_ref, ld, c)
-        right = _signed_sum(a_refs[tmax:], rsgn_ref, ld, c)
+        # whole-side transposes flip the gathered sum once —
+        # (sum s_p X_p)^t = sum s_p X_p^t, one transpose per gather.
+        left = _signed_sum(l_refs, lsgn_ref, ld, c)
+        if spec.left_trans:
+            left = left.T
+        if spec.right_tri:
+            right = None
+            for qt, ref in enumerate(r_refs):
+                gr, gc = _tri_term_coords(rrow_ref, rcol_ref, rtrn_ref,
+                                          ld, c, qt, spec, k, jq)
+                tile = ref[...].astype(jnp.float32)
+                # the index map fetched the stored (max, min) tile;
+                # transpose in VMEM whenever the conceptual read was
+                # above the diagonal or the term itself was mirrored
+                mirrored = (rtrn_ref[ld, c, qt] != 0) | (gr < gc)
+                tile = jnp.where(mirrored, tile.T, tile)
+                if spec.diag_sym:
+                    # the S + S^t operand: diagonal tiles double
+                    tile = jnp.where(gr == gc, tile + tile.T, tile)
+                term = tile * rsgn_ref[ld, c, qt].astype(jnp.float32)
+                right = term if right is None else right + term
+        else:
+            right = _signed_sum(r_refs, rsgn_ref, ld, c)
+            if spec.right_trans:
+                right = right.T
         acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
-            left.T, right, preferred_element_type=jnp.float32)
+            left, right, preferred_element_type=jnp.float32)
 
-    @pl.when((c == n_c - 1) & (k == n_k - 1))
+    @pl.when((c == spec.n_c - 1) & (k == spec.n_k - 1))
     def _store():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
+
+def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
+             out_dtype, interpret, c_in: Optional[jax.Array] = None):
+    """Run a bound program — the single ``pallas_call`` site.
+
+    ``left``/``right`` are the padded operand arrays (the same array for
+    the one-input gram kinds); ``c_in`` the incoming packed stack for
+    accumulating programs.  Returns the raw output buffer: the packed
+    tri stack for tri-packed programs, the dense (padded) grid otherwise.
+    """
+    tables = _program_tables(spec.kind, spec.levels, spec.variant,
+                             spec.trans_a, spec.trans_b)
+    n_tab = len(tables)
+
+    def left_map(p):
+        def index_map(t, c, k, *tabs):
+            lrow, lcol = tabs[1], tabs[2]
+            gi, gj = _decode_out(t, spec)
+            ld = _dest_ld(gi, gj, spec)
+            if spec.left_trans:
+                # stored leaf is (contraction, out_i)
+                return (lrow[ld, c, p] * spec.n_k + k,
+                        lcol[ld, c, p] * spec.q_i + gi % spec.q_i)
+            return (lrow[ld, c, p] * spec.q_i + gi % spec.q_i,
+                    lcol[ld, c, p] * spec.n_k + k)
+        return index_map
+
+    def right_map(q):
+        def index_map(t, c, k, *tabs):
+            rrow, rcol, rtrn = tabs[4], tabs[5], tabs[7]
+            gi, gj = _decode_out(t, spec)
+            ld = _dest_ld(gi, gj, spec)
+            if spec.right_tri:
+                gr, gc = _tri_term_coords(rrow, rcol, rtrn, ld, c, q,
+                                          spec, k, gj % spec.q_j)
+                # the mirror, folded into the index map: always fetch
+                # the stored lower-triangle tile
+                fr = jnp.maximum(gr, gc)
+                fc = jnp.minimum(gr, gc)
+                return (fr * (fr + 1) // 2 + fc, 0)
+            if spec.right_trans:
+                # stored leaf is (out_j, contraction)
+                return (rrow[ld, c, q] * spec.q_j + gj % spec.q_j,
+                        rcol[ld, c, q] * spec.n_k + k)
+            return (rrow[ld, c, q] * spec.n_k + k,
+                    rcol[ld, c, q] * spec.q_j + gj % spec.q_j)
+        return index_map
+
+    def out_map(t, c, k, *tabs):
+        if spec.out_tri:
+            return (t, 0)
+        return (t // spec.n_tj, t % spec.n_tj)
+
+    l_shape = (spec.bc, spec.bi) if spec.left_trans else (spec.bi, spec.bc)
+    if spec.right_tri:
+        r_shape = (spec.bj, spec.bj)
+    elif spec.right_trans:
+        r_shape = (spec.bj, spec.bc)
+    else:
+        r_shape = (spec.bc, spec.bj)
+
+    in_specs = [pl.BlockSpec(l_shape, left_map(p)) for p in range(spec.tmax)]
+    in_specs += [pl.BlockSpec(r_shape, right_map(q))
+                 for q in range(spec.tmax)]
+    operands = [left] * spec.tmax + [right] * spec.tmax
+    if spec.accumulate:
+        # the incoming stack: same tile walk as the output
+        in_specs.append(pl.BlockSpec((spec.bi, spec.bj), out_map))
+        operands.append(c_in)
+
+    if spec.out_tri:
+        out_shape = jax.ShapeDtypeStruct((spec.n_out * spec.bi, spec.bj),
+                                         out_dtype)
+    else:
+        out_shape = jax.ShapeDtypeStruct(
+            ((spec.n_out // spec.n_tj) * spec.bi, spec.n_tj * spec.bj),
+            out_dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_tab,
+        grid=(spec.n_out, spec.n_c, spec.n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((spec.bi, spec.bj), out_map),
+        scratch_shapes=[pltpu.VMEM((spec.bi, spec.bj), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_leaf_kernel, spec=spec),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        # output tiles (t) are independent -> megacore partitions them;
+        # the (contribution, K) sweep carries the VMEM accumulator and
+        # must stay sequential per tile.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*tables, *operands)
+
+
+# ---------------------------------------------------------------------------
+# Fused ATA: C = tril(A^t A) into the packed triangular block stack.
+# ---------------------------------------------------------------------------
 
 def fused_ata_packed(
     a: jax.Array,
@@ -215,7 +513,7 @@ def fused_ata_packed(
     bwd: str = "fused",
 ):
     """Packed lower-triangular block stack of ``tril(a.T @ a)`` via the
-    fused schedule executor.
+    leaf-program executor.
 
     ``a`` is zero-padded so each of the ``2^levels`` leaf blocks is a
     (bk, bn)-tile multiple (exact: zero rows add nothing to A^tA, zero
@@ -226,10 +524,9 @@ def fused_ata_packed(
     ``symmetry.pack_tril_blocks`` / ``kernels.syrk``.
 
     ``levels`` is a cap: the unroll depth is clamped (``_ata_geometry``)
-    so every leaf block holds at least one (bk, bn) tile of real data —
-    a (128, 128) input with 256-tiles runs as a single SYRK leaf rather
-    than padding each empty leaf level 2x per dimension — and so the
-    operand fan-in fits VMEM (``MAX_OPERAND_TERMS``, warned once).
+    so every leaf block holds at least one (bk, bn) tile of real data
+    and so the operand fan-in fits VMEM (``MAX_OPERAND_TERMS``, warned
+    once).
 
     Differentiable: the custom VJP consumes the *packed* cotangent
     directly through :func:`fused_symm_matmul` (``bwd="fused"``, the
@@ -296,56 +593,15 @@ def _fused_ata_packed_exec(
     """Forward executor (no autodiff surface — see the custom VJP above)."""
     m, n = a.shape
     geo = _ata_geometry(m, n, levels, variant, bk, bn)
-    plan, levels = geo["plan"], geo["levels"]
+    plan = geo["plan"]
     M, N = geo["M"], geo["N"]
     if (M, N) != (m, n):
         a = jnp.pad(a, ((0, M - m), (0, N - n)))
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-
-    n_k, nbt, n_tri = geo["n_k"], geo["nbt"], geo["n_tri"]
-    tmax, n_c = plan.max_terms, plan.max_contributions
-    tables = _ata_tables(levels, variant)
-
-    def _dest(t):
-        gi, gj = _tri_decode(t)
-        di = gi // nbt
-        return gi, gj, di * (di + 1) // 2 + gj // nbt
-
-    def left_map(p):
-        def index_map(t, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
-            gi, _, ld = _dest(t)
-            return (lrow[ld, c, p] * n_k + k, lcol[ld, c, p] * nbt + gi % nbt)
-        return index_map
-
-    def right_map(q):
-        def index_map(t, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
-            _, gj, ld = _dest(t)
-            return (rrow[ld, c, q] * n_k + k, rcol[ld, c, q] * nbt + gj % nbt)
-        return index_map
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7,
-        grid=(n_tri, n_c, n_k),
-        in_specs=[pl.BlockSpec((bk, bn), left_map(p)) for p in range(tmax)]
-        + [pl.BlockSpec((bk, bn), right_map(q)) for q in range(tmax)],
-        out_specs=pl.BlockSpec((bn, bn), lambda t, c, k, *_: (t, 0)),
-        scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
-    )
-    kernel = functools.partial(_fused_ata_kernel, tmax=tmax, nbt=nbt,
-                               n_c=n_c, n_k=n_k)
-    packed = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_tri * bn, bn), out_dtype),
-        # output tiles (t) are independent -> megacore partitions them;
-        # the (contribution, K) sweep carries the VMEM accumulator and
-        # must stay sequential per tile.
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(*tables, *([a] * (2 * tmax)))
-    return packed, N
+    spec = _bind(plan, n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
+    return _execute(spec, a, a, out_dtype, interpret), N
 
 
 def fused_ata(
@@ -362,11 +618,11 @@ def fused_ata(
     """Dense ``tril(a.T @ a)`` at the original size via the fused pipeline.
 
     Differentiable: ``dA = A (S + S^t)`` with ``S = tril(cotangent)``.
-    ``bwd="fused"`` (default) runs the backward through the symm schedule
+    ``bwd="fused"`` (default) runs the backward through the symm program
     executor (:func:`fused_symm_matmul`): the cotangent is gathered
     straight into the packed lower-triangular tile stack (n(n+1)/2
     storage, per-tile slices — no dense S + S^t or padded-S buffer) and
-    the product runs the same leaf-task Strassen pipeline as the forward.
+    the product runs the same leaf-program pipeline as the forward.
     ``bwd="dense"`` keeps the classical ``jnp.dot(a, s + s.T)`` baseline.
     """
     interpret = _auto_interpret(interpret)
@@ -438,115 +694,198 @@ _fused_ata_dense.defvjp(_fused_ata_dense_fwd, _fused_ata_dense_bwd)
 
 
 # ---------------------------------------------------------------------------
-# Fused symm matmul: D = X @ Sym where Sym is given ONLY as the packed
-# lower-triangular (bs, bs) tile stack of S (syrk / fused-ATA layout).
-# The executor for ``core.schedule.plan_symm`` — and the engine of the
-# Gram backward: dA = A (S + S^t) with S the (packed) cotangent.
-#
-# Upper-triangle tile reads (gr < gc) are mirrored (gc, gr) reads of the
-# stored stack with the transpose folded into the index maps; plan-level
-# mirrored leaves (the 4th element of symm right terms) swap their
-# within-leaf tile offsets the same way.  With ``diag_sym`` the diagonal
-# tiles contribute S_ii + S_ii^t — the packed cotangent IS the right
-# operand, and the dense n^2 cotangent never exists in HBM.
+# Fused AAT: C = tril(A A^t) — the Arrigoni-Massini (2021) row-gram
+# recursion, compiled from the same IR.  The transpose of A never exists
+# in HBM: the right side reads the SAME stored A tiles mirrored through
+# the index maps and flips the gathered sum in VMEM.
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=None)
-def _symm_tables(levels: int, variant: str):
-    """plan_symm lowered to int32 scalar-prefetch tables; the extra
-    ``rtrn`` table carries the per-term mirror flag."""
-    plan = plan_symm(levels, variant)
-    b = plan.blocks
-    n_c, tmax = plan.max_contributions, plan.max_terms
-    sign = np.zeros((b * b, n_c), np.int32)
-    lrow = np.zeros((b * b, n_c, tmax), np.int32)
-    lcol = np.zeros_like(lrow)
-    lsgn = np.zeros_like(lrow)
-    rrow = np.zeros_like(lrow)
-    rcol = np.zeros_like(lrow)
-    rsgn = np.zeros_like(lrow)
-    rtrn = np.zeros_like(lrow)
-    for (di, dj), contribs in plan.by_dest().items():
-        ld = di * b + dj
-        for s, contrib in enumerate(contribs):
-            sign[ld, s] = contrib.sign
-            for p, (r, c, sg) in enumerate(contrib.left):
-                lrow[ld, s, p], lcol[ld, s, p], lsgn[ld, s, p] = r, c, sg
-            for q, (r, c, sg, tr) in enumerate(contrib.right):
-                rrow[ld, s, q], rcol[ld, s, q] = r, c
-                rsgn[ld, s, q], rtrn[ld, s, q] = sg, tr
-    return sign, lrow, lcol, lsgn, rrow, rcol, rsgn, rtrn
+def fused_aat_packed(
+    a: jax.Array,
+    *,
+    levels: int = 2,
+    variant: str = "strassen",
+    bm: int = 256,
+    bk: int = 256,
+    out_dtype=None,
+    interpret=None,
+):
+    """Packed lower-triangular block stack of ``tril(a @ a.T)``.
+
+    Returns ``(packed, m_padded)`` with packed of shape
+    ``(T(T+1)/2 * bm, bm)``, ``T = m_padded // bm``.  Zero-padding is
+    exact: zero columns add nothing to A A^t, zero rows add zero
+    rows/columns to C that the dense wrapper slices away.
+    """
+    interpret = _auto_interpret(interpret)
+    m, n = a.shape
+    geo = _aat_geometry(m, n, levels, variant, bm, bk)
+    plan = geo["plan"]
+    M, N = geo["M"], geo["N"]
+    if (M, N) != (m, n):
+        a = jnp.pad(a, ((0, M - m), (0, N - n)))
+    out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+    spec = _bind(plan, n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bm, bj=bm, bc=bk)
+    return _execute(spec, a, a, out_dtype, interpret), M
 
 
-def _symm_coords(rrow_ref, rcol_ref, rtrn_ref, ld, c, qt, q, k, jq):
-    """Conceptual global tile coords (gr, gc) of Sym for right term ``qt``.
+def fused_aat(
+    a: jax.Array,
+    *,
+    levels: int = 2,
+    variant: str = "strassen",
+    bm: int = 256,
+    bk: int = 256,
+    out_dtype=None,
+    interpret=None,
+) -> jax.Array:
+    """Dense ``tril(a @ a.T)`` at the original size via the fused
+    pipeline — ``ata(x, gram_of="rows")``.
 
-    Plan-mirrored leaves (rtrn == 1) store the transposed leaf, so their
-    within-leaf offsets swap; diagonal leaves straddle the stored triangle
-    at tile granularity, handled downstream by max/min + transpose."""
-    t = rtrn_ref[ld, c, qt]
-    gr = rrow_ref[ld, c, qt] * q + jnp.where(t != 0, jq, k)
-    gc = rcol_ref[ld, c, qt] * q + jnp.where(t != 0, k, jq)
-    return gr, gc
-
-
-def _fused_symm_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
-                       rrow_ref, rcol_ref, rsgn_ref, rtrn_ref, *refs,
-                       tmax: int, nbm: int, q: int, n_c: int, n_k: int,
-                       blocks: int, diag_sym: bool):
-    x_refs = refs[:tmax]
-    s_refs = refs[tmax:2 * tmax]
-    o_ref, acc_ref = refs[2 * tmax], refs[2 * tmax + 1]
-    i, j = pl.program_id(0), pl.program_id(1)
-    c, k = pl.program_id(2), pl.program_id(3)
-    ld = (i // nbm) * blocks + j // q
-    jq = j % q
-    sgn = sign_ref[ld, c]
-
-    @pl.when((c == 0) & (k == 0))
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    @pl.when(sgn != 0)
-    def _accumulate():
-        left = _signed_sum(x_refs, lsgn_ref, ld, c)
-        right = None
-        for qt, ref in enumerate(s_refs):
-            gr, gc = _symm_coords(rrow_ref, rcol_ref, rtrn_ref, ld, c, qt,
-                                  q, k, jq)
-            tile = ref[...].astype(jnp.float32)
-            # the index map fetched the stored (max, min) tile; transpose
-            # in VMEM whenever the conceptual read was above the diagonal
-            # or the leaf itself was plan-mirrored
-            mirrored = (rtrn_ref[ld, c, qt] != 0) | (gr < gc)
-            tile = jnp.where(mirrored, tile.T, tile)
-            if diag_sym:
-                # the S + S^t operand: diagonal tiles double symmetrically
-                tile = jnp.where(gr == gc, tile + tile.T, tile)
-            term = tile * rsgn_ref[ld, c, qt].astype(jnp.float32)
-            right = term if right is None else right + term
-        acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
-            left, right, preferred_element_type=jnp.float32)
-
-    @pl.when((c == n_c - 1) & (k == n_k - 1))
-    def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    Differentiable: ``dA = (S + S^t) A`` with ``S = tril(cotangent)``
+    (the dense-dot VJP; the row-gram backward is symmetric-left rather
+    than symmetric-right, which the symm program does not yet express).
+    """
+    interpret = _auto_interpret(interpret)
+    out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
+                 if out_dtype is None else jnp.dtype(out_dtype))
+    return _fused_aat_dense(a, levels, variant, bm, bk, out_dtype, interpret)
 
 
-def _symm_geometry(m: int, T: int, levels: int, variant: str, bm: int):
-    """Level clamp + padded-row geometry for the symm executor (shared
-    with ``ata_bwd_traffic_model``).  ``T`` is the packed stack's tile
-    count per side; the column side cannot be padded (the stack layout is
-    fixed), so levels clamp to divisors of T."""
-    while levels > 0 and T % (1 << levels):
-        levels -= 1
-    levels = _fan_in_clamp("symm", plan_symm, levels, variant)
-    plan = plan_symm(levels, variant)
-    B = plan.blocks
-    mb = _round_up(max(m, 1), B * bm) // B
-    return {"plan": plan, "levels": levels, "M": B * mb,
-            "nbm": mb // bm, "q": T // B}
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _fused_aat_dense(a, levels, variant, bm, bk, out_dtype, interpret):
+    m = a.shape[0]
+    packed, m_pad = fused_aat_packed(a, levels=levels, variant=variant,
+                                     bm=bm, bk=bk, out_dtype=out_dtype,
+                                     interpret=interpret)
+    dense = unpack_tril_blocks(packed, m_pad, bm, symmetrize=False)
+    return jnp.tril(dense)[:m, :m]
 
+
+def _fused_aat_dense_fwd(a, levels, variant, bm, bk, out_dtype, interpret):
+    return (_fused_aat_dense(a, levels, variant, bm, bk, out_dtype,
+                             interpret), a)
+
+
+def _fused_aat_dense_bwd(levels, variant, bm, bk, out_dtype, interpret,
+                         a, g):
+    # C = tril(A A^t) => dA = (S + S^t) A, S = tril(g)
+    acc = jnp.promote_types(a.dtype, jnp.float32)
+    s = jnp.tril(g).astype(acc)
+    da = jnp.dot(s + s.T, a.astype(acc), preferred_element_type=acc)
+    return (da.astype(a.dtype),)
+
+
+_fused_aat_dense.defvjp(_fused_aat_dense_fwd, _fused_aat_dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused rank-k update: C += A^t A against an existing packed stack — the
+# accumulating ata program.  The incoming stack seeds the VMEM
+# accumulator tile-wise, so a streamed Gram update is ONE kernel with no
+# per-chunk delta stack and no unpack/gather in HBM.
+# ---------------------------------------------------------------------------
+
+def fused_rank_k_update(
+    c_stack: jax.Array,
+    a: jax.Array,
+    *,
+    levels: int = 2,
+    variant: str = "strassen",
+    bk: int = 256,
+    out_dtype=None,
+    interpret=None,
+) -> jax.Array:
+    """``C += tril(a.T @ a)`` on a packed lower-triangular tile stack.
+
+    ``c_stack`` is a ``(T(T+1)/2 * bn, bn)`` stack (``fused_ata_packed``
+    / ``kernels.syrk`` ordering — the tile edge is read off the stack's
+    trailing dim); ``a`` is an (m, n) chunk with ``n <= T * bn`` (columns
+    zero-padded to the stack span, exact for the Gram).  Returns the
+    updated stack, same shape/dtype discipline as the input.
+
+    ``levels`` is clamped to depths dividing the (fixed) stack layout,
+    like :func:`fused_symm_matmul`.  Differentiable in both arguments:
+    the stack cotangent passes through packed, and ``dA`` runs the symm
+    program on the packed cotangent (DESIGN.md §11) — no dense n^2
+    buffer in either direction.
+    """
+    interpret = _auto_interpret(interpret)
+    if c_stack.ndim != 2 or a.ndim != 2:
+        raise ValueError(f"bad ranks: stack {c_stack.shape} x {a.shape}")
+    bn = c_stack.shape[1]
+    if c_stack.shape[0] % bn:
+        raise ValueError(f"packed stack {c_stack.shape} not a (bn, bn) "
+                         "tile stack")
+    n_tri = c_stack.shape[0] // bn
+    T = (math.isqrt(8 * n_tri + 1) - 1) // 2
+    if T * (T + 1) // 2 != n_tri:
+        raise ValueError(f"stack of {n_tri} tiles is not triangular")
+    N = T * bn
+    if a.shape[1] > N:
+        raise ValueError(f"chunk has {a.shape[1]} cols but the stack "
+                         f"spans {N}")
+    out_dtype = (c_stack.dtype if out_dtype is None
+                 else jnp.dtype(out_dtype))
+    return _fused_rank_k_core(c_stack, a, levels, variant, bk, bn,
+                              out_dtype, jnp.dtype(c_stack.dtype),
+                              interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def _fused_rank_k_core(c_stack, a, levels, variant, bk, bn, out_dtype,
+                       stack_dtype, interpret):
+    return _fused_rank_k_exec(c_stack, a, levels, variant, bk, bn,
+                              out_dtype, interpret)
+
+
+def _fused_rank_k_exec(c_stack, a, levels, variant, bk, bn, out_dtype,
+                       interpret):
+    n_tri = c_stack.shape[0] // bn
+    T = (math.isqrt(8 * n_tri + 1) - 1) // 2
+    N = T * bn
+    m, n = a.shape
+    geo = _rank_k_geometry(m, T, levels, variant, bk)
+    plan, M = geo["plan"], geo["M"]
+    if (M, N) != (m, n):
+        a = jnp.pad(a, ((0, M - m), (0, N - n)))
+    spec = _bind(plan, n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
+    return _execute(spec, a, a, out_dtype, interpret, c_in=c_stack)
+
+
+def _fused_rank_k_fwd(c_stack, a, levels, variant, bk, bn, out_dtype,
+                      stack_dtype, interpret):
+    return (_fused_rank_k_core(c_stack, a, levels, variant, bk, bn,
+                               out_dtype, stack_dtype, interpret), a)
+
+
+def _fused_rank_k_bwd(levels, variant, bk, bn, out_dtype, stack_dtype,
+                      interpret, a, g):
+    # C_out = C_in + tril(A^t A): dC_in = g (packed pass-through, cast
+    # back to the stack primal's dtype); dA = A (S + S^t) with S the
+    # block-lower cotangent stack.
+    acc = jnp.promote_types(a.dtype, jnp.float32)
+    n = a.shape[1]
+    T = (math.isqrt(8 * (g.shape[0] // bn) + 1) - 1) // 2
+    lv = _rank_k_geometry(a.shape[0], T, levels, variant, bk)["levels"]
+    da = fused_symm_matmul(a, g, levels=lv, variant=variant, bm=bk,
+                           diag_sym=True, out_dtype=acc,
+                           interpret=interpret)[:, :n]
+    return g.astype(stack_dtype), da.astype(a.dtype)
+
+
+_fused_rank_k_core.defvjp(_fused_rank_k_fwd, _fused_rank_k_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused symm matmul: D = X @ Sym where Sym is given ONLY as the packed
+# lower-triangular (bs, bs) tile stack of S (syrk / fused-ATA layout).
+# The executor binding of the ``symm`` program — and the engine of the
+# Gram backward: dA = A (S + S^t) with S the (packed) cotangent.
+# ---------------------------------------------------------------------------
 
 def fused_symm_matmul(
     x: jax.Array,
@@ -559,7 +898,7 @@ def fused_symm_matmul(
     out_dtype=None,
     interpret=None,
 ) -> jax.Array:
-    """``x @ Sym`` via the flattened symm schedule, one fused kernel.
+    """``x @ Sym`` via the flattened symm program, one fused kernel.
 
     ``s_packed`` is the packed lower-triangular tile stack of S —
     shape (T(T+1)/2 * bs, bs) in ``kernels.syrk`` / ``fused_ata_packed``
@@ -603,68 +942,45 @@ def fused_symm_matmul(
                  if out_dtype is None else jnp.dtype(out_dtype))
 
     geo = _symm_geometry(m, T, levels, variant, bm)
-    plan, levels = geo["plan"], geo["levels"]
-    B, M, nbm, q = plan.blocks, geo["M"], geo["nbm"], geo["q"]
+    plan = geo["plan"]
+    M, nbm, q = geo["M"], geo["nbm"], geo["q"]
     if M != m:
         x = jnp.pad(x, ((0, M - m), (0, 0)))
-    n_k = q
-    tmax, n_c = plan.max_terms, plan.max_contributions
-    tables = _symm_tables(levels, variant)
-
-    def left_map(p):
-        def index_map(i, j, c, k, sign, lrow, lcol, lsgn,
-                      rrow, rcol, rsgn, rtrn):
-            ld = (i // nbm) * B + j // q
-            return (lrow[ld, c, p] * nbm + i % nbm, lcol[ld, c, p] * q + k)
-        return index_map
-
-    def right_map(qt):
-        def index_map(i, j, c, k, sign, lrow, lcol, lsgn,
-                      rrow, rcol, rsgn, rtrn):
-            ld = (i // nbm) * B + j // q
-            gr, gc = _symm_coords(rrow, rcol, rtrn, ld, c, qt, q, k, j % q)
-            # the mirror, folded into the index map: always fetch the
-            # stored lower-triangle tile
-            fr = jnp.maximum(gr, gc)
-            fc = jnp.minimum(gr, gc)
-            return (fr * (fr + 1) // 2 + fc, 0)
-        return index_map
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=8,
-        grid=(M // bm, T, n_c, n_k),
-        in_specs=[pl.BlockSpec((bm, bs), left_map(p)) for p in range(tmax)]
-        + [pl.BlockSpec((bs, bs), right_map(qt)) for qt in range(tmax)],
-        out_specs=pl.BlockSpec((bm, bs), lambda i, j, c, k, *_: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
-    )
-    kernel = functools.partial(_fused_symm_kernel, tmax=tmax, nbm=nbm, q=q,
-                               n_c=n_c, n_k=n_k, blocks=B,
-                               diag_sym=diag_sym)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary",
-                                 "arbitrary")),
-        interpret=interpret,
-    )(*tables, *([x] * tmax), *([s_packed] * tmax))
+    spec = _bind(plan, n_out=(M // bm) * T, n_tj=T, q_i=nbm, q_j=q,
+                 n_k=q, bi=bm, bj=bs, bc=bs, diag_sym=diag_sym)
+    out = _execute(spec, x, s_packed, out_dtype, interpret)
     return out[:m]
 
 
 # ---------------------------------------------------------------------------
-# Analytic HBM traffic model for the fused ATA kernel.
+# Analytic HBM traffic model — IR-driven, one core shared by every kind.
 #
 # In interpret mode (CPU) the Pallas pipeline is *emulated* with XLA loops
 # whose HLO carries full-array state buffers, so an HLO census of the
 # interpret lowering measures the emulation, not the kernel.  On hardware
 # the kernel's HBM behaviour is exact and simple by construction — grid
-# DMA reads of A tiles, one write per packed output tile, and NO other
-# HBM buffer (operand sums, M_i products and recombination temporaries
-# live only in VMEM) — so we model it in closed form, the same way
-# bench_roofline treats Pallas flash-attention FLOPs analytically.
+# DMA reads of operand tiles, one write per output tile, and NO other
+# HBM buffer — so we model it in closed form over the bound _Spec, the
+# same way bench_roofline treats Pallas flash-attention FLOPs
+# analytically.
 # ---------------------------------------------------------------------------
+
+def _traffic(spec: _Spec, *, left_bytes: int, right_bytes: int,
+             out_bytes: int, cin_bytes: int = 0) -> dict:
+    """Core HBM model of one bound program: streamed tile fetches
+    (incl. padded null contribution slots — the contribution axis is
+    padded to ``max_contributions``, so the read term honestly reflects
+    that amplification), one write per output tile, plus the incoming
+    stack read for accumulating programs."""
+    grid = spec.grid_steps
+    l_tile = spec.bi * spec.bc
+    r_tile = (spec.bj * spec.bj) if spec.right_tri else spec.bj * spec.bc
+    reads = grid * spec.tmax * (l_tile * left_bytes + r_tile * right_bytes)
+    if spec.accumulate:
+        reads += spec.n_out * spec.bi * spec.bj * cin_bytes
+    writes = spec.n_out * spec.bi * spec.bj * out_bytes
+    return {"grid_steps": grid, "read_bytes": reads, "write_bytes": writes}
+
 
 def ata_traffic_model(
     m: int, n: int, *, levels: int = 2, variant: str = "strassen",
@@ -672,29 +988,68 @@ def ata_traffic_model(
 ) -> dict:
     """HBM bytes of ``fused_ata_packed`` on an (m, n) input.
 
-    Returns reads (streamed A-tile fetches, incl. padded null slots —
-    the contribution axis is padded to ``max_contributions``, so the
-    read term honestly reflects that amplification), writes (each packed
-    output tile exactly once) and ``intermediate_bytes`` —
-    HBM-materialized temporaries, which is just the zero-pad copy of A
-    when the shape is not tile-aligned, and 0 otherwise.  Uses the same
+    Reads/writes from the shared IR traffic core; ``intermediate_bytes``
+    is HBM-materialized temporaries — just the zero-pad copy of A when
+    the shape is not tile-aligned, 0 otherwise.  Uses the same
     ``_ata_geometry`` as the executor, so the model cannot drift from
     the kernel's clamping/padding.
     """
     geo = _ata_geometry(m, n, levels, variant, bk, bn)
-    plan, n_tri, n_k = geo["plan"], geo["n_tri"], geo["n_k"]
     M, N = geo["M"], geo["N"]
-    grid = n_tri * plan.max_contributions * n_k
-    reads = grid * 2 * plan.max_terms * bk * bn * in_bytes
-    writes = n_tri * bn * bn * out_bytes
-    pad_copy = M * N * in_bytes if (M, N) != (m, n) else 0
-    return {
-        "grid_steps": grid,
-        "read_bytes": reads,
-        "write_bytes": writes,
-        "intermediate_bytes": pad_copy,
-        "padded_shape": (M, N),
+    spec = _bind(geo["plan"], n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
+    t = _traffic(spec, left_bytes=in_bytes, right_bytes=in_bytes,
+                 out_bytes=out_bytes)
+    t["intermediate_bytes"] = M * N * in_bytes if (M, N) != (m, n) else 0
+    t["padded_shape"] = (M, N)
+    return t
+
+
+def aat_traffic_model(
+    m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    bm: int = 256, bk: int = 256, in_bytes: int = 4, out_bytes: int = 4,
+) -> dict:
+    """HBM bytes of ``fused_aat_packed`` (row gram) — same core model,
+    the row-gram geometry."""
+    geo = _aat_geometry(m, n, levels, variant, bm, bk)
+    M, N = geo["M"], geo["N"]
+    spec = _bind(geo["plan"], n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bm, bj=bm, bc=bk)
+    t = _traffic(spec, left_bytes=in_bytes, right_bytes=in_bytes,
+                 out_bytes=out_bytes)
+    t["intermediate_bytes"] = M * N * in_bytes if (M, N) != (m, n) else 0
+    t["padded_shape"] = (M, N)
+    return t
+
+
+def rank_k_traffic_model(
+    m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    bk: int = 256, bn: int = 256, state_bytes: int = 4, in_bytes: int = 4,
+) -> dict:
+    """HBM bytes of one ``fused_rank_k_update`` chunk vs the status-quo
+    streamed update it replaces (ata kernel + delta stack + gather-add:
+    the delta stack is written and re-read, and the state is read and
+    rewritten)."""
+    T = _round_up(max(n, 1), bn) // bn
+    # the stack layout fixes T; mirror the executor's divisibility clamp
+    geo = _rank_k_geometry(m, T, levels, variant, bk)
+    M, N = geo["M"], T * bn
+    spec = _bind(geo["plan"], n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
+    t = _traffic(spec, left_bytes=in_bytes, right_bytes=in_bytes,
+                 out_bytes=state_bytes, cin_bytes=state_bytes)
+    stack_bytes = geo["n_tri"] * bn * bn * state_bytes
+    t["intermediate_bytes"] = (M * N * in_bytes if (M, N) != (m, n) else 0)
+    t["padded_shape"] = (M, N)
+    t["state_bytes"] = stack_bytes
+    # status quo (PR 2-4 stream updater): fused ata writes a delta stack,
+    # the gather reads it, and the add reads + writes the state.
+    t["baseline"] = {
+        "read_bytes": (t["read_bytes"] - stack_bytes) + 2 * stack_bytes,
+        "write_bytes": 2 * stack_bytes,
+        "intermediate_bytes": t["intermediate_bytes"] + stack_bytes,
     }
+    return t
 
 
 def ata_bwd_traffic_model(
@@ -703,7 +1058,7 @@ def ata_bwd_traffic_model(
     cotangent: str = "packed",
 ) -> dict:
     """HBM bytes of the Gram *backward* ``dA = A (S + S^t)`` on an (m, n)
-    forward problem — the fused symm-schedule kernel vs the dense-dot
+    forward problem — the fused symm-program kernel vs the dense-dot
     baseline it replaces.  Shares ``_ata_geometry`` / ``_symm_geometry``
     with the executors, so the model cannot drift from their clamping.
 
@@ -728,18 +1083,15 @@ def ata_bwd_traffic_model(
     sgeo = _symm_geometry(M, T, geo["levels"], variant, bk)
     plan, q = sgeo["plan"], sgeo["q"]
     assert sgeo["M"] == M, (sgeo["M"], M)   # bwd reuses the forward padding
-    grid = (M // bk) * T * plan.max_contributions * q
-    reads = grid * plan.max_terms * (bk * bn * in_bytes
-                                     + bn * bn * cot_bytes)
-    writes = M * N * 4                       # dA in the fp32 accum dtype
+    spec = _bind(plan, n_out=(M // bk) * T, n_tj=T, q_i=sgeo["nbm"],
+                 q_j=q, n_k=q, bi=bk, bj=bn, bc=bn, diag_sym=True)
+    t = _traffic(spec, left_bytes=in_bytes, right_bytes=cot_bytes,
+                 out_bytes=4)            # dA in the fp32 accum dtype
     stack_bytes = T * (T + 1) // 2 * bn * bn * cot_bytes
     pad_copy = M * N * in_bytes if (M, N) != (m, n) else 0
     fused_inter = pad_copy + (stack_bytes if cotangent == "dense" else 0)
     dense_inter = 3 * N * N * cot_bytes
-    return {
-        "grid_steps": grid,
-        "read_bytes": reads,
-        "write_bytes": writes,
+    t.update({
         "intermediate_bytes": fused_inter,
         "packed_stack_bytes": stack_bytes,
         "padded_shape": (M, N),
@@ -751,47 +1103,13 @@ def ata_bwd_traffic_model(
         },
         "intermediate_ratio_dense_over_fused": (
             dense_inter / fused_inter if fused_inter else None),
-    }
+    })
+    return t
 
 
 # ---------------------------------------------------------------------------
-# Fused Strassen matmul: C = A @ B, dense output.
+# Fused Strassen matmul: C = op(A) @ op(B), dense output.
 # ---------------------------------------------------------------------------
-
-def _fused_matmul_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
-                         rrow_ref, rcol_ref, rsgn_ref, *refs,
-                         tmax: int, nbm: int, nbn: int, n_c: int, n_k: int,
-                         blocks: int, trans_a: bool, trans_b: bool):
-    a_refs = refs[:tmax]
-    b_refs = refs[tmax:2 * tmax]
-    o_ref, acc_ref = refs[2 * tmax], refs[2 * tmax + 1]
-    i, j = pl.program_id(0), pl.program_id(1)
-    c, k = pl.program_id(2), pl.program_id(3)
-    ld = (i // nbm) * blocks + (j // nbn)
-    sgn = sign_ref[ld, c]
-
-    @pl.when((c == 0) & (k == 0))
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    @pl.when(sgn != 0)
-    def _accumulate():
-        # transposed operands are fetched mirrored (see the index maps)
-        # and flipped in VMEM *after* the signed sum — (sum s_p X_p)^t =
-        # sum s_p X_p^t, so one transpose serves the whole gather.
-        left = _signed_sum(a_refs, lsgn_ref, ld, c)
-        if trans_a:
-            left = left.T
-        right = _signed_sum(b_refs, rsgn_ref, ld, c)
-        if trans_b:
-            right = right.T
-        acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
-            left, right, preferred_element_type=jnp.float32)
-
-    @pl.when((c == n_c - 1) & (k == n_k - 1))
-    def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
-
 
 def fused_matmul(
     a: jax.Array,
@@ -802,45 +1120,54 @@ def fused_matmul(
     bm: int = 256,
     bk: int = 256,
     bn: int = 256,
+    trans_a: bool = False,
+    trans_b: bool = False,
     out_dtype=None,
     interpret=None,
     bwd: str = "fused",
 ) -> jax.Array:
-    """``a @ b`` via the flattened Strassen schedule, one fused kernel.
+    """``op(a) @ op(b)`` via the flattened Strassen program, one fused
+    kernel; ``op`` transposes when the flag is set — folded into the
+    BlockSpec index maps (mirrored tile fetches), so no transposed copy
+    of an operand ever exists in HBM.  The engine of the distributed
+    ring/2.5D block tasks (``core.distributed``), which are all
+    ``A_loc^t @ A_perm`` products.
 
-    Same fusion contract as :func:`fused_ata_packed`: operand sums live in
-    VMEM only, every output tile is written once, no ``M_i`` in HBM; the
-    same level/fan-in clamps keep leaves at tile granularity and the
+    Same fusion contract as :func:`fused_ata_packed`: operand sums live
+    in VMEM only, every output tile is written once, no ``M_i`` in HBM;
+    the same level/fan-in clamps keep leaves at tile granularity and the
     operand gather inside VMEM.
 
     Differentiable: ``bwd="fused"`` (default) runs both VJP products
-    through the same schedule executor with the transposes *folded into
-    the index maps* (``da = g b^t`` fetches b tiles mirrored, ``db =
-    a^t g`` fetches a tiles mirrored — neither transpose materializes in
-    HBM), so the backward costs what the forward costs.  ``bwd="dense"``
-    keeps the classical ``jnp.dot`` VJP.
+    through the same program executor with the transposes folded into
+    the index maps, so the backward costs what the forward costs.
+    ``bwd="dense"`` keeps the classical ``jnp.dot`` VJP.
     """
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+    if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"bad shapes for matmul: {a.shape} x {b.shape}")
+    k_a = a.shape[0] if trans_a else a.shape[1]
+    k_b = b.shape[1] if trans_b else b.shape[0]
+    if k_a != k_b:
+        raise ValueError(
+            f"bad shapes for matmul: {a.shape} x {b.shape} "
+            f"(trans_a={trans_a}, trans_b={trans_b})")
     interpret = _auto_interpret(interpret)
     out_dtype = (jnp.promote_types(jnp.promote_types(a.dtype, b.dtype),
                                    jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-    return _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
-                              interpret, bwd)
+    return _fused_matmul_core(a, b, levels, variant, bm, bk, bn, trans_a,
+                              trans_b, out_dtype, interpret, bwd)
 
 
 def _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
                        interpret, trans_a=False, trans_b=False):
-    """Schedule executor for C = op(a) @ op(b), op = transpose when the
-    flag is set — the transpose is folded into the BlockSpec index maps
-    (mirrored tile fetches) and undone tile-wise in VMEM, so no
-    transposed copy of an operand ever exists in HBM."""
+    """Executor binding for C = op(a) @ op(b)."""
     m, k_dim = a.shape[::-1] if trans_a else a.shape
     n, _ = b.shape if trans_b else b.shape[::-1]
     levels = min(levels, strassen_levels_for(m, k_dim, n, max(bm, bk, bn)))
-    levels = _fan_in_clamp("matmul", plan_matmul, levels, variant)
-    plan = plan_matmul(levels, variant)
+    levels = _fan_in_clamp("matmul", levels, variant)
+    plan = compile_program("matmul", levels, variant,
+                           trans_a=trans_a, trans_b=trans_b)
     B = plan.blocks
     mb = _round_up(max(m, 1), B * bm) // B
     kb = _round_up(max(k_dim, 1), B * bk) // B
@@ -853,82 +1180,69 @@ def _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
     if b.shape != b_shape:
         b = jnp.pad(b, [(0, t - s) for s, t in zip(b.shape, b_shape)])
 
-    n_k = kb // bk
     nbm, nbn = mb // bm, nb // bn
-    tmax, n_c = plan.max_terms, plan.max_contributions
-    tables = _matmul_tables(levels, variant)
-
-    def left_map(p):
-        def index_map(i, j, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
-            ld = (i // nbm) * B + j // nbn
-            r = lrow[ld, c, p] * nbm + i % nbm
-            kk = lcol[ld, c, p] * n_k + k
-            return (kk, r) if trans_a else (r, kk)
-        return index_map
-
-    def right_map(q):
-        def index_map(i, j, c, k, sign, lrow, lcol, lsgn, rrow, rcol, rsgn):
-            ld = (i // nbm) * B + j // nbn
-            kk = rrow[ld, c, q] * n_k + k
-            cc = rcol[ld, c, q] * nbn + j % nbn
-            return (cc, kk) if trans_b else (kk, cc)
-        return index_map
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7,
-        grid=(M // bm, N // bn, n_c, n_k),
-        in_specs=[pl.BlockSpec((bk, bm) if trans_a else (bm, bk),
-                               left_map(p)) for p in range(tmax)]
-        + [pl.BlockSpec((bn, bk) if trans_b else (bk, bn),
-                        right_map(q)) for q in range(tmax)],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, c, k, *_: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    kernel = functools.partial(_fused_matmul_kernel, tmax=tmax, nbm=nbm,
-                               nbn=nbn, n_c=n_c, n_k=n_k, blocks=B,
-                               trans_a=trans_a, trans_b=trans_b)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary",
-                                 "arbitrary")),
-        interpret=interpret,
-    )(*tables, *([a] * tmax), *([b] * tmax))
+    spec = _bind(plan, n_out=(M // bm) * (N // bn), n_tj=N // bn,
+                 q_i=nbm, q_j=nbn, n_k=kb // bk, bi=bm, bj=bn, bc=bk)
+    out = _execute(spec, a, b, out_dtype, interpret)
     return out[:m, :n]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
-def _fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
-                       interpret, bwd):
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10, 11))
+def _fused_matmul_core(a, b, levels, variant, bm, bk, bn, trans_a, trans_b,
+                       out_dtype, interpret, bwd):
     return _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
-                              interpret)
+                              interpret, trans_a=trans_a, trans_b=trans_b)
 
 
-def _fused_matmul_fwd(a, b, levels, variant, bm, bk, bn, out_dtype,
-                      interpret, bwd):
-    return (_fused_matmul_core(a, b, levels, variant, bm, bk, bn, out_dtype,
-                               interpret, bwd), (a, b))
+def _fused_matmul_fwd(a, b, levels, variant, bm, bk, bn, trans_a, trans_b,
+                      out_dtype, interpret, bwd):
+    return (_fused_matmul_core(a, b, levels, variant, bm, bk, bn, trans_a,
+                               trans_b, out_dtype, interpret, bwd), (a, b))
 
 
-def _fused_matmul_bwd(levels, variant, bm, bk, bn, out_dtype, interpret,
-                      bwd, res, g):
+def _fused_matmul_bwd(levels, variant, bm, bk, bn, trans_a, trans_b,
+                      out_dtype, interpret, bwd, res, g):
     a, b = res
     acc = jnp.promote_types(jnp.promote_types(a.dtype, b.dtype), jnp.float32)
     gf = g.astype(acc)
     if bwd == "dense":
-        da = jnp.dot(gf, b.T.astype(acc), preferred_element_type=acc)
-        db = jnp.dot(a.T.astype(acc), gf, preferred_element_type=acc)
+        op_a = (lambda x: x.T.astype(acc)) if trans_a else \
+            (lambda x: x.astype(acc))
+        op_b = (lambda x: x.T.astype(acc)) if trans_b else \
+            (lambda x: x.astype(acc))
+        ca, cb = op_a(a), op_b(b)
+        da = jnp.dot(gf, cb.T, preferred_element_type=acc)
+        db = jnp.dot(ca.T, gf, preferred_element_type=acc)
+        if trans_a:
+            da = da.T
+        if trans_b:
+            db = db.T
     else:
-        # the kernel upcasts tile-wise in VMEM, so bf16 residuals feed the
-        # backward without an HBM-wide fp32 copy
-        # da = g @ b^t — (m, n) x (n, k): K-dim is n, output cols k
-        da = _fused_matmul_exec(gf, b, levels, variant,
-                                bm, bn, bk, acc, interpret, trans_b=True)
-        # db = a^t @ g — (k, m) x (m, n): K-dim is m, output rows k
-        db = _fused_matmul_exec(a, gf, levels, variant,
-                                bk, bm, bn, acc, interpret, trans_a=True)
+        # the VJP products are themselves matmul programs with the
+        # transposes folded into the index maps (the kernel upcasts
+        # tile-wise in VMEM, so bf16 residuals feed the backward
+        # without an HBM-wide fp32 copy):
+        ex = functools.partial(_fused_matmul_exec, levels=levels,
+                               variant=variant, out_dtype=acc,
+                               interpret=interpret)
+        if not trans_a and not trans_b:
+            # da = g b^t; db = a^t g
+            da = ex(gf, b, bm=bm, bk=bn, bn=bk, trans_b=True)
+            db = ex(a, gf, bm=bk, bk=bm, bn=bn, trans_a=True)
+        elif trans_a and trans_b:
+            # C = a^t b^t: da = b^t g^t (stored (k, m));
+            #              db = g^t a^t (stored (n, k))
+            da = ex(b, gf, bm=bk, bk=bn, bn=bm, trans_a=True, trans_b=True)
+            db = ex(gf, a, bm=bn, bk=bm, bn=bk, trans_a=True, trans_b=True)
+        elif trans_a:
+            # C = a^t b: da = b g^t (stored (k, m)); db = a g
+            da = ex(b, gf, bm=bk, bk=bn, bn=bm, trans_b=True)
+            db = ex(a, gf, bm=bk, bk=bm, bn=bn)
+        else:
+            # C = a b^t: da = g b (b stored (n, k)); db = g^t a
+            da = ex(gf, b, bm=bm, bk=bn, bn=bk)
+            db = ex(gf, a, bm=bn, bk=bm, bn=bk, trans_a=True)
     return da.astype(a.dtype), db.astype(b.dtype)
 
 

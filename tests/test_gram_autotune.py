@@ -46,7 +46,7 @@ def test_autotune_persists_and_lookup_roundtrips(tmp_cache):
                         measure=False)
     assert tmp_cache.exists()
     raw = json.loads(tmp_cache.read_text())
-    assert raw["version"] == 1 and len(raw["entries"]) == 1
+    assert raw["version"] == 2 and len(raw["entries"]) == 1
     # any shape in the same bucket hits the same entry
     assert at.lookup(70, 33) == entry
     assert at.lookup(100, 60) == entry
@@ -111,7 +111,7 @@ def test_autotune_bwd_candidates(tmp_cache):
     entry = at.autotune(64, 64, kind="ata_bwd", blocks=(16, 32),
                         levels=(0, 1), measure=False)
     assert entry["mode"] == "fused"        # model-only ranks fused only
-    key_kinds = {k.split("/")[2] for k in at.load_cache()}
+    key_kinds = {k.split("/")[3] for k in at.load_cache()}
     assert "ata_bwd" in key_kinds
     # the backward model score separates the engines: the dense baseline
     # carries the 3 n^2 buffers the fused path does not
@@ -132,6 +132,98 @@ def test_autotune_bwd_measured(tmp_cache):
     """measure=True times jax.grad through the fused forward with the
     candidate's VJP engine."""
     entry = at.autotune(32, 32, kind="ata_bwd", blocks=(16,), levels=(0, 1),
+                        measure=True, top_k=1, interpret=True)
+    assert entry["source"] == "measured"
+    assert entry["measured_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# v2 cache-key migration: winners are pinned to the (jax, backend) pair
+# they were tuned under — stale entries from another toolchain must not
+# silently apply.
+# ---------------------------------------------------------------------------
+
+def test_cache_key_pins_jax_version_and_backend(tmp_cache):
+    entry = at.autotune(40, 40, blocks=(16,), levels=(0,), measure=False)
+    (key,) = at.load_cache()
+    backend, jaxseg, dtype, kind, shape = key.split("/")
+    assert backend == jax.default_backend()
+    assert jaxseg == f"jax-{jax.__version__}"
+    assert (dtype, kind, shape) == ("float32", "ata", "64x64")
+    assert entry["jax"] == jax.__version__
+    assert entry["backend"] == jax.default_backend()
+
+
+def test_v1_cache_is_ignored_wholesale(tmp_cache):
+    """Migration: a pre-v2 file (keys without the jax segment) is a set
+    of potentially-stale winners — load_cache drops it entirely and a
+    fresh autotune repopulates under the new key format."""
+    stale_key = f"{jax.default_backend()}/float32/ata/64x64"
+    tmp_cache.write_text(json.dumps({
+        "version": 1,
+        "entries": {stale_key: {"mode": "fused", "levels": 2,
+                                "variant": "strassen", "bm": 512,
+                                "bk": 512, "bn": 512,
+                                "source": "measured",
+                                "measured_s": 1e-9}}}))
+    assert at.load_cache() == {}
+    assert at.lookup(40, 40) is None       # the stale winner never applies
+    entry = at.autotune(40, 40, blocks=(16,), levels=(0,), measure=False)
+    assert entry["bk"] == 16               # freshly tuned, not the stale 512
+    raw = json.loads(tmp_cache.read_text())
+    assert raw["version"] == 2
+    assert all("/jax-" in k for k in raw["entries"])
+
+
+def test_other_jax_version_entry_never_matches(tmp_cache):
+    """A v2 file written under a different jax: the key segment differs,
+    so lookup misses (no silent stale winner) while same-version entries
+    still hit."""
+    other_key = (f"{jax.default_backend()}/jax-0.0.0-other/float32/ata/"
+                 "64x64")
+    tmp_cache.write_text(json.dumps({
+        "version": 2,
+        "entries": {other_key: {"mode": "fused", "levels": 2,
+                                "variant": "strassen", "bm": 512,
+                                "bk": 512, "bn": 512}}}))
+    assert at.lookup(40, 40) is None
+    at.autotune(40, 40, blocks=(16,), levels=(0,), measure=False)
+    assert at.lookup(40, 40)["bk"] == 16
+
+
+# ---------------------------------------------------------------------------
+# New IR kinds: aat (row gram) and rank_k (accumulating update) tune
+# through the same machinery and the same IR-driven traffic core.
+# ---------------------------------------------------------------------------
+
+def test_autotune_aat_kind(tmp_cache):
+    entry = at.autotune(64, 32, kind="aat", blocks=(16, 32), levels=(0, 1),
+                        measure=False)
+    assert entry["mode"] == "fused"
+    assert at.lookup(64, 32, kind="aat") == entry
+    assert at.lookup(64, 32, kind="ata") is None   # kinds are separate
+    # ops-level defaults consult the aat winner
+    resolved = ops._resolve_blocks("aat", 64, 32, jnp.float32,
+                                   bm=None, bk=None)
+    assert resolved == {"bm": entry["bm"], "bk": entry["bk"]}
+
+
+def test_autotune_rank_k_kind_scores_vs_streamed_baseline(tmp_cache):
+    """rank_k fused candidates are scored against the status-quo
+    streamed-update baseline (delta stack + gather-add): the fused score
+    must beat the baseline at the same config — that traffic saving is
+    the point of the accumulating kernel."""
+    entry = at.autotune(128, 64, kind="rank_k", blocks=(16, 32),
+                        levels=(0, 1), measure=False)
+    assert entry["mode"] == "fused"
+    fused_s = at.model_score(128, 64, entry, kind="rank_k")
+    base_s = at.model_score(128, 64, {**entry, "mode": "reference"},
+                            kind="rank_k")
+    assert fused_s < base_s
+
+
+def test_autotune_rank_k_measured(tmp_cache):
+    entry = at.autotune(32, 32, kind="rank_k", blocks=(16,), levels=(0,),
                         measure=True, top_k=1, interpret=True)
     assert entry["source"] == "measured"
     assert entry["measured_s"] > 0

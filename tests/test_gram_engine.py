@@ -129,6 +129,35 @@ def test_engine_rejects_bad_request():
     eng = GramEngine()
     with pytest.raises(ValueError):
         eng.submit(np.zeros((3, 4, 5), np.float32))
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((4, 4), np.float32), gram_of="diag")
+
+
+def test_engine_serves_row_gram_buckets():
+    """gram_of="rows" requests serve tril(a @ a.T) — the aat leaf program
+    on the fused path — bucketed separately from same-shape column grams
+    and batched the same way."""
+    rng = np.random.default_rng(9)
+    eng = GramEngine(slots=2, levels=1, leaf=8, min_bucket=16)
+    a = rng.standard_normal((40, 24)).astype(np.float32)
+    u_rows = eng.submit(a, gram_of="rows")
+    u_cols = eng.submit(a)
+    done = {r.uid: r for r in eng.run_to_completion()}
+    a64 = a.astype(np.float64)
+    want_rows, want_cols = a64 @ a64.T, a64.T @ a64
+    err_r = np.abs(done[u_rows].result - want_rows).max() \
+        / np.abs(want_rows).max()
+    err_c = np.abs(done[u_cols].result - want_cols).max() \
+        / np.abs(want_cols).max()
+    assert done[u_rows].result.shape == (40, 40)
+    assert done[u_cols].result.shape == (24, 24)
+    assert err_r < 1e-5 and err_c < 1e-5, (err_r, err_c)
+    # separate buckets -> separate executables (one compile each)
+    assert eng.compile_count == 2
+    # lower-tri-only row gram
+    eng.submit(a, gram_of="rows", full=False)
+    (r,) = eng.run_to_completion()[-1:]
+    assert np.abs(np.triu(r.result, 1)).max() == 0.0
 
 
 @pytest.mark.multidevice(8)
@@ -155,10 +184,10 @@ def test_engine_routes_large_buckets_to_mesh(multidevice_count):
                                    rtol=1e-5)
     stats = eng.stats()
     assert stats["dist_served"] == 1
-    assert stats["distributed_buckets"] == [(128, 64, "float32")]
+    assert stats["distributed_buckets"] == [(128, 64, "float32", "cols")]
     # the small bucket stayed on the local vmapped path
-    assert (32, 16, "float32") in stats["buckets"]
-    assert (32, 16, "float32") not in stats["distributed_buckets"]
+    assert (32, 16, "float32", "cols") in stats["buckets"]
+    assert (32, 16, "float32", "cols") not in stats["distributed_buckets"]
 
 
 def test_engine_infeasible_dist_scheme_stays_local():
@@ -171,11 +200,11 @@ def test_engine_infeasible_dist_scheme_stays_local():
     # bucket N=64 is not divisible by the 3-wide ring axis: ring infeasible
     eng = GramEngine(mesh=mesh, dist_scheme="ring", dist_threshold=1,
                      min_bucket=16)
-    assert not eng._is_distributed((64, 64, "float32"))
+    assert not eng._is_distributed((64, 64, "float32", "cols"))
     # "auto" falls back to the feasible row-reduction schemes
     eng_auto = GramEngine(mesh=mesh, dist_scheme="auto", dist_threshold=1,
                           min_bucket=16)
-    assert eng_auto._is_distributed((64, 64, "float32"))
+    assert eng_auto._is_distributed((64, 64, "float32", "cols"))
 
 
 def test_engine_no_mesh_never_distributes():

@@ -1,0 +1,409 @@
+"""The leaf-program IR (core/leaf_ir.py): algebra registry, compiler
+counts vs the cost-model closed forms, the numpy interpreter vs dense
+oracles, and the fused executor parity of the two NEW capabilities the IR
+bought — the aat (A A^t) row gram and the accumulating rank-k update —
+including the PR acceptance bounds (512^2 fp32 <= 1e-5; bf16 levels 0-3).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import ata
+from repro.core.cost_model import (aat_mults_exact, ata_mults_exact,
+                                   ir_leaf_count, ir_max_terms)
+from repro.core.leaf_ir import (PROGRAM_KINDS, compile_program,
+                                get_algebra, interpret_program,
+                                register_algebra, registered_algebras)
+from repro.gram import stream
+from repro.kernels import ops
+from repro.kernels.strassen_fused import (
+    aat_traffic_model, fused_aat, fused_aat_packed, fused_ata_packed,
+    fused_rank_k_update, rank_k_traffic_model,
+)
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_ships_three_algebras():
+    assert set(registered_algebras()) >= {"strassen", "winograd",
+                                          "classical"}
+    assert len(get_algebra("strassen")) == 7
+    assert len(get_algebra("classical")) == 8
+    with pytest.raises(ValueError):
+        get_algebra("nope")
+    with pytest.raises(ValueError):
+        register_algebra("strassen", get_algebra("strassen"))  # duplicate
+    with pytest.raises(ValueError):
+        register_algebra("bad", ((((0, 0, 2),), ((0, 0, 1),),
+                                  ((0, 0, 1),)),))              # bad sign
+
+
+def test_registering_a_new_algebra_compiles_and_evaluates():
+    """A new variant is one register_algebra call: the 2x2 classical
+    table under a fresh name compiles every kind and matches the oracle
+    through the interpreter — variants are data, not code."""
+    name = "classical-copy-test"
+    if name not in registered_algebras():
+        register_algebra(name, get_algebra("classical"))
+    rng = np.random.RandomState(0)
+    a = rng.randn(8, 4)
+    got = interpret_program(compile_program("ata", 2, name), a)
+    np.testing.assert_allclose(got, np.tril(a.T @ a), atol=1e-9)
+    got = interpret_program(compile_program("aat", 1, name), a)
+    np.testing.assert_allclose(got, np.tril(a @ a.T), atol=1e-9)
+
+
+def test_fused_matmul_both_trans_forward_and_grads():
+    """C = a^t b^t with BOTH transposes folded into the index maps, and
+    its fused VJP (regression: the two-flag case routed through the
+    single-flag branch and returned wrong gradients)."""
+    from repro.kernels.strassen_fused import fused_matmul
+    a = _rand((40, 16), seed=31)          # stored (k, m)
+    b = _rand((24, 40), seed=32)          # stored (n, k)
+    out = fused_matmul(a, b, levels=1, bm=8, bk=8, bn=8, trans_a=True,
+                       trans_b=True, interpret=True)
+    want = np.asarray(a, np.float64).T @ np.asarray(b, np.float64).T
+    assert np.abs(np.asarray(out, np.float64) - want).max() < 1e-4
+    da, db = jax.grad(
+        lambda p, q: fused_matmul(p, q, levels=1, bm=8, bk=8, bn=8,
+                                  trans_a=True, trans_b=True,
+                                  interpret=True).sum(),
+        argnums=(0, 1))(a, b)
+    g = np.ones((16, 24))
+    wa = np.asarray(b, np.float64).T @ g.T       # dA = B^t g^t, (k, m)
+    wb = g.T @ np.asarray(a, np.float64).T       # dB = g^t A^t, (n, k)
+    np.testing.assert_allclose(np.asarray(da), wa, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), wb, rtol=1e-4, atol=1e-4)
+
+
+def test_reregistration_invalidates_executor_tables():
+    """register_algebra(overwrite=True) must clear the executor's lowered
+    scalar-prefetch tables, not just the program cache — a stale table
+    would make the kernel silently run the OLD algebra."""
+    from repro.kernels.strassen_fused import _program_tables, fused_matmul
+    a = _rand((8, 8), seed=33)
+    _ = fused_matmul(a, a, levels=1, bm=8, bk=8, bn=8, interpret=True)
+    assert _program_tables.cache_info().currsize > 0
+    register_algebra("strassen", get_algebra("strassen"), overwrite=True)
+    assert _program_tables.cache_info().currsize == 0
+
+
+def test_unknown_kind_and_bad_trans_rejected():
+    with pytest.raises(ValueError):
+        compile_program("gemm", 1)
+    with pytest.raises(ValueError):
+        compile_program("ata", 1, trans_a=True)
+    with pytest.raises(ValueError):
+        compile_program("matmul", -1)
+
+
+# ---------------------------------------------------------------------------
+# Counts + interpreter vs closed forms / oracles.  The exhaustive sweep
+# runs unconditionally; the hypothesis property (random leaf shapes over
+# the same space) adds fuzzed coverage where hypothesis is installed.
+# ---------------------------------------------------------------------------
+
+def _check_counts_and_interpreter(kind, variant, levels, mb, nb):
+    """Compiled LeafProgram leaf/term counts == cost-model closed forms;
+    numpy interpreter == dense oracle."""
+    prog = compile_program(kind, levels, variant)
+    assert len(prog.ops) == ir_leaf_count(kind, levels, variant)
+    assert prog.max_terms == ir_max_terms(kind, levels, variant)
+    # gram kinds: mult_count ties to the recursion closed forms too
+    # (ata_mults_exact models the paper's 7-product HASA — the 8-product
+    # classical table deliberately differs, as in test_fused_ata)
+    B = prog.blocks
+    if variant in ("strassen", "winograd"):
+        if kind in ("ata", "rank_k"):
+            assert prog.mult_count(mb, nb) == ata_mults_exact(
+                mb * B, nb * B, leaf=0, levels=levels)
+        elif kind == "aat":
+            assert prog.mult_count(mb, nb) == aat_mults_exact(
+                mb * B, nb * B, leaf=0, levels=levels)
+
+    rng = np.random.RandomState(levels * 7 + mb)
+    a = rng.randn(B * mb, B * nb)
+    if kind in ("ata", "rank_k"):
+        c0 = (np.tril(rng.randn(B * nb, B * nb))
+              if kind == "rank_k" else None)
+        got = interpret_program(prog, a, c0=c0)
+        want = np.tril(a.T @ a) + (c0 if c0 is not None else 0.0)
+    elif kind == "aat":
+        got = interpret_program(prog, a)
+        want = np.tril(a @ a.T)
+    elif kind == "matmul":
+        b = rng.randn(B * nb, B * mb)
+        got = interpret_program(prog, a, b)
+        want = a @ b
+    else:                                   # symm
+        s = rng.randn(B * nb, B * nb)
+        got = interpret_program(prog, a, s)
+        want = a @ (np.tril(s) + np.tril(s, -1).T)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("variant", ["strassen", "winograd", "classical"])
+@pytest.mark.parametrize("kind", PROGRAM_KINDS)
+def test_program_counts_and_interpreter_match(kind, variant):
+    """Every registered algebra x kind x levels 0-3 (the satellite's
+    exhaustive grid at fixed leaf shape)."""
+    for levels in range(4):
+        _check_counts_and_interpreter(kind, variant, levels, 3, 2)
+
+
+def test_gram_programs_cover_lower_triangle_exactly():
+    """Every gram-kind destination satisfies di >= dj and the programs
+    cover each lower-triangular leaf destination."""
+    for variant in ("strassen", "winograd", "classical"):
+        for levels in range(4):
+            for kind in ("ata", "aat", "rank_k"):
+                prog = compile_program(kind, levels, variant)
+                B = prog.blocks
+                for p in prog.ops:
+                    for di, dj, _s in p.dests:
+                        assert di >= dj, (kind,
+                                          "upper-triangular destination")
+                assert set(prog.by_dest()) == {
+                    (i, j) for i in range(B) for j in range(i + 1)}
+
+
+try:
+    from hypothesis import given, settings, strategies as st, HealthCheck
+    _HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    SET = dict(deadline=None, max_examples=40,
+               suppress_health_check=[HealthCheck.too_slow])
+
+    @given(st.sampled_from(PROGRAM_KINDS),
+           st.sampled_from(["strassen", "winograd", "classical"]),
+           st.integers(0, 3), st.integers(1, 3), st.integers(1, 3))
+    @settings(**SET)
+    def test_program_counts_and_interpreter_property(kind, variant,
+                                                     levels, mb, nb):
+        """Fuzzed leaf shapes over the same algebra x kind x levels
+        space (the satellite's hypothesis property)."""
+        _check_counts_and_interpreter(kind, variant, levels, mb, nb)
+
+
+# ---------------------------------------------------------------------------
+# Fused executor parity: aat
+# ---------------------------------------------------------------------------
+
+def _aat_oracle(a):
+    af = np.asarray(a, np.float64)
+    return np.tril(af @ af.T)
+
+
+@pytest.mark.parametrize("m,n", [(16, 16), (32, 24), (24, 40), (57, 31)])
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+def test_fused_aat_matches_oracle(m, n, levels):
+    a = _rand((m, n), seed=levels + 1)
+    got = fused_aat(a, levels=levels, bm=8, bk=8, interpret=True)
+    want = _aat_oracle(a)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(np.asarray(got, np.float64) - want).max() / scale < 1e-5
+    assert np.abs(np.triu(np.asarray(got), 1)).max() == 0.0
+
+
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+def test_fused_aat_bf16(levels):
+    a = _rand((48, 40), jnp.bfloat16, seed=levels)
+    got = np.asarray(fused_aat(a, levels=levels, bm=8, bk=8,
+                               interpret=True), np.float64)
+    want = _aat_oracle(a.astype(jnp.float32))
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 2e-2     # bf16 operand noise
+
+
+def test_fused_aat_packed_layout_and_gram_of_api():
+    a = _rand((40, 24), seed=3)
+    packed, m_pad = fused_aat_packed(a, levels=1, bm=8, bk=8,
+                                     interpret=True)
+    t = m_pad // 8
+    assert packed.shape == (t * (t + 1) // 2 * 8, 8)
+    # the public surface: ata(x, gram_of="rows") in both modes
+    got_f = ata(a, gram_of="rows", levels=1, mode="fused", block=8,
+                interpret=True)
+    got_r = ata(a, gram_of="rows", levels=1, leaf=8, mode="reference")
+    want = _aat_oracle(a)
+    assert np.abs(np.asarray(got_f, np.float64) - want).max() < 1e-4
+    assert np.abs(np.asarray(got_r, np.float64) - want).max() < 1e-4
+
+
+def test_fused_aat_grad_matches_dense():
+    a = _rand((24, 16), seed=5)
+    g = jax.grad(lambda x: fused_aat(x, levels=1, bm=8, bk=8,
+                                     interpret=True).sum())(a)
+    # dA = (S + S^t) A with S = tril(ones)
+    s = np.tril(np.ones((24, 24)))
+    want = (s + s.T) @ np.asarray(a, np.float64)
+    np.testing.assert_allclose(np.asarray(g, np.float64), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_acceptance_aat_512_parity():
+    """PR acceptance: fused-vs-dense parity <= 1e-5 at 512^2 fp32 for the
+    row gram."""
+    a = _rand((512, 512), seed=21)
+    got = fused_aat(a, levels=2, bm=128, bk=128, interpret=True)
+    want = _aat_oracle(a)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(np.asarray(got, np.float64) - want).max() / scale < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Fused executor parity: rank_k (accumulating update)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+def test_rank_k_chunked_equals_one_shot(levels):
+    a = _rand((96, 64), seed=levels)
+    stack, _ = fused_ata_packed(a[:40], levels=levels, bk=8, bn=8,
+                                interpret=True)
+    for chunk in (a[40:41], a[41:96]):
+        stack = fused_rank_k_update(stack, chunk, levels=levels, bk=8,
+                                    interpret=True)
+    one, _ = fused_ata_packed(a, levels=levels, bk=8, bn=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(stack), np.asarray(one),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+def test_rank_k_bf16_chunks(levels):
+    a = _rand((64, 32), jnp.bfloat16, seed=levels + 9)
+    st_ = stream.stack_init(32, block=8)
+    for chunk in (a[:30], a[30:]):
+        st_ = stream.stack_update(st_, chunk, levels=levels, block=8,
+                                  interpret=True)
+    got = np.asarray(stream.stack_finalize(st_, 32, symmetrize=False),
+                     np.float64)
+    a64 = np.asarray(a.astype(jnp.float32), np.float64)
+    want = np.tril(a64.T @ a64)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 2e-2
+
+
+def test_acceptance_rank_k_512_parity():
+    """PR acceptance: the accumulating update at 512^2 fp32 within 1e-5
+    of the dense oracle (two chunks through the packed state)."""
+    a = _rand((512, 512), seed=22)
+    st_ = stream.stack_init(512, block=128)
+    st_ = stream.stack_update(st_, a[:256], levels=2, block=128,
+                              interpret=True)
+    st_ = stream.stack_update(st_, a[256:], levels=2, block=128,
+                              interpret=True)
+    got = np.asarray(stream.stack_finalize(st_, 512, symmetrize=False),
+                     np.float64)
+    a64 = np.asarray(a, np.float64)
+    want = np.tril(a64.T @ a64)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 1e-5
+    assert int(st_.rows) == 512
+
+
+def test_rank_k_ragged_chunk_and_level_clamp():
+    """Chunks narrower than the stack span are zero-padded (exact) and
+    levels clamp to depths the fixed stack layout divides."""
+    st_ = stream.stack_init(24, block=8)          # T = 3 tiles
+    a = _rand((20, 24), seed=7)
+    # T=3 is not divisible by 2^levels for levels>0 -> clamps to 0
+    st_ = stream.stack_update(st_, a[:11], levels=2, block=8,
+                              interpret=True)
+    st_ = stream.stack_update(st_, a[11:], levels=2, block=8,
+                              interpret=True)
+    got = np.asarray(stream.stack_finalize(st_, 24, symmetrize=False))
+    a64 = np.asarray(a, np.float64)
+    np.testing.assert_allclose(got, np.tril(a64.T @ a64),
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        stream.stack_update(st_, _rand((4, 40), seed=1), block=8)
+
+
+def test_rank_k_streamed_grad_is_dense_free_capable():
+    """jax.grad flows through a stacked streamed update (packed
+    cotangent pass-through + symm backward)."""
+    a = _rand((24, 16), seed=11)
+
+    def loss(x):
+        st_ = stream.stack_init(16, block=8)
+        st_ = stream.stack_update(st_, x, levels=1, block=8,
+                                  interpret=True)
+        return st_.stack.sum()
+
+    g = np.asarray(jax.grad(loss)(a), np.float64)
+    # oracle: d sum(stack)/dA — stack holds tril blocks with FULL
+    # diagonal tiles, so the cotangent S is block-lower with full diags
+    a64 = np.asarray(a, np.float64)
+    s = np.zeros((16, 16))
+    for i in range(2):
+        for j in range(i + 1):
+            s[i * 8:(i + 1) * 8, j * 8:(j + 1) * 8] = 1.0
+    want = a64 @ (s + s.T)
+    np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# IR-driven traffic models for the new kinds
+# ---------------------------------------------------------------------------
+
+def test_aat_traffic_model_is_real():
+    prog = compile_program("aat", 2, "strassen")
+    t = aat_traffic_model(512, 512, levels=2, bm=128, bk=128)
+    n_tri = 4 * 5 // 2
+    assert t["write_bytes"] == n_tri * 128 * 128 * 4
+    assert t["grid_steps"] == n_tri * prog.max_contributions * 1
+    assert t["read_bytes"] == (t["grid_steps"] * 2 * prog.max_terms
+                               * 128 * 128 * 4)
+    assert t["intermediate_bytes"] == 0
+    mis = aat_traffic_model(257, 511, levels=2, bm=64, bk=64)
+    assert mis["padded_shape"] == (512, 512)
+    assert mis["intermediate_bytes"] == 512 * 512 * 4
+
+
+def test_rank_k_traffic_beats_streamed_baseline():
+    """The accumulating kernel reads the state once and writes it once;
+    the status-quo streamed update additionally materializes, re-reads
+    and re-writes the delta stack — the model must show the saving."""
+    t = rank_k_traffic_model(4096, 1024, levels=2, bk=256, bn=256)
+    fused = t["read_bytes"] + t["write_bytes"] + t["intermediate_bytes"]
+    base = (t["baseline"]["read_bytes"] + t["baseline"]["write_bytes"]
+            + t["baseline"]["intermediate_bytes"])
+    assert base > fused
+    assert t["baseline"]["intermediate_bytes"] >= t["state_bytes"]
+    assert t["intermediate_bytes"] == 0     # aligned shape, no pad copy
+
+
+# ---------------------------------------------------------------------------
+# ops-level consumers
+# ---------------------------------------------------------------------------
+
+def test_ops_rank_k_update_jit_donation_roundtrip():
+    a = _rand((32, 16), seed=13)
+    t = 2
+    stack = jnp.zeros((t * (t + 1) // 2 * 8, 8), jnp.float32)
+    out = ops.rank_k_update(stack, a, levels=1, bk=8, interpret=True)
+    one, _ = fused_ata_packed(a, levels=1, bk=8, bn=8,
+                              out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(one),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_aat_fused_entry_points():
+    a = _rand((40, 24), seed=14)
+    want = _aat_oracle(a)
+    got = np.asarray(ops.aat_fused(a, levels=1, bm=8, bk=8,
+                                   interpret=True), np.float64)
+    assert np.abs(got - want).max() < 1e-4
+    packed = ops.aat_fused_packed(a, levels=1, bm=8, bk=8, interpret=True)
+    assert packed.ndim == 2 and packed.shape[1] == 8

@@ -1,21 +1,99 @@
-"""Distributed model semantics == single-device reference (8-device
-subprocess; the main pytest process keeps 1 device)."""
-import os
-import pathlib
-import subprocess
-import sys
+"""Distributed model semantics == single-device reference, on the
+conftest ``@pytest.mark.multidevice`` harness (8 forced-host devices in a
+child pytest; the main process keeps 1 device).
 
-HERE = pathlib.Path(__file__).parent
-REPO = HERE.parent
+1. MoE train forward under EP shard_map (experts sharded over 'model')
+   == single-device reference.
+2. MoE decode under the STATIONARY expert layout == reference decode.
+3. compressed_psum (int8 error-feedback) over a 2-group axis ~= exact mean.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
 
 
-def test_parallel_model_matches_reference():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(REPO / "src")
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run(
-        [sys.executable, str(HERE / "_parallel_model_check.py")],
-        env=env, capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, \
-        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
-    assert "ALL_OK" in out.stdout
+@pytest.mark.multidevice(8)
+def test_parallel_model_matches_reference(multidevice_count):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.registry import reduced_arch
+    from repro.models import init_params, forward, init_cache, decode_step
+    from repro.parallel.act import (ActivationSharding,
+                                    use_activation_sharding)
+    from repro.parallel.sharding import param_specs, cache_specs, to_named
+    from repro.launch.mesh import make_mesh
+
+    assert len(jax.devices()) >= multidevice_count
+    cfg = reduced_arch("arctic-480b", num_layers=2)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    b, s = 4, 16
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+    # single-device reference (no policy installed)
+    ref_logits = np.asarray(jax.jit(
+        lambda p, t: forward(cfg, p, t, mode="train")[0])(params, toks),
+        np.float32)
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    pshard = to_named(param_specs(params, mesh), mesh)
+    params_sh = jax.device_put(params, pshard)
+    toks_sh = jax.device_put(toks, NamedSharding(mesh, P(("data",), None)))
+
+    # 1) EP train forward
+    policy = ActivationSharding.for_training(mesh, sp=True)
+    with use_activation_sharding(policy):
+        got = jax.jit(lambda p, t: forward(cfg, p, t, mode="train")[0])(
+            params_sh, toks_sh)
+    got = np.asarray(jax.device_get(got), np.float32)
+    err = np.abs(got - ref_logits).max() / (np.abs(ref_logits).max() + 1e-9)
+    assert err < 3e-2, f"EP train forward mismatch: {err}"
+
+    # 2) stationary-expert decode
+    cache = init_cache(cfg, b, s)
+    last_ref, _cache_ref = jax.jit(
+        lambda p, t, c: decode_step(cfg, p, t, c))(params, toks[:, :1],
+                                                   cache)
+    pshard_dec = to_named(param_specs(params, mesh, moe_stationary=True),
+                          mesh)
+    params_dec = jax.device_put(params, pshard_dec)
+    cshard = to_named(cache_specs(cache, mesh), mesh)
+    cache_sh = jax.device_put(cache, cshard)
+    dec_policy = ActivationSharding.for_decode(mesh)
+    with use_activation_sharding(dec_policy):
+        last, _ = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))(
+            params_dec, jax.device_put(
+                toks[:, :1], NamedSharding(mesh, P(("data",), None))),
+            cache_sh)
+    a = np.asarray(jax.device_get(last), np.float32)
+    r = np.asarray(jax.device_get(last_ref), np.float32)
+    err = np.abs(a - r).max() / (np.abs(r).max() + 1e-9)
+    # bf16 compute: observed up to ~3.2e-2 across jax/XLA:CPU versions
+    assert err < 4e-2, f"stationary decode mismatch: {err}"
+
+    # 3) compressed psum over a 2-group axis
+    from repro.core.distributed import shard_map_compat
+    shard_map, unchecked = shard_map_compat()
+    from repro.optim.grad_compress import compressed_psum, ErrorFeedback
+    g = jax.random.normal(key, (2, 64), jnp.float32)  # row per "pod"
+
+    def body(gl):
+        grads = {"w": gl[0]}
+        ef = ErrorFeedback.init(grads)
+        red, ef = compressed_psum(grads, "data", ef)
+        return red["w"][None], ef.residual["w"][None]
+
+    red, _resid = shard_map(
+        body, mesh=mesh, in_specs=P(("data",), None),
+        out_specs=(P(("data",), None), P(("data",), None)),
+        **unchecked)(g)
+    exact = np.asarray(g, np.float32).mean(0)
+    got = np.asarray(jax.device_get(red), np.float32)[0]
+    # int8 quantization error bound: scale/2 per participant
+    tol = float(np.abs(np.asarray(g)).max()) / 127.0 + 1e-6
+    assert np.abs(got - exact).max() <= tol, (np.abs(got - exact).max(), tol)
