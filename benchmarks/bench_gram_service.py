@@ -17,6 +17,14 @@ and two sequential baselines, and emits ``BENCH_gram_service.json``:
 
 The acceptance bound enforced in CI is the recompile count
 (<= number of buckets); throughputs are recorded for the trajectory.
+
+A **fault-rate sweep** rides the same trace (DESIGN.md §13): the engine
+re-serves it with output guards + Freivalds probes on while
+``runtime.faults`` injects NaN-poisoned outputs, finite silent
+corruption and failing executables at 0 / 1% / 10% rates, recording
+success rate, degraded fraction and the latency percentiles under each —
+plus the guard overhead on the fault-free path (verify off vs finite vs
+probed), which acceptance requires to be in the noise.
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ import jax.numpy as jnp
 from repro.core.ata import ata
 from repro.gram import GramEngine, bucket_shape
 from repro.launch.gram_serve import make_trace
+from repro.runtime import faults
 from .common import write_json
 
 LEVELS = 1
@@ -81,6 +90,84 @@ def _pct(lats, p):
     return s[min(int(p * len(s)), len(s) - 1)] if s else None
 
 
+def _fault_specs(rate):
+    """The chaos mix of the acceptance trace: guard-visible NaN output
+    poisoning, *finite* silent corruption (only the Freivalds probe sees
+    it) and crashing executables, all at ``rate``."""
+    if rate <= 0:
+        return []
+    return [
+        faults.FaultSpec("poison_output", rate=rate),
+        faults.FaultSpec("poison_output", rate=rate, value=3.0),
+        faults.FaultSpec("exec_fail", rate=rate,
+                         site="gram.engine.exec*"),
+    ]
+
+
+def _serve_trace(shapes, arrays, slots, *, verify, rate=0.0, seed=0):
+    """One engine pass over the trace under a fault profile; returns
+    (stats, wall_s, finished)."""
+    eng = GramEngine(slots=slots, levels=LEVELS, min_bucket=MIN_BUCKET,
+                     verify=verify, max_retries=4, breaker_threshold=2,
+                     verify_seed=seed)
+    eng.prewarm(shapes)
+    for a in arrays:
+        eng.submit(a, full=False)
+    with faults.inject(*_fault_specs(rate), seed=seed):
+        t0 = time.perf_counter()
+        finished = eng.run_to_completion()
+        wall = time.perf_counter() - t0
+    return eng.stats(), wall, finished
+
+
+def _fault_sweep(shapes, arrays, slots, requests):
+    """Success rate / degraded fraction / latency percentiles under
+    injected fault rates, plus the fault-free guard overhead."""
+    sweep = {}
+    for rate in (0.0, 0.01, 0.10):
+        stats, wall, finished = _serve_trace(
+            shapes, arrays, slots, verify=2, rate=rate, seed=17)
+        ok = [r for r in finished if r.status == "ok"]
+        nonfinite = sum(1 for r in ok if not np.isfinite(r.result).all())
+        lat = [r.latency_s for r in finished if r.latency_s is not None]
+        sweep[f"rate_{rate:g}"] = {
+            "injected_rate": rate,
+            "success_rate": len(ok) / requests,
+            "degraded_fraction": stats["degraded_served"] / requests,
+            "retries": stats["retries"],
+            "guard_vetoes": stats["guard_failures"],
+            "nonfinite_served": nonfinite,
+            "wall_s": wall,
+            "throughput_rps": requests / wall,
+            "p50_latency_s": _pct(lat, 0.50),
+            "p99_latency_s": _pct(lat, 0.99),
+        }
+        print(f"[gram_service] faults {rate:>4.0%}: "
+              f"{len(ok)}/{requests} ok, "
+              f"{stats['degraded_served']} degraded, "
+              f"{stats['retries']} retries, "
+              f"{stats['guard_failures']} guard vetoes, "
+              f"p99 {sweep[f'rate_{rate:g}']['p99_latency_s']*1e3:.1f}ms")
+
+    # guard overhead on the fault-free path: off vs finite scan vs probes
+    # (best of 3 passes — single-pass walls here are a few ms and noisy)
+    overhead = {}
+    for name, verify in (("off", "off"), ("finite", "finite"),
+                         ("probes_2", 2)):
+        wall = min(_serve_trace(shapes, arrays, slots, verify=verify)[1]
+                   for _ in range(3))
+        overhead[name] = {"wall_s": wall,
+                          "throughput_rps": requests / wall}
+    base = overhead["off"]["wall_s"]
+    for name in overhead:
+        overhead[name]["overhead_vs_off"] = \
+            overhead[name]["wall_s"] / base - 1.0
+    print(f"[gram_service] guard overhead vs off: finite "
+          f"{overhead['finite']['overhead_vs_off']:+.1%}, 2 probes "
+          f"{overhead['probes_2']['overhead_vs_off']:+.1%}")
+    return sweep, overhead
+
+
 def run(quick: bool = False):
     requests = 16 if quick else 64
     slots = 4
@@ -114,9 +201,15 @@ def run(quick: bool = False):
     seq_warm_wall, seq_buckets, seq_warm_lat = _sequential_warm(shapes,
                                                                arrays)
 
+    # -- fault-rate sweep + guard overhead ----------------------------------
+    fault_sweep, guard_overhead = _fault_sweep(shapes, arrays, slots,
+                                               requests)
+
     speedup_cold = seq_cold_wall / wall_cold
     speedup_warm = seq_warm_wall / wall_warm
     ok_recompiles = stats["compile_count"] <= len(buckets)
+    ok_faults = all(s["success_rate"] == 1.0 and s["nonfinite_served"] == 0
+                    for s in fault_sweep.values())
     print(f"[gram_service] {requests} reqs, {len(buckets)} buckets "
           f"({seq_shapes} distinct shapes), backend={jax.default_backend()}")
     print(f"[gram_service] cold: service {wall_cold:.2f}s "
@@ -164,10 +257,13 @@ def run(quick: bool = False):
             "p99_latency_s": _pct(seq_warm_lat, 0.99),
             "recompile_count": seq_buckets,
         },
+        "fault_sweep": fault_sweep,
+        "guard_overhead": guard_overhead,
         "speedup_vs_status_quo": speedup_cold,
         "speedup_warm_batching_only": speedup_warm,
         "acceptance_recompiles_le_buckets": ok_recompiles,
         "acceptance_speedup_ge_2x": speedup_cold >= 2.0,
+        "acceptance_faults_all_served": ok_faults,
     }
     path = write_json("BENCH_gram_service.json", payload)
     print(f"[gram_service] wrote {path}")

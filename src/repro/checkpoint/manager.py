@@ -19,6 +19,7 @@ import re
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -165,11 +166,32 @@ class CheckpointManager:
 
     def restore(self, step: Optional[int] = None, *, shardings=None):
         """Returns (state, meta). ``shardings``: pytree for elastic
-        reshard-on-load (may target a different mesh than the save)."""
+        reshard-on-load (may target a different mesh than the save).
+
+        Asking for the *latest* checkpoint (``step=None``) walks back
+        over unreadable ones (torn meta.json / bit-rotted npz — the
+        atomic-rename commit makes these rare, but a disk can still rot
+        a committed directory) with a warning per skip, so a recovering
+        process restarts from the newest *intact* state instead of
+        dying on the newest directory.  An explicitly requested step
+        still raises: the caller asked for that state, silently handing
+        back another would be wrong.
+        """
         self.wait()
-        step = self.latest_step() if step is None else step
-        if step is None:
-            return None, None
+        if step is not None:
+            return self._read(step, shardings)
+        for s in reversed(self.all_steps()):
+            try:
+                return self._read(s, shardings)
+            except (OSError, ValueError, KeyError,
+                    json.JSONDecodeError) as e:
+                warnings.warn(
+                    f"checkpoint step_{s:08d} in {self.dir} is unreadable "
+                    f"({type(e).__name__}: {e}); falling back to the "
+                    f"previous checkpoint", stacklevel=2)
+        return None, None
+
+    def _read(self, step: int, shardings=None):
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)

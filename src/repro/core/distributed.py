@@ -65,8 +65,16 @@ __all__ = [
     "gram_allreduce", "gram_reducescatter", "gram_ring", "gram_bfs25d",
     "distributed_gram", "ring_layout_coords", "assemble_ring_gram",
     "ring_stack_len", "feasible_schemes", "default_gram_axes",
+    "scheme_fallback_chain", "shrink_mesh", "SCHEME_LADDER",
     "shard_map_compat",
 ]
+
+# Degradation order for the serving layer's scheme fallback: most
+# communication-avoiding (and most moving parts) first, the
+# paper-faithful single-psum scheme last — each step rightward trades
+# bandwidth optimality for fewer ways to fail (fewer collectives, fewer
+# axes involved).
+SCHEME_LADDER = ("bfs25d", "ring", "reducescatter", "allreduce")
 
 
 def shard_map_compat():
@@ -353,6 +361,69 @@ def feasible_schemes(m: int, n: int, mesh: Mesh, *,
             if rep_axis in sizes:
                 out += ["bfs25d"]
     return out
+
+
+def scheme_fallback_chain(m: int, n: int, mesh: Mesh, *,
+                          scheme: str = "auto",
+                          row_axis: str = "data",
+                          col_axis: Optional[str] = None,
+                          rep_axis: Optional[str] = None,
+                          dtype_bytes: int = 4,
+                          out_bytes: Optional[int] = None) -> list[str]:
+    """Ordered list of schemes the serving layer should try for an
+    (m, n) gram on ``mesh``: the preferred scheme first (the cost-model
+    winner under ``scheme="auto"``, else ``scheme`` itself when
+    feasible), then every other feasible scheme in ``SCHEME_LADDER``
+    order — strictly degrading toward the paper-faithful allreduce.
+    Empty when nothing is feasible (callers fall back to local)."""
+    feas = feasible_schemes(m, n, mesh, row_axis=row_axis,
+                            col_axis=col_axis, rep_axis=rep_axis)
+    if not feas:
+        return []
+    if scheme == "auto":
+        from . import cost_model
+        sizes = dict(mesh.shape)
+        ranked = cost_model.rank_gram_schemes(
+            m, n,
+            rows=sizes.get(row_axis, 1),
+            ring=sizes.get(col_axis) if col_axis else None,
+            rep=sizes.get(rep_axis) if rep_axis else None,
+            dtype_bytes=dtype_bytes,
+            out_bytes=out_bytes if out_bytes is not None else dtype_bytes,
+            schemes=feas)
+        head = ranked[0].scheme
+    else:
+        head = scheme if scheme in feas else None
+    chain = [] if head is None else [head]
+    chain += [s for s in SCHEME_LADDER if s in feas and s not in chain]
+    return chain
+
+
+def shrink_mesh(mesh: Mesh, axis: Optional[str] = None) -> Optional[Mesh]:
+    """The surviving sub-mesh after losing one slice of ``axis`` (a dead
+    replica group): same axis names, ``axis`` one shorter — slice 0 of
+    ``axis`` is dropped, mirroring "the failed group's devices are gone".
+
+    ``axis=None`` picks for least damage: the replication axis when it
+    has size > 1 (bfs25d degrades to smaller c — or to plain ring at
+    c=1 — with no resharding of the row/col layout), else the largest
+    axis.  Returns None when the mesh is a single device (nothing left
+    to shrink — the serving layer goes fully local).
+    """
+    sizes = dict(mesh.shape)
+    if axis is None:
+        if sizes.get("rep", 1) > 1:
+            axis = "rep"
+        else:
+            axis = max(sizes, key=lambda a: sizes[a])
+    if sizes.get(axis, 1) <= 1:
+        shrinkable = [a for a, s in sizes.items() if s > 1]
+        if not shrinkable:
+            return None
+        axis = max(shrinkable, key=lambda a: sizes[a])
+    idx = mesh.axis_names.index(axis)
+    devices = mesh.devices.take(range(1, sizes[axis]), axis=idx)
+    return Mesh(devices, mesh.axis_names)
 
 
 def distributed_gram(a: jax.Array, mesh: Mesh, *,

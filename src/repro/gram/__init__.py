@@ -18,22 +18,31 @@ from .autotune import (  # noqa: F401
     autotune as autotune_bucket, bucket_shape, lookup as autotune_lookup,
     resolve_block_defaults,
 )
-from .engine import GramEngine, GramRequest, batched_gram  # noqa: F401
+from . import verify  # noqa: F401
+from .engine import (  # noqa: F401
+    BucketHealth, GramEngine, GramRequest, batched_gram,
+)
 from .stream import (  # noqa: F401
     GramStream, init as stream_init, update as stream_update,
     finalize as stream_finalize,
     GramStackStream, stack_init, stack_update, stack_finalize,
     sharded_init, update_sharded,
     distributed_init, distributed_update, distributed_finalize,
+    CheckpointedGramStream,
+)
+from .verify import (  # noqa: F401
+    GramVerdict, VerificationError, freivalds_gram, verify_gram,
 )
 
 __all__ = [
-    "autotune", "engine", "stream",
+    "autotune", "engine", "stream", "verify",
     "autotune_bucket", "bucket_shape", "autotune_lookup",
     "resolve_block_defaults",
-    "GramEngine", "GramRequest", "batched_gram",
+    "GramEngine", "GramRequest", "BucketHealth", "batched_gram",
     "GramStream", "stream_init", "stream_update", "stream_finalize",
     "GramStackStream", "stack_init", "stack_update", "stack_finalize",
     "sharded_init", "update_sharded",
     "distributed_init", "distributed_update", "distributed_finalize",
+    "CheckpointedGramStream",
+    "GramVerdict", "VerificationError", "freivalds_gram", "verify_gram",
 ]

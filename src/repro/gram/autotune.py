@@ -205,8 +205,19 @@ def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
 
 def load_cache(path: Optional[os.PathLike] = None) -> dict:
     """Entries dict from the JSON cache ({} when absent/corrupt).
-    Memoized on (path, mtime): touching the file invalidates."""
+    Memoized on (path, mtime): touching the file invalidates.
+
+    A corrupt file (truncated by a crash mid-write outside our atomic
+    path, or bit rot) must never take serving down: it degrades to an
+    empty cache — untuned defaults — with ONE warning per file snapshot
+    (the mtime memo dedups it; the next ``_save_entry`` rewrites the
+    file whole, which is the repair)."""
     p = Path(path) if path is not None else default_cache_path()
+    # chaos hook: an armed cache_corrupt fault truncates the file first,
+    # exercising exactly the recovery path below (tests/chaos CI)
+    if p.exists():
+        from ..runtime import faults as _faults
+        _faults.corrupt_file("gram.autotune.cache", p)
     try:
         mtime = p.stat().st_mtime_ns
     except OSError:
@@ -224,7 +235,14 @@ def load_cache(path: Optional[os.PathLike] = None) -> dict:
         if not isinstance(raw, dict) or raw.get("version", 0) \
                 < _CACHE_VERSION:
             entries = {}
-    except (OSError, ValueError):
+    except OSError:
+        entries = {}
+    except ValueError as e:
+        import warnings
+        warnings.warn(
+            f"autotune cache {p} is corrupt ({e}); ignoring it and "
+            f"serving with untuned defaults — the next autotune run "
+            f"rewrites it", stacklevel=2)
         entries = {}
     _memo.clear()           # one live file snapshot is enough
     _memo[memo_key] = entries

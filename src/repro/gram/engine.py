@@ -26,13 +26,44 @@ engine, for the paper's operation instead of token decode:
   "auto", the communication cost model picks allreduce / reducescatter /
   half-ring / 2.5D bfs25d per shape) instead of the single-device
   vmapped executable; small buckets keep the slot-batched local path.
+
+Failure model (DESIGN.md §13).  Serving "fast when everything works" is
+not serving: devices drop, low-precision tiles overflow, a wedged
+executable is an outage.  Every batch therefore runs inside a
+**degradation ladder**:
+
+* **Output guards** (``gram.verify``): a NaN/Inf scan plus — when
+  ``verify`` asks for probes — a randomized Freivalds identity check
+  (x^t C x vs ||Ax||^2) and diagonal nonnegativity, on every served
+  result.  A guard failure is treated exactly like a crashed executable.
+* **Bounded retry with backoff**: a failed attempt (exception, injected
+  fault, guard veto) retries up to ``max_retries`` times with
+  exponential backoff, always from the clean host copy of the operands.
+* **Circuit breaker / health ladder**: per-bucket health counters
+  escalate a persistently failing bucket down a config ladder — first
+  quarantining its autotune winner, then forcing ``mode="reference"``,
+  then ``levels=0`` (classical) — so a poisoned tuned config cannot take
+  the bucket down permanently.
+* **Distributed scheme fallback**: distributed buckets walk
+  ``core.distributed.scheme_fallback_chain`` (bfs25d -> ring ->
+  reducescatter -> allreduce -> local single-device) when a scheme's
+  executable fails; a **mesh shrink** (lost replica group — injected via
+  ``runtime.faults`` in drills, ``apply_mesh`` in production) invalidates
+  the distributed executables and rebuilds the chain on the surviving
+  sub-mesh.
+* **Deadlines**: a request past its ``deadline_s`` is failed fast
+  instead of holding its batch hostage.
+
+Requests that exhaust the ladder are marked ``status="failed"`` with the
+error preserved — ``step()`` never propagates an executable exception,
+so one poisoned bucket cannot wedge ``run_to_completion``.
 """
 from __future__ import annotations
 
 import itertools
 import time
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
 import jax
@@ -41,11 +72,14 @@ import numpy as np
 
 from ..core.ata import ata, ata_full
 from ..core.distributed import (default_gram_axes, distributed_gram,
-                                feasible_schemes)
+                                feasible_schemes, scheme_fallback_chain,
+                                shrink_mesh)
 from ..core.symmetry import symmetrize_from_lower
+from ..runtime import faults as _faults
 from . import autotune as _autotune
+from . import verify as _verify
 
-__all__ = ["GramEngine", "GramRequest", "batched_gram"]
+__all__ = ["GramEngine", "GramRequest", "BucketHealth", "batched_gram"]
 
 
 def batched_gram(blocks: jax.Array, *, levels: Union[int, str] = 1,
@@ -74,13 +108,35 @@ class GramRequest:
     full: bool                        # symmetric result vs lower triangle
     gram_of: str                      # "cols" (A^tA) | "rows" (AA^t)
     t_submit: float
+    deadline_s: Optional[float] = None  # fail fast past t_submit + deadline
     t_done: Optional[float] = None
     result: Optional[np.ndarray] = None
     done: bool = False
+    status: str = "pending"           # -> "ok" | "failed"
+    error: Optional[str] = None
+    attempts: int = 0                 # executable attempts spent on it
+    degraded: bool = False            # served below the bucket's first rung
+    served_by: Optional[str] = None   # "local" | "local:rungK" | "dist:SCHEME"
+    verified: Optional[bool] = None   # output guards ran and passed
 
     @property
     def latency_s(self) -> Optional[float]:
         return None if self.t_done is None else self.t_done - self.t_submit
+
+
+@dataclass
+class BucketHealth:
+    """Per-bucket circuit-breaker state (one per executable family)."""
+    rung: int = 0                     # current degradation-ladder rung
+    consecutive_failures: int = 0
+    failures: int = 0
+    successes: int = 0
+    quarantined: List[str] = field(default_factory=list)  # rung descriptions
+
+
+# local ladder: 0 = autotuned config, 1 = autotune winner quarantined,
+# 2 = reference (XLA) mode, 3 = reference + classical recursion
+_LOCAL_MAX_RUNG = 3
 
 
 class GramEngine:
@@ -93,7 +149,12 @@ class GramEngine:
                  use_autotune_cache: bool = True,
                  interpret: Optional[bool] = None,
                  mesh=None, dist_scheme: str = "auto",
-                 dist_threshold: int = 1 << 21):
+                 dist_threshold: int = 1 << 21,
+                 verify: Union[None, str, int] = "finite",
+                 verify_rtol: Optional[float] = None,
+                 verify_seed: int = 0,
+                 max_retries: int = 3, backoff_s: float = 0.0,
+                 breaker_threshold: int = 2):
         self.slots = slots
         self.levels, self.leaf, self.variant = levels, leaf, variant
         self.mode, self.block = mode, block
@@ -108,24 +169,48 @@ class GramEngine:
         self.dist_threshold = dist_threshold
         self.dist_axes = default_gram_axes(mesh) if mesh is not None else {}
         self.dist_served = 0
+        # failure model knobs: `verify` is None/"off" (no guards),
+        # "finite" (NaN/Inf + diagonal scan — the default) or an int k
+        # (finite scan + k Freivalds probes per served result)
+        if verify in (None, "off", False, 0):
+            self._guard_on, self._probes = False, 0
+        elif verify == "finite":
+            self._guard_on, self._probes = True, 0
+        else:
+            self._guard_on, self._probes = True, int(verify)
+        self.verify_rtol = verify_rtol
+        self._verify_rng = np.random.default_rng(verify_seed)
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.breaker_threshold = max(1, breaker_threshold)
         self._uid = itertools.count()
         # bucket key -> FIFO of waiting requests (insertion-ordered so
         # tick scheduling is deterministic)
         self.waiting: "OrderedDict[tuple, List[GramRequest]]" = OrderedDict()
         self.finished: List[GramRequest] = []
         self._executables: Dict[tuple, object] = {}
+        self._health: Dict[tuple, BucketHealth] = {}
+        self._dist_chains: Dict[tuple, List[str]] = {}
+        self._mesh_epoch = 0
         self.compile_count = 0
         self.served = 0
+        self.failed = 0
+        self.degraded_served = 0
+        self.retries = 0
+        self.guard_failures = 0
+        self.mesh_changes = 0
         self.ticks = 0
 
     # -- request intake ----------------------------------------------------
-    def submit(self, a, *, full: bool = True,
-               gram_of: str = "cols") -> int:
+    def submit(self, a, *, full: bool = True, gram_of: str = "cols",
+               deadline_s: Optional[float] = None) -> int:
         """Enqueue one Gram request; returns its uid.  ``full`` selects the
         mirrored symmetric C (default) vs the lower triangle only;
         ``gram_of="rows"`` serves ``a @ a.T`` (the Arrigoni-Massini row
         gram — the ``aat`` leaf program on the fused path) instead of the
-        default ``a.T @ a``."""
+        default ``a.T @ a``.  ``deadline_s`` (relative to submission) lets
+        the engine fail the request fast instead of retrying past its
+        usefulness."""
         a = np.asarray(a)
         if a.ndim != 2:
             raise ValueError(f"gram request must be 2-D, got {a.shape}")
@@ -133,7 +218,8 @@ class GramEngine:
             raise ValueError(f"gram_of must be 'cols' or 'rows', got "
                              f"{gram_of!r}")
         r = GramRequest(uid=next(self._uid), a=a, shape=a.shape, full=full,
-                        gram_of=gram_of, t_submit=time.perf_counter())
+                        gram_of=gram_of, t_submit=time.perf_counter(),
+                        deadline_s=deadline_s)
         key = self._bucket_key(a.shape, a.dtype, gram_of)
         self.waiting.setdefault(key, []).append(r)
         return r.uid
@@ -142,19 +228,27 @@ class GramEngine:
         M, N = _autotune.bucket_shape(*shape, min_side=self.min_bucket)
         return (M, N, jnp.dtype(dtype).name, gram_of)
 
-    # -- executable cache --------------------------------------------------
-    def _bucket_config(self, key) -> dict:
-        """Engine config for one bucket; the autotune winner fills in only
-        the knobs the caller left open (mode/levels "auto", block None) —
+    # -- degradation ladder ------------------------------------------------
+    def _bucket_health(self, key) -> BucketHealth:
+        return self._health.setdefault(key, BucketHealth())
+
+    def _bucket_config(self, key, rung: int = 0) -> dict:
+        """Engine config for one bucket at one ladder rung.
+
+        Rung 0 behaves as always: the autotune winner fills in only the
+        knobs the caller left open (mode/levels "auto", block None) —
         explicit engine arguments always win.  Mode/levels are adopted
         only from *measured* entries (wall-clock-backed: a model-only
         entry must not flip the backend-appropriate "auto" dispatch);
         block sizes only from fused winners (reference entries carry
-        placeholder blocks)."""
+        placeholder blocks).  Higher rungs degrade: 1 skips the autotune
+        winner (quarantine), 2 forces the XLA reference recursion, 3 adds
+        ``levels=0`` (classical — no fast-variant arithmetic at all).
+        """
         M, N, dtype, gram_of = key
         cfg = {"mode": self.mode, "levels": self.levels, "leaf": self.leaf,
                "variant": self.variant, "block": self.block}
-        if self.use_autotune_cache:
+        if self.use_autotune_cache and rung == 0:
             try:
                 hit = _autotune.lookup(
                     M, N, dtype=dtype,
@@ -170,7 +264,195 @@ class GramEngine:
                         cfg["levels"] = hit["levels"]
                 if cfg["block"] is None and hit.get("mode") == "fused":
                     cfg["block"] = hit.get("bk")
+        if rung >= 2:
+            cfg["mode"] = "reference"
+        if rung >= 3:
+            cfg["levels"] = 0
         return cfg
+
+    def _record_failure(self, key, health: BucketHealth, max_rung: int,
+                        reason: str):
+        """One failed attempt: bump counters; trip the breaker (escalate
+        the rung, stickily) after ``breaker_threshold`` consecutive
+        failures."""
+        health.failures += 1
+        health.consecutive_failures += 1
+        self.retries += 1
+        if (health.consecutive_failures >= self.breaker_threshold
+                and health.rung < max_rung):
+            health.rung += 1
+            health.consecutive_failures = 0
+            health.quarantined.append(
+                f"rung{health.rung - 1}: {reason}")
+
+    def _record_success(self, key, health: BucketHealth):
+        health.successes += 1
+        health.consecutive_failures = 0
+
+    def _backoff(self, attempt: int, batch: List[GramRequest]):
+        if self.backoff_s <= 0:
+            return
+        wait = self.backoff_s * (2 ** (attempt - 1))
+        # never sleep past the tightest live deadline
+        now = time.perf_counter()
+        for r in batch:
+            if r.deadline_s is not None:
+                wait = min(wait, max(0.0,
+                                     r.t_submit + r.deadline_s - now))
+        if wait > 0:
+            time.sleep(wait)
+
+    def _expire(self, entries):
+        """Split [(slot, request)] into (live, newly-expired-and-failed)."""
+        now = time.perf_counter()
+        live, expired = [], []
+        for slot, r in entries:
+            if (r.deadline_s is not None
+                    and now > r.t_submit + r.deadline_s):
+                self._finish_failed(r, "deadline exceeded")
+                expired.append(r)
+            else:
+                live.append((slot, r))
+        return live, expired
+
+    # -- completion bookkeeping -------------------------------------------
+    def _finish_ok(self, r: GramRequest, c: np.ndarray, *, served_by: str,
+                   degraded: bool, t_done: Optional[float] = None):
+        r.result = c
+        r.status, r.done = "ok", True
+        r.t_done = t_done if t_done is not None else time.perf_counter()
+        r.degraded = degraded
+        r.served_by = served_by
+        r.verified = True if self._guard_on else None
+        r.a = None                      # free the host copy
+        self.finished.append(r)
+        self.served += 1
+        if degraded:
+            self.degraded_served += 1
+
+    def _finish_failed(self, r: GramRequest, error: str):
+        r.status, r.done = "failed", True
+        r.error = error
+        r.t_done = time.perf_counter()
+        r.a = None
+        self.finished.append(r)
+        self.failed += 1
+
+    # -- output guards -----------------------------------------------------
+    def _guard(self, key, entries, out) -> Optional[str]:
+        """Run the output guards over a served batch; None when every
+        result passes, else a reason string (the whole batch retries —
+        corruption is a property of the executable run, not a request).
+
+        The finite scan runs ONCE over the whole slot stack (padding
+        slots are exact zeros, so they never veto) — one vectorized pass
+        instead of per-request slices keeps the default-on guard off the
+        latency profile; per-request work (diagonal, probes) only touches
+        the small diag vector unless probes are enabled."""
+        if not self._guard_on:
+            return None
+        M, N, dtype, gram_of = key
+        # fast path: one float64 reduction (any NaN/Inf propagates); the
+        # full scan only confirms — a float64 *overflow* in the reduction
+        # of huge-but-finite values must not veto a correct result
+        if not np.isfinite(np.sum(out, dtype=np.float64)) \
+                and not np.isfinite(out).all():
+            self.guard_failures += 1
+            return "guard veto: non-finite entries in served batch"
+        rtol = self.verify_rtol
+        if rtol is None:
+            rtol = _verify.default_rtol(dtype)
+        for slot, r in entries:
+            n = r.shape[0] if gram_of == "rows" else r.shape[1]
+            c = out[slot, :n, :n] if out.ndim == 3 else out[:n, :n]
+            d = np.diagonal(c).astype(np.float64)
+            scale = float(np.abs(d).max()) if d.size else 0.0
+            if not (d >= -rtol * max(scale, 1.0)).all():
+                self.guard_failures += 1
+                return f"guard veto on request {r.uid}: negative diagonal"
+            if self._probes:
+                ok, worst = _verify.freivalds_gram(
+                    r.a, c, probes=self._probes, rtol=rtol,
+                    gram_of=gram_of, full=False, rng=self._verify_rng)
+                if not ok:
+                    self.guard_failures += 1
+                    return (f"guard veto on request {r.uid}: freivalds "
+                            f"identity violated (rel err {worst:.3e})")
+        return None
+
+    # -- mesh lifecycle ----------------------------------------------------
+    def apply_mesh(self, mesh) -> None:
+        """Adopt a new (typically shrunk) device mesh mid-run: recompute
+        the distributed axis mapping, invalidate every distributed
+        executable and fallback chain, and reset distributed buckets'
+        ladder rungs (the old rung judged the old mesh's schemes)."""
+        dist_keys = [k for k in self._health if self._is_distributed(k)]
+        self.mesh = mesh
+        self.dist_axes = default_gram_axes(mesh) if mesh is not None else {}
+        self._mesh_epoch += 1
+        self.mesh_changes += 1
+        self._dist_chains.clear()
+        self._executables = {ek: exe for ek, exe in self._executables.items()
+                             if ek[0] != "dist"}
+        for k in dist_keys:
+            self._health[k].rung = 0
+            self._health[k].consecutive_failures = 0
+
+    def _poll_faults(self):
+        """Chaos hook: an armed ``mesh_shrink`` fault drops one replica
+        group from the serving mesh (``runtime.faults``)."""
+        if self.mesh is None:
+            return
+        if _faults.fire("mesh_shrink", "gram.engine.mesh"):
+            new = shrink_mesh(self.mesh)
+            if new is not None:
+                self.apply_mesh(new)
+
+    # -- executable cache --------------------------------------------------
+    @staticmethod
+    def _cfg_fingerprint(cfg) -> tuple:
+        return (cfg["mode"], str(cfg["levels"]), cfg["leaf"],
+                cfg["variant"], cfg["block"])
+
+    def _local_executable(self, key, cfg):
+        M, N, dtype, gram_of = key
+        ekey = ("local", key, self._cfg_fingerprint(cfg))
+        if ekey in self._executables:
+            return self._executables[ekey]
+
+        def single(x):
+            return ata(x, gram_of=gram_of, levels=cfg["levels"],
+                       leaf=cfg["leaf"], variant=cfg["variant"],
+                       mode=cfg["mode"], out_dtype=self.out_dtype,
+                       block=cfg["block"], interpret=self.interpret)
+        spec = jax.ShapeDtypeStruct((self.slots, M, N), jnp.dtype(dtype))
+        compiled = jax.jit(jax.vmap(single)).lower(spec).compile()
+        self.compile_count += 1
+        self._executables[ekey] = compiled
+        return compiled
+
+    def _dist_executable(self, key, scheme, cfg):
+        M, N, dtype, gram_of = key
+        ekey = ("dist", key, scheme, self._mesh_epoch)
+        if ekey in self._executables:
+            return self._executables[ekey]
+
+        # one request at a time on the whole mesh: the mesh IS the
+        # batch dimension here, slot-stacking would fight the sharding
+        # (autotuned mode/levels still apply; block resolves inside
+        # the per-shard kernels via the ops-level autotune defaults)
+        def one(x):
+            return distributed_gram(
+                x, self.mesh, scheme=scheme,
+                levels=cfg["levels"], leaf=cfg["leaf"],
+                variant=cfg["variant"], mode=cfg["mode"],
+                out_dtype=self.out_dtype, interpret=self.interpret,
+                **self.dist_axes)
+        spec = jax.ShapeDtypeStruct((M, N), jnp.dtype(dtype))
+        compiled = jax.jit(one).lower(spec).compile()
+        self.compile_count += 1
+        self._executables[ekey] = compiled
+        return compiled
 
     def _is_distributed(self, key) -> bool:
         """Buckets at/above the element threshold route to the mesh (when
@@ -190,37 +472,20 @@ class GramEngine:
             return bool(feas)
         return self.dist_scheme in feas
 
-    def _executable(self, key):
-        if key in self._executables:
-            return self._executables[key]
-        M, N, dtype, gram_of = key
-        cfg = self._bucket_config(key)
-        if self._is_distributed(key):
-            # one request at a time on the whole mesh: the mesh IS the
-            # batch dimension here, slot-stacking would fight the sharding
-            # (autotuned mode/levels still apply; block resolves inside
-            # the per-shard kernels via the ops-level autotune defaults)
-            def one(x):
-                return distributed_gram(
-                    x, self.mesh, scheme=self.dist_scheme,
-                    levels=cfg["levels"], leaf=cfg["leaf"],
-                    variant=cfg["variant"], mode=cfg["mode"],
-                    out_dtype=self.out_dtype, interpret=self.interpret,
-                    **self.dist_axes)
-            spec = jax.ShapeDtypeStruct((M, N), jnp.dtype(dtype))
-        else:
-            def single(x):
-                return ata(x, gram_of=gram_of, levels=cfg["levels"],
-                           leaf=cfg["leaf"], variant=cfg["variant"],
-                           mode=cfg["mode"], out_dtype=self.out_dtype,
-                           block=cfg["block"], interpret=self.interpret)
-            one = jax.vmap(single)
-            spec = jax.ShapeDtypeStruct((self.slots, M, N),
-                                        jnp.dtype(dtype))
-        compiled = jax.jit(one).lower(spec).compile()
-        self.compile_count += 1
-        self._executables[key] = compiled
-        return compiled
+    def _dist_chain(self, key) -> List[str]:
+        """Fallback chain for one distributed bucket on the current mesh
+        (``core.distributed.scheme_fallback_chain`` + terminal "local"),
+        cached per mesh epoch."""
+        ck = (key, self._mesh_epoch)
+        if ck not in self._dist_chains:
+            M, N, dtype, gram_of = key
+            chain = scheme_fallback_chain(
+                M, N, self.mesh, scheme=self.dist_scheme,
+                dtype_bytes=jnp.dtype(dtype).itemsize,
+                out_bytes=self.out_dtype.itemsize,
+                **self.dist_axes)
+            self._dist_chains[ck] = [f"dist:{s}" for s in chain] + ["local"]
+        return self._dist_chains[ck]
 
     def prewarm(self, shapes, dtype=jnp.float32) -> int:
         """Build executables for the buckets covering ``shapes`` ahead of
@@ -228,7 +493,14 @@ class GramEngine:
         Returns the number of compilations triggered."""
         before = self.compile_count
         for shape in shapes:
-            self._executable(self._bucket_key(shape, dtype))
+            key = self._bucket_key(shape, dtype)
+            cfg = self._bucket_config(key, rung=0)
+            if self._is_distributed(key):
+                scheme = self._dist_chain(key)[0]
+                if scheme != "local":
+                    self._dist_executable(key, scheme[len("dist:"):], cfg)
+                    continue
+            self._local_executable(key, cfg)
         return self.compile_count - before
 
     # -- one engine tick ---------------------------------------------------
@@ -237,11 +509,15 @@ class GramEngine:
         (throughput), else the bucket whose head request has waited
         longest (fairness — sparse buckets cannot be starved by popular
         ones); FIFO within a bucket.  Runs the bucket executable over up
-        to ``slots`` stacked requests and slices each result back to its
-        true shape.  Returns the requests finished this tick."""
+        to ``slots`` stacked requests — through the degradation ladder
+        (retry / escalate / fail, see module docstring) — and slices each
+        result back to its true shape.  Returns the requests finished
+        this tick (served, degraded, or failed); never raises on an
+        executable failure."""
         if not self.waiting:
             return []
         self.ticks += 1
+        self._poll_faults()
         full = [k for k, q in self.waiting.items() if len(q) >= self.slots]
         key = min(full or self.waiting,
                   key=lambda k: self.waiting[k][0].t_submit)
@@ -252,44 +528,132 @@ class GramEngine:
         else:
             del self.waiting[key]
 
-        M, N, dtype, gram_of = key
-        if self._is_distributed(key):
-            # mesh path: the device mesh is the parallel dimension — serve
-            # the drained requests one at a time through distributed_gram
-            exe = self._executable(key)
-            for r in batch:
-                m, n = r.shape
-                pad = np.zeros((M, N), jnp.dtype(dtype))
-                pad[:m, :n] = r.a
-                c = np.asarray(jax.device_get(exe(jnp.asarray(pad))))[:n, :n]
-                if not r.full:
-                    c = np.tril(c)
-                r.result, r.t_done, r.done = c, time.perf_counter(), True
-                r.a = None
-                self.finished.append(r)
-            self.dist_served += len(batch)
-            self.served += len(batch)
-            return batch
+        entries, done = self._expire(list(enumerate(batch)))
+        if entries:
+            if self._is_distributed(key):
+                for _, r in entries:
+                    self._serve_one_distributed(key, r)
+                    done.append(r)
+            else:
+                done.extend(self._serve_local(key, entries))
+        return done
 
+    # -- local (slot-batched) serving -------------------------------------
+    def _serve_local(self, key, entries) -> List[GramRequest]:
+        """Serve [(slot, request)] through the slot-batched local
+        executable under the retry/escalation ladder."""
+        M, N, dtype, gram_of = key
+        health = self._bucket_health(key)
         # jnp.dtype resolves extended names ("bfloat16") numpy alone won't
-        stack = np.zeros((self.slots, M, N), jnp.dtype(dtype))
-        for s, r in enumerate(batch):
+        clean = np.zeros((self.slots, M, N), jnp.dtype(dtype))
+        for slot, r in entries:
             m, n = r.shape
-            stack[s, :m, :n] = r.a
-        out = np.asarray(self._executable(key)(jnp.asarray(stack)))
+            clean[slot, :m, :n] = r.a
+
+        attempt, last_err = 0, "unknown failure"
+        while True:
+            entries, expired = self._expire(entries)
+            if not entries:
+                return expired + [r for _, r in entries]
+            rung = health.rung
+            site = f"gram.engine.exec.local.{M}x{N}.{dtype}.{gram_of}"
+            try:
+                _faults.check_exec(site)
+                stack = _faults.poison("poison_operand",
+                                       "gram.engine.operand", clean)
+                exe = self._local_executable(
+                    key, self._bucket_config(key, rung))
+                out = np.asarray(exe(jnp.asarray(stack)))
+                out = _faults.poison("poison_output",
+                                     "gram.engine.output", out)
+                veto = self._guard(key, entries, out)
+                if veto is None:
+                    break                       # success
+                last_err = veto
+            except Exception as e:  # noqa: BLE001 — ladder, not crash
+                last_err = f"{type(e).__name__}: {e}"
+            self._record_failure(key, health, _LOCAL_MAX_RUNG, last_err)
+            attempt += 1
+            for _, r in entries:
+                r.attempts += 1
+            if attempt > self.max_retries:
+                for _, r in entries:
+                    self._finish_failed(r, last_err)
+                return expired + [r for _, r in entries]
+            self._backoff(attempt, [r for _, r in entries])
+
+        self._record_success(key, health)
         t_done = time.perf_counter()
-        for s, r in enumerate(batch):
+        served_by = "local" if rung == 0 else f"local:rung{rung}"
+        for slot, r in entries:
             # the result spans the gram'd dimension: cols for A^tA,
             # rows for the gram_of="rows" AA^t buckets
             n = r.shape[0] if gram_of == "rows" else r.shape[1]
-            c = out[s, :n, :n]
+            c = out[slot, :n, :n]
             if r.full:
                 c = np.asarray(symmetrize_from_lower(jnp.asarray(c)))
-            r.result, r.t_done, r.done = c, t_done, True
-            r.a = None                      # free the host copy
-            self.finished.append(r)
-        self.served += len(batch)
-        return batch
+            r.attempts += 1
+            self._finish_ok(r, c, served_by=served_by,
+                            degraded=rung > 0, t_done=t_done)
+        return expired + [r for _, r in entries]
+
+    # -- distributed (mesh) serving ---------------------------------------
+    def _serve_one_distributed(self, key, r: GramRequest) -> None:
+        """Serve one request on the mesh, walking the scheme fallback
+        chain (…-> local) on failure; the mesh may shrink between
+        attempts (``_poll_faults`` runs per tick, ``apply_mesh`` any
+        time), so the chain is re-read every attempt."""
+        M, N, dtype, gram_of = key
+        m, n = r.shape
+        attempt, last_err = 0, "unknown failure"
+        while True:
+            if (r.deadline_s is not None and
+                    time.perf_counter() > r.t_submit + r.deadline_s):
+                self._finish_failed(r, "deadline exceeded")
+                return
+            health = self._bucket_health(key)
+            if not self._is_distributed(key):
+                rung_name = "local"         # mesh shrank under the bucket
+            else:
+                chain = self._dist_chain(key)
+                rung_name = chain[min(health.rung, len(chain) - 1)]
+            if rung_name == "local":
+                self._serve_local(key, [(0, r)])
+                return
+            site = f"gram.engine.exec.{rung_name}.{M}x{N}.{dtype}"
+            scheme = rung_name[len("dist:"):]
+            try:
+                _faults.check_exec(site)
+                clean = np.zeros((M, N), jnp.dtype(dtype))
+                clean[:m, :n] = r.a
+                pad = _faults.poison("poison_operand",
+                                     "gram.engine.operand", clean)
+                exe = self._dist_executable(key, scheme,
+                                            self._bucket_config(key, 0))
+                c = np.asarray(jax.device_get(exe(jnp.asarray(pad))))
+                c = _faults.poison("poison_output",
+                                   "gram.engine.output", c)
+                c = c[:n, :n]
+                veto = self._guard(key, [(0, r)], c[None])
+                if veto is None:
+                    if not r.full:
+                        c = np.tril(c)
+                    r.attempts += 1
+                    self._finish_ok(r, c, served_by=rung_name,
+                                    degraded=health.rung > 0)
+                    self.dist_served += 1
+                    return
+                last_err = veto
+            except Exception as e:  # noqa: BLE001 — ladder, not crash
+                last_err = f"{type(e).__name__}: {e}"
+            self._record_failure(key, health,
+                                 len(self._dist_chain(key)) - 1, last_err)
+            attempt += 1
+            r.attempts += 1
+            if attempt > self.max_retries:
+                self._finish_failed(r, last_err)
+                return
+            self._backoff(attempt, [r])
 
     def run_to_completion(self, max_ticks: int = 10_000) \
             -> List[GramRequest]:
@@ -307,14 +671,23 @@ class GramEngine:
         def pct(p):
             return lats[min(int(p * len(lats)), len(lats) - 1)] \
                 if lats else None
+        bucket_keys = sorted({ek[1] for ek in self._executables})
         return {
             "served": self.served,
+            "failed": self.failed,
+            "degraded_served": self.degraded_served,
+            "retries": self.retries,
+            "guard_failures": self.guard_failures,
+            "mesh_changes": self.mesh_changes,
             "dist_served": self.dist_served,
             "ticks": self.ticks,
             "compile_count": self.compile_count,
-            "buckets": sorted(self._executables),
+            "buckets": bucket_keys,
             "distributed_buckets": sorted(
-                k for k in self._executables if self._is_distributed(k)),
+                k for k in bucket_keys if self._is_distributed(k)),
+            "quarantined": {str(k): list(h.quarantined)
+                            for k, h in self._health.items()
+                            if h.quarantined},
             "p50_latency_s": pct(0.50),
             "p99_latency_s": pct(0.99),
         }

@@ -55,7 +55,8 @@ from ..core.symmetry import pack_tril, tril_vector_from_blocks, unpack_tril
 __all__ = ["GramStream", "init", "update", "finalize",
            "GramStackStream", "stack_init", "stack_update", "stack_finalize",
            "sharded_init", "update_sharded",
-           "distributed_init", "distributed_update", "distributed_finalize"]
+           "distributed_init", "distributed_update", "distributed_finalize",
+           "CheckpointedGramStream"]
 
 
 class GramStream(NamedTuple):
@@ -133,9 +134,20 @@ def update(state: GramStream, chunk: jax.Array, *,
 
 
 def finalize(state: GramStream, *, symmetrize: bool = True,
-             out_dtype=None) -> jax.Array:
+             out_dtype=None, guard: bool = False) -> jax.Array:
     """Dense (n, n) Gram from the packed state (mirrored when
-    ``symmetrize``, else lower-triangular like ``ata``)."""
+    ``symmetrize``, else lower-triangular like ``ata``).
+
+    ``guard=True`` runs the streaming output guards first
+    (``gram.verify.check_packed_state``: NaN/Inf scan + diagonal
+    nonnegativity on the packed state — the chunks are gone, so no
+    Freivalds probe) and raises :class:`~.verify.VerificationError`
+    instead of handing corrupted state downstream.
+    """
+    if guard:
+        import numpy as np
+        from .verify import check_packed_state
+        check_packed_state(np.asarray(jax.device_get(state.packed)), state.n)
     c = unpack_tril(state.packed, state.n, symmetrize=symmetrize)
     return c.astype(out_dtype) if out_dtype is not None else c
 
@@ -214,14 +226,33 @@ def stack_update(state: GramStackStream, chunk: jax.Array, *,
 
 
 def stack_finalize(state: GramStackStream, n: Optional[int] = None, *,
-                   symmetrize: bool = True, out_dtype=None) -> jax.Array:
+                   symmetrize: bool = True, out_dtype=None,
+                   guard: bool = False) -> jax.Array:
     """Dense (n, n) Gram from the stacked state (mirrored when
-    ``symmetrize``, else lower-triangular like ``ata``)."""
+    ``symmetrize``, else lower-triangular like ``ata``).
+
+    ``guard=True`` scans the tile stack for NaN/Inf before unpacking and
+    raises :class:`~.verify.VerificationError` on corruption (the
+    diagonal check happens on the unpacked dense form below — tile-stack
+    indexing of the diagonal is block-size dependent)."""
+    import numpy as np
     from ..core.symmetry import unpack_tril_blocks
+    if guard:
+        from .verify import VerificationError
+        if not np.isfinite(np.asarray(jax.device_get(state.stack))).all():
+            raise VerificationError(
+                "streamed Gram tile stack contains non-finite entries")
     n_pad = state.n_padded
     c = unpack_tril_blocks(state.stack, n_pad, state.block,
                            symmetrize=False)
     c = jnp.tril(c)
+    if guard:
+        from .verify import VerificationError
+        d = np.asarray(jax.device_get(jnp.diagonal(c))).astype(np.float64)
+        scale = float(np.abs(d).max()) if d.size else 0.0
+        if not (d >= -1e-4 * max(scale, 1.0)).all():
+            raise VerificationError(
+                "streamed Gram state has a negative diagonal entry")
     if symmetrize:
         from ..core.symmetry import symmetrize_from_lower
         c = symmetrize_from_lower(c)
@@ -355,3 +386,124 @@ def distributed_finalize(state: jax.Array, mesh: Mesh, *,
         return state
     T = mesh.shape[col_axis]
     return assemble_ring_gram(state, T, state.shape[2])
+
+
+# ---------------------------------------------------------------------------
+# Crash-recoverable streaming: write-ahead checkpoints of the accumulator.
+# ---------------------------------------------------------------------------
+
+class CheckpointedGramStream:
+    """A streaming Gram whose state survives the process (DESIGN.md §13).
+
+    Wraps :class:`GramStream` (``layout="packed"``) or
+    :class:`GramStackStream` (``layout="stack"``) and commits the
+    accumulator to a :class:`~repro.checkpoint.CheckpointManager`
+    directory every ``every`` chunks — atomic rename commits, so a kill
+    at ANY point leaves either the previous or the new checkpoint
+    intact, never a torn one.  The commit step number is the count of
+    chunks *fully folded in* (write-ahead in the sense that the state on
+    disk is always a prefix of the stream: resume never replays a chunk
+    into state that already contains it, and never skips one — the
+    resumer re-feeds chunks from ``next_chunk`` on).
+
+    Because chunked accumulation is exact over any row partition (module
+    docstring) and the resumed state is the *bit-identical* buffer the
+    crashed process committed, a resumed run's finalize is bit-exact
+    against the uninterrupted run as long as chunks are re-fed at the
+    same boundaries (fp addition is order-sensitive; the checkpoint
+    preserves the order).
+
+    ::
+
+        s = CheckpointedGramStream(n, workdir, every=4)
+        for i, chunk in enumerate(chunks):
+            if i < s.next_chunk:      # already folded in pre-crash
+                continue
+            s.update(chunk)
+        c = s.finalize(guard=True)
+    """
+
+    def __init__(self, n: int, workdir: str, *, every: int = 1,
+                 layout: str = "packed", block: Optional[int] = None,
+                 dtype=jnp.float32, keep: int = 2,
+                 async_save: bool = False, **update_kw):
+        if layout not in ("packed", "stack"):
+            raise ValueError(f"layout must be 'packed' or 'stack', "
+                             f"got {layout!r}")
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        from ..checkpoint import CheckpointManager
+        self.n = n
+        self.layout = layout
+        self.every = every
+        self.update_kw = update_kw
+        # sync by default: a streaming WAL wants the commit durable when
+        # .commit() returns (the trainer's overlap-with-compute motive
+        # doesn't apply to host-side accumulator snapshots)
+        self.manager = CheckpointManager(workdir, keep=keep,
+                                         async_save=async_save)
+        self.chunks = 0            # chunks fully folded into .state
+        self._dirty = 0            # chunks since the last commit
+        self.resumed = False
+        if layout == "packed":
+            self.state = init(n, dtype=dtype)
+        else:
+            self.state = stack_init(n, block=block, dtype=dtype)
+        restored, meta = self.manager.restore()
+        if restored is not None:
+            if int(meta.get("n", n)) != n or meta.get("layout") != layout:
+                raise ValueError(
+                    f"checkpoint in {workdir} holds a "
+                    f"{meta.get('layout')} stream of n={meta.get('n')}, "
+                    f"not the requested {layout} n={n}")
+            if layout == "packed":
+                self.state = GramStream(
+                    packed=jnp.asarray(restored["packed"]),
+                    rows=jnp.asarray(restored["rows"]))
+            else:
+                self.state = GramStackStream(
+                    stack=jnp.asarray(restored["stack"]),
+                    rows=jnp.asarray(restored["rows"]))
+            self.chunks = int(meta["chunks"])
+            self.resumed = True
+
+    @property
+    def next_chunk(self) -> int:
+        """Index of the first chunk NOT yet folded in (resume cursor)."""
+        return self.chunks
+
+    def update(self, chunk) -> None:
+        """Fold one chunk in; commits every ``every`` chunks."""
+        if self.layout == "packed":
+            self.state = update(self.state, chunk, **self.update_kw)
+        else:
+            self.state = stack_update(self.state, chunk, **self.update_kw)
+        self.chunks += 1
+        self._dirty += 1
+        if self._dirty >= self.every:
+            self.commit()
+
+    def commit(self) -> None:
+        """Force a checkpoint of the current state (no-op when clean)."""
+        if self._dirty == 0 and self.manager.latest_step() == self.chunks:
+            return
+        if self.layout == "packed":
+            tree = {"packed": self.state.packed, "rows": self.state.rows}
+        else:
+            tree = {"stack": self.state.stack, "rows": self.state.rows}
+        self.manager.save(self.chunks, tree,
+                          extra={"chunks": self.chunks, "n": self.n,
+                                 "layout": self.layout})
+        self._dirty = 0
+
+    def finalize(self, *, symmetrize: bool = True, out_dtype=None,
+                 guard: bool = False) -> jax.Array:
+        """Commit any uncheckpointed chunks, then the dense Gram (with
+        the output guards when ``guard`` — see ``finalize``)."""
+        self.commit()
+        self.manager.wait()
+        if self.layout == "packed":
+            return finalize(self.state, symmetrize=symmetrize,
+                            out_dtype=out_dtype, guard=guard)
+        return stack_finalize(self.state, self.n, symmetrize=symmetrize,
+                              out_dtype=out_dtype, guard=guard)

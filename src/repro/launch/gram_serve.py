@@ -5,6 +5,13 @@
 Generates a heterogeneous request trace (log-uniform shapes), optionally
 pre-autotunes each bucket, serves it through ``gram.GramEngine`` and
 prints throughput, latency percentiles and the recompile count.
+
+Robustness drills ride the same driver: ``--faults`` arms a
+``runtime.faults`` profile (or set ``REPRO_FAULTS`` in the environment),
+``--verify`` picks the output-guard level, and the retry/deadline knobs
+map straight onto the engine's degradation ladder — e.g.
+
+    ... --faults "poison_output:rate=0.1;exec_fail:rate=0.05" --verify 2
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import time
 import numpy as np
 
 from ..gram import GramEngine, autotune_bucket, bucket_shape
+from ..runtime import faults
 
 
 def make_trace(rng, requests: int, min_dim: int, max_dim: int):
@@ -42,8 +50,26 @@ def main(argv=None):
                     help="pre-autotune every bucket in the trace "
                          "(measured, persists winners)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", default=None, metavar="PROFILE",
+                    help="fault-injection profile, e.g. "
+                         "'poison_output:rate=0.1;exec_fail:rate=0.05' "
+                         "(see repro.runtime.faults)")
+    ap.add_argument("--verify", default="finite",
+                    help="output guards: 'off', 'finite' (NaN/Inf + "
+                         "diagonal scan, default) or an int K (finite "
+                         "scan + K Freivalds probes per result)")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="max executable retries per batch before the "
+                         "batch is failed")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (requests past it fail "
+                         "fast instead of retrying)")
+    ap.add_argument("--backoff-ms", type=float, default=0.0,
+                    help="base retry backoff (doubles per attempt)")
     args = ap.parse_args(argv)
     levels = args.levels if args.levels == "auto" else int(args.levels)
+    verify = args.verify if args.verify in ("off", "finite") \
+        else int(args.verify)
 
     rng = np.random.default_rng(args.seed)
     shapes = make_trace(rng, args.requests, args.min_dim, args.max_dim)
@@ -56,10 +82,17 @@ def main(argv=None):
             print(f"[autotune] {M}x{N}: {entry['mode']} levels="
                   f"{entry['levels']} bk={entry['bk']} ({entry['source']})")
 
+    if args.faults:
+        faults.install(faults.parse_profile(args.faults, seed=args.seed))
+
     eng = GramEngine(slots=args.slots, levels=levels, mode=args.mode,
-                     min_bucket=args.min_bucket)
+                     min_bucket=args.min_bucket, verify=verify,
+                     max_retries=args.retries,
+                     backoff_s=args.backoff_ms / 1e3)
+    deadline = None if args.deadline_ms is None else args.deadline_ms / 1e3
     for m, n in shapes:
-        eng.submit(rng.standard_normal((m, n)).astype(np.float32))
+        eng.submit(rng.standard_normal((m, n)).astype(np.float32),
+                   deadline_s=deadline)
     t0 = time.perf_counter()
     finished = eng.run_to_completion()
     dt = time.perf_counter() - t0
@@ -69,6 +102,13 @@ def main(argv=None):
     print(f"buckets={len(s['buckets'])} compiles={s['compile_count']} "
           f"p50={s['p50_latency_s']*1e3:.1f}ms "
           f"p99={s['p99_latency_s']*1e3:.1f}ms")
+    if args.faults or s["failed"] or s["retries"]:
+        print(f"ok={s['served']} failed={s['failed']} "
+              f"degraded={s['degraded_served']} retries={s['retries']} "
+              f"guard_vetoes={s['guard_failures']} "
+              f"injected={faults.active().count('poison_output') + faults.active().count('exec_fail')}")
+    if args.faults:
+        faults.reset()
     return s
 
 

@@ -1,5 +1,32 @@
-from .trainer import (  # noqa: F401
-    Trainer, TrainState, make_train_step, make_optimizer,
-    StragglerWatchdog, FailureInjector, SimulatedFailure,
-)
-from .serving import ServingEngine, Request  # noqa: F401
+"""Runtime: training loop, serving engines, fault injection.
+
+Exports resolve lazily (PEP 562): ``trainer`` pulls in the full model /
+optimizer / checkpoint stack, and eagerly importing it here would (a) tax
+light consumers like the Gram service's fault hooks and (b) create an
+import cycle ``runtime -> trainer -> optim.shampoo -> gram ->
+runtime.faults``.  ``from repro.runtime import Trainer`` etc. work
+unchanged.
+"""
+_EXPORTS = {
+    "Trainer": "trainer", "TrainState": "trainer",
+    "make_train_step": "trainer", "make_optimizer": "trainer",
+    "StragglerWatchdog": "trainer", "FailureInjector": "trainer",
+    "SimulatedFailure": "trainer",
+    "ServingEngine": "serving", "Request": "serving",
+}
+
+__all__ = [*_EXPORTS, "faults"]
+
+
+def __getattr__(name):
+    import importlib
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    if name == "faults":
+        return importlib.import_module(".faults", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,133 @@
+"""runtime.faults: the injection registry driving the robustness drills."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.runtime import faults
+from repro.runtime.faults import FaultRegistry, FaultSpec, InjectedFault
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor_strike")
+
+
+def test_null_registry_hooks_are_noops():
+    arr = np.ones((4, 4))
+    assert faults.poison("poison_output", "anywhere", arr) is arr
+    assert not faults.fire("mesh_shrink", "anywhere")
+    faults.check_exec("anywhere")          # no raise
+
+
+def test_inject_exec_fail_and_restore():
+    with faults.inject(FaultSpec("exec_fail", site="gram.engine.exec*")):
+        with pytest.raises(InjectedFault):
+            faults.check_exec("gram.engine.exec.local.32x32")
+        # site glob: non-matching sites stay healthy
+        faults.check_exec("gram.autotune.cache")
+    faults.check_exec("gram.engine.exec.local.32x32")   # registry restored
+
+
+def test_inject_nests():
+    with faults.inject(FaultSpec("exec_fail")) as outer:
+        with faults.inject(FaultSpec("mesh_shrink")) as inner:
+            assert faults.active() is inner
+            faults.check_exec("x")          # exec_fail not armed inside
+            assert faults.fire("mesh_shrink", "x")
+        assert faults.active() is outer
+        with pytest.raises(InjectedFault):
+            faults.check_exec("x")
+
+
+def test_times_budget_exhausts():
+    with faults.inject(FaultSpec("exec_fail", times=2)) as reg:
+        for _ in range(2):
+            with pytest.raises(InjectedFault):
+                faults.check_exec("s")
+        faults.check_exec("s")              # budget spent
+        assert reg.count("exec_fail") == 2
+
+
+def test_poison_copies_never_mutates():
+    arr = np.zeros((3, 16, 16), np.float32)
+    with faults.inject(FaultSpec("poison_output", value=math.inf)) as reg:
+        out = faults.poison("poison_output", "s", arr)
+    assert out is not arr
+    assert np.isfinite(arr).all(), "input mutated in place"
+    assert np.isinf(out).any()
+    assert reg.events[-1].detail.startswith("tile[")
+
+
+def test_poison_finite_value_for_silent_corruption():
+    arr = np.ones((16, 16), np.float32)
+    with faults.inject(FaultSpec("poison_output", value=7.5)):
+        out = faults.poison("poison_output", "s", arr)
+    assert np.isfinite(out).all()
+    assert (out == 7.5).any() and not (out == 7.5).all()  # one <=8x8 tile
+
+
+def test_rate_is_seeded_and_reproducible():
+    def trace(seed):
+        reg = FaultRegistry([FaultSpec("exec_fail", rate=0.3)], seed=seed)
+        return [reg.match("exec_fail", "s") is not None for _ in range(64)]
+    a, b, c = trace(3), trace(3), trace(4)
+    assert a == b
+    assert a != c
+    assert 0 < sum(a) < 64
+
+
+def test_corrupt_file_truncates_to_half(tmp_path):
+    p = tmp_path / "cache.json"
+    payload = json.dumps({"entries": {str(i): i for i in range(50)}})
+    p.write_text(payload)
+    with faults.inject(FaultSpec("cache_corrupt")):
+        assert faults.corrupt_file("gram.autotune.cache", p)
+    raw = p.read_text()
+    assert len(raw) == len(payload) // 2
+    with pytest.raises(ValueError):
+        json.loads(raw)
+
+
+def test_parse_profile_roundtrip():
+    reg = faults.parse_profile(
+        "poison_output:rate=0.1,value=inf,site=gram.*;"
+        "exec_fail:rate=0.05,times=3;exec_delay:delay=0.5", seed=9)
+    kinds = [s.kind for s in reg.specs]
+    assert kinds == ["poison_output", "exec_fail", "exec_delay"]
+    assert reg.specs[0].rate == 0.1 and math.isinf(reg.specs[0].value)
+    assert reg.specs[0].site == "gram.*"
+    assert reg.specs[1].times == 3
+    assert reg.specs[2].delay == 0.5
+
+
+def test_parse_profile_rejects_unknown_key():
+    with pytest.raises(ValueError, match="unknown fault spec key"):
+        faults.parse_profile("exec_fail:severity=11")
+
+
+def test_env_profile_activates_and_tracks_value(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "exec_fail:site=env.*")
+    with pytest.raises(InjectedFault):
+        faults.check_exec("env.site")
+    faults.check_exec("other.site")
+    monkeypatch.setenv(faults.ENV_VAR, "mesh_shrink:times=1")
+    faults.check_exec("env.site")           # re-parsed on value change
+    assert faults.fire("mesh_shrink", "env.site")
+    assert not faults.fire("mesh_shrink", "env.site")
+
+
+def test_installed_registry_overrides_env(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "exec_fail")
+    with faults.inject():                   # nothing armed
+        faults.check_exec("s")
+    with pytest.raises(InjectedFault):
+        faults.check_exec("s")              # env profile back in force

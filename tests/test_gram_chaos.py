@@ -1,0 +1,373 @@
+"""Robustness drills: GramEngine under injected faults, the degradation
+ladder, crash-recoverable streaming, and corrupt-artifact recovery
+(DESIGN.md §13)."""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.gram import (CheckpointedGramStream, GramEngine,
+                        VerificationError, freivalds_gram)
+from repro.gram import autotune as gram_autotune
+from repro.gram import stream as gram_stream
+from repro.runtime import faults
+from repro.runtime.faults import FaultSpec
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _trace(rng, requests, lo=5, hi=60):
+    shapes = [(int(rng.integers(lo, hi)), int(rng.integers(lo, hi // 2 + 2)))
+              for _ in range(requests)]
+    return [rng.standard_normal(s).astype(np.float32) for s in shapes]
+
+
+# ---------------------------------------------------------------------------
+# satellite (b): exception-safe step — a failing executable never wedges
+# ---------------------------------------------------------------------------
+
+def test_failing_executable_drains_queue_as_failed():
+    rng = np.random.default_rng(0)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16, max_retries=1)
+    uids = [eng.submit(a) for a in _trace(rng, 6)]
+    with faults.inject(FaultSpec("exec_fail", site="gram.engine.exec*")):
+        finished = eng.run_to_completion()
+    assert not eng.waiting, "queue did not drain"
+    assert {r.uid for r in finished} == set(uids)
+    for r in finished:
+        assert r.status == "failed" and not r.result
+        assert "InjectedFault" in r.error
+    assert eng.stats()["failed"] == 6
+    # and the engine recovers once the fault clears
+    a = rng.standard_normal((20, 10)).astype(np.float32)
+    uid = eng.submit(a)
+    (r,) = eng.step()
+    assert r.uid == uid and r.status == "ok"
+
+
+def test_step_survives_real_exception_not_just_injected():
+    eng = GramEngine(slots=2, levels=0, min_bucket=16, max_retries=0)
+    eng.submit(np.ones((16, 16), np.float32))
+    eng._local_executable = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("xla died"))
+    (r,) = eng.run_to_completion()
+    assert r.status == "failed" and "xla died" in r.error
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the 10% chaos trace — 100% served, zero NaN, probes pass
+# ---------------------------------------------------------------------------
+
+def test_ten_percent_fault_trace_serves_everything_clean():
+    rng = np.random.default_rng(1)
+    arrays = _trace(rng, 24)
+    eng = GramEngine(slots=4, levels=1, leaf=8, min_bucket=16,
+                     verify=2, max_retries=6, breaker_threshold=2,
+                     verify_seed=5)
+    uid_to_a = {eng.submit(a): a for a in arrays}
+    specs = [
+        FaultSpec("poison_output", rate=0.10),              # NaN tiles
+        FaultSpec("poison_output", rate=0.10, value=2.5),   # silent finite
+        FaultSpec("exec_fail", rate=0.10, site="gram.engine.exec*"),
+    ]
+    with faults.inject(*specs, seed=7) as reg:
+        finished = eng.run_to_completion()
+    assert len(reg.events) > 0, "chaos trace injected nothing"
+    assert len(finished) == len(arrays)
+    for r in finished:
+        assert r.status == "ok", (r.uid, r.error)
+        assert np.isfinite(r.result).all(), "served a NaN/Inf result"
+        # independent Freivalds probe with a fresh rng on every result
+        passed, err = freivalds_gram(
+            uid_to_a[r.uid], r.result, probes=4,
+            rng=np.random.default_rng(100 + r.uid))
+        assert passed, (r.uid, err)
+    stats = eng.stats()
+    assert stats["served"] == len(arrays) and stats["failed"] == 0
+    assert stats["retries"] > 0, "10% chaos should have forced retries"
+
+
+def test_guard_vetoes_silent_corruption_and_recovers():
+    """A finite poisoned output passes the NaN scan; only the Freivalds
+    probe catches it — the batch retries on clean data and serves."""
+    rng = np.random.default_rng(2)
+    # fill the bucket exactly (16x16, slots=1): the poisoned tile cannot
+    # hide in padding that gets sliced away
+    a = rng.standard_normal((16, 16)).astype(np.float32)
+    eng = GramEngine(slots=1, levels=0, min_bucket=16, verify=2,
+                     max_retries=3)
+    eng.submit(a)
+    with faults.inject(FaultSpec("poison_output", value=5.0, times=1)):
+        (r,) = eng.run_to_completion()
+    assert r.status == "ok"
+    assert eng.stats()["guard_failures"] == 1
+    want = a.astype(np.float64).T @ a.astype(np.float64)
+    np.testing.assert_allclose(r.result, want, rtol=1e-4, atol=1e-4)
+
+
+def test_finite_default_guard_catches_nan_without_probes():
+    rng = np.random.default_rng(3)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16)  # verify="finite"
+    eng.submit(rng.standard_normal((20, 10)).astype(np.float32))
+    with faults.inject(FaultSpec("poison_output", times=1)):
+        (r,) = eng.run_to_completion()
+    assert r.status == "ok" and np.isfinite(r.result).all()
+    assert eng.stats()["guard_failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the degradation ladder: breaker trips, rung escalates, service degrades
+# ---------------------------------------------------------------------------
+
+def test_breaker_escalates_to_reference_mode():
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((20, 10)).astype(np.float32)
+    eng = GramEngine(slots=2, levels=1, leaf=8, min_bucket=16,
+                     max_retries=4, breaker_threshold=1)
+    eng.submit(a)
+    # two failures: rung 0 -> 1 (quarantine) -> 2 (reference mode);
+    # the third attempt succeeds degraded
+    with faults.inject(FaultSpec("exec_fail", times=2,
+                                 site="gram.engine.exec*")):
+        (r,) = eng.run_to_completion()
+    assert r.status == "ok" and r.degraded
+    assert r.served_by == "local:rung2"
+    assert r.attempts == 3
+    key = (32, 16, "float32", "cols")
+    assert eng._health[key].rung == 2
+    assert len(eng._health[key].quarantined) == 2
+    assert eng.stats()["quarantined"][str(key)]
+    want = a.astype(np.float64).T @ a.astype(np.float64)
+    np.testing.assert_allclose(r.result, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rung_is_sticky_but_counts_reset_on_success():
+    rng = np.random.default_rng(5)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16, max_retries=4,
+                     breaker_threshold=1)
+    eng.submit(rng.standard_normal((16, 16)).astype(np.float32))
+    with faults.inject(FaultSpec("exec_fail", times=1,
+                                 site="gram.engine.exec*")):
+        eng.run_to_completion()
+    key = (16, 16, "float32", "cols")
+    assert eng._health[key].rung == 1          # sticky after recovery
+    assert eng._health[key].consecutive_failures == 0
+    uid = eng.submit(rng.standard_normal((16, 16)).astype(np.float32))
+    (r,) = eng.run_to_completion()[-1:]
+    assert r.uid == uid and r.status == "ok" and r.degraded
+
+
+def test_deadline_fails_fast():
+    rng = np.random.default_rng(6)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16)
+    ok_uid = eng.submit(rng.standard_normal((16, 16)).astype(np.float32))
+    late = eng.submit(rng.standard_normal((16, 16)).astype(np.float32),
+                      deadline_s=0.0)
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert done[ok_uid].status == "ok"
+    assert done[late].status == "failed"
+    assert "deadline" in done[late].error
+
+
+def test_exec_delay_injection_slows_but_serves():
+    rng = np.random.default_rng(7)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16)
+    eng.submit(rng.standard_normal((16, 16)).astype(np.float32))
+    with faults.inject(FaultSpec("exec_delay", delay=0.05, times=1)):
+        (r,) = eng.run_to_completion()
+    assert r.status == "ok"
+    assert r.latency_s >= 0.05
+
+
+# ---------------------------------------------------------------------------
+# satellite (a): corrupted autotune cache never aborts serving
+# ---------------------------------------------------------------------------
+
+def test_truncated_autotune_cache_warns_once_and_serves(tmp_path,
+                                                        monkeypatch):
+    p = tmp_path / "gram_autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(p))
+    # a real entry, then truncate the file mid-JSON
+    gram_autotune._save_entry("k", {"mode": "reference"}, p)
+    raw = p.read_text()
+    p.write_text(raw[:len(raw) // 2])
+    gram_autotune._memo.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert gram_autotune.load_cache(p) == {}
+        assert gram_autotune.load_cache(p) == {}   # memoized: no 2nd warn
+    corrupt = [x for x in w if "corrupt" in str(x.message)]
+    assert len(corrupt) == 1
+    # serving straight through the poisoned cache path works
+    eng = GramEngine(slots=2, levels=0, min_bucket=16)
+    eng.submit(np.ones((16, 16), np.float32))
+    (r,) = eng.run_to_completion()
+    assert r.status == "ok"
+    # the next save repairs the file wholesale
+    gram_autotune._save_entry("k2", {"mode": "reference"}, p)
+    assert "k2" in gram_autotune.load_cache(p)
+
+
+def test_cache_corrupt_fault_exercises_recovery(tmp_path, monkeypatch):
+    p = tmp_path / "gram_autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(p))
+    gram_autotune._save_entry("k", {"mode": "reference"}, p)
+    gram_autotune._memo.clear()
+    with faults.inject(FaultSpec("cache_corrupt",
+                                 site="gram.autotune.cache")):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            assert gram_autotune.load_cache(p) == {}
+
+
+# ---------------------------------------------------------------------------
+# crash-recoverable streaming: kill mid-trace, resume bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout,kw", [
+    ("packed", dict(levels=1, leaf=8)),
+    ("stack", dict(levels=1, block=8)),
+])
+def test_stream_resumes_bit_exact_after_kill(tmp_path, layout, kw):
+    rng = np.random.default_rng(8)
+    chunks = [rng.standard_normal((6, 12)).astype(np.float32)
+              for _ in range(7)]
+
+    s_ref = CheckpointedGramStream(12, str(tmp_path / "ref"), every=2,
+                                   layout=layout, **kw)
+    for c in chunks:
+        s_ref.update(c)
+    ref = np.asarray(s_ref.finalize(guard=True))
+
+    # "crash" after 5 chunks: last commit at chunk 4, chunk 5 lost
+    wd = str(tmp_path / "wal")
+    s1 = CheckpointedGramStream(12, wd, every=2, layout=layout, **kw)
+    for c in chunks[:5]:
+        s1.update(c)
+    del s1
+
+    s2 = CheckpointedGramStream(12, wd, every=2, layout=layout, **kw)
+    assert s2.resumed and s2.next_chunk == 4
+    for i, c in enumerate(chunks):
+        if i < s2.next_chunk:
+            continue
+        s2.update(c)
+    out = np.asarray(s2.finalize())
+    assert out.dtype == ref.dtype
+    assert np.array_equal(ref, out), "resumed stream is not bit-exact"
+
+
+def test_stream_checkpoint_rejects_mismatched_geometry(tmp_path):
+    s = CheckpointedGramStream(12, str(tmp_path), every=1, levels=0)
+    s.update(np.ones((4, 12), np.float32))
+    with pytest.raises(ValueError, match="n=12"):
+        CheckpointedGramStream(16, str(tmp_path), every=1, levels=0)
+    with pytest.raises(ValueError, match="packed"):
+        CheckpointedGramStream(12, str(tmp_path), layout="stack")
+
+
+def test_stream_finalize_guard_raises_on_poisoned_state():
+    st = gram_stream.init(8)
+    st = gram_stream.update(st, np.ones((4, 8), np.float32), levels=0)
+    bad = gram_stream.GramStream(
+        packed=st.packed.at[3].set(np.nan), rows=st.rows)
+    with pytest.raises(VerificationError, match="non-finite"):
+        gram_stream.finalize(bad, guard=True)
+    gram_stream.finalize(st, guard=True)       # clean state passes
+
+
+def test_checkpoint_restore_skips_corrupt_latest(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, {"x": np.arange(4)})
+    mgr.save(2, {"x": np.arange(8)})
+    # rot the newest committed checkpoint
+    npz = os.path.join(str(tmp_path), "step_00000002", "state.npz")
+    with open(npz, "wb") as f:
+        f.write(b"not a zipfile")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        state, meta = mgr.restore()
+    assert meta["step"] == 1
+    assert np.array_equal(state["x"], np.arange(4))
+    assert any("unreadable" in str(x.message) for x in w)
+    # explicitly requested corrupt step still raises
+    with pytest.raises(Exception):
+        mgr.restore(step=2)
+
+
+# ---------------------------------------------------------------------------
+# satellite (c): mesh shrink mid-bfs25d -> scheme fallback chain
+# ---------------------------------------------------------------------------
+
+def test_scheme_fallback_chain_orders_and_filters():
+    from types import SimpleNamespace as NS
+    from repro.core.distributed import scheme_fallback_chain
+    mesh = NS(shape={"rep": 2, "data": 2, "model": 2},
+              axis_names=("rep", "data", "model"))
+    axes = dict(row_axis="data", col_axis="model", rep_axis="rep")
+    chain = scheme_fallback_chain(128, 64, mesh, scheme="bfs25d", **axes)
+    assert chain == ["bfs25d", "ring", "reducescatter", "allreduce"]
+    # auto: cost-model head, every feasible scheme present exactly once
+    auto = scheme_fallback_chain(128, 64, mesh, scheme="auto", **axes)
+    assert sorted(auto) == sorted(chain) and len(set(auto)) == len(auto)
+    # infeasible pin: the pinned scheme is absent, the rest still degrade
+    mesh3 = NS(shape={"data": 2, "model": 3},
+               axis_names=("data", "model"))
+    chain3 = scheme_fallback_chain(
+        128, 64, mesh3, scheme="ring",
+        row_axis="data", col_axis="model", rep_axis=None)
+    assert "ring" not in chain3 and chain3 == ["reducescatter", "allreduce"]
+    # nothing feasible -> empty (engine goes local)
+    none = scheme_fallback_chain(127, 63, mesh, scheme="auto", **axes)
+    assert none == []
+
+
+@pytest.mark.multidevice(8)
+def test_mesh_shrink_falls_back_through_schemes(multidevice_count):
+    """Drop a replica group mid-run: one request serves over the full
+    mesh via bfs25d; then an injected mesh_shrink plus a bfs25d
+    executable failure force the fallback chain — the next request
+    completes on the surviving sub-mesh via the half-ring scheme, with
+    a parity-correct Gram."""
+    from repro.launch.mesh import make_gram_mesh
+
+    rng = np.random.default_rng(9)
+    mesh = make_gram_mesh(8, rep=2, ring=2)    # (rep=2, data=2, model=2)
+    eng = GramEngine(slots=2, levels=1, leaf=8, min_bucket=16,
+                     mesh=mesh, dist_scheme="bfs25d",
+                     dist_threshold=128 * 64, verify=2,
+                     max_retries=6, breaker_threshold=1)
+
+    def check(r, a):
+        want = a.astype(np.float64).T @ a.astype(np.float64)
+        err = np.abs(r.result - want).max() / np.abs(want).max()
+        assert r.status == "ok" and err < 1e-4, (r.status, r.error, err)
+
+    a1 = rng.standard_normal((120, 60)).astype(np.float32)   # -> 128x64
+    eng.submit(a1)
+    (r1,) = eng.run_to_completion()
+    check(r1, a1)
+    assert r1.served_by == "dist:bfs25d"
+
+    a2 = rng.standard_normal((120, 60)).astype(np.float32)
+    u2 = eng.submit(a2)
+    with faults.inject(
+            FaultSpec("mesh_shrink", times=1),
+            FaultSpec("exec_fail", site="*bfs25d*")) as reg:
+        (r2,) = [r for r in eng.run_to_completion() if r.uid == u2]
+    check(r2, a2)
+    assert reg.count("mesh_shrink") == 1
+    assert r2.served_by == "dist:ring"         # one rung down the ladder
+    assert r2.degraded
+    stats = eng.stats()
+    assert stats["mesh_changes"] == 1
+    assert dict(eng.mesh.shape) == {"rep": 1, "data": 2, "model": 2}
+    assert stats["served"] == 2 and stats["failed"] == 0

@@ -1,0 +1,116 @@
+"""gram.verify: the Freivalds-style output guards for served Grams."""
+import numpy as np
+import pytest
+
+from repro.core.symmetry import pack_tril
+from repro.gram import verify
+from repro.gram.verify import (VerificationError, check_packed_state,
+                               freivalds_gram, verify_gram)
+
+
+@pytest.fixture
+def a():
+    return np.random.default_rng(0).standard_normal((40, 24)) \
+        .astype(np.float32)
+
+
+def _gram(a):
+    a64 = a.astype(np.float64)
+    return a64.T @ a64
+
+
+def test_correct_gram_passes(a):
+    v = verify_gram(a, _gram(a), probes=4)
+    assert v.ok and v.finite and v.diag_ok and v.freivalds_ok
+    assert v.probes == 4
+    assert v.reason() == "ok"
+
+
+def test_tril_only_gram_passes(a):
+    v = verify_gram(a, np.tril(_gram(a)), probes=4, full=False)
+    assert v.ok
+
+
+def test_rows_gram_identity(a):
+    a64 = a.astype(np.float64)
+    assert verify_gram(a, a64 @ a64.T, probes=4, gram_of="rows").ok
+
+
+def test_nan_caught_and_skips_probes(a):
+    c = _gram(a)
+    c[3, 5] = np.nan
+    v = verify_gram(a, c, probes=4)
+    assert not v.ok and not v.finite
+    assert v.probes == 0, "probes must not run over NaN data"
+    assert "non-finite" in v.reason()
+
+
+def test_negative_diagonal_caught(a):
+    c = _gram(a)
+    c[2, 2] = -abs(c).max()
+    v = verify_gram(a, c, probes=0)
+    assert not v.ok and v.finite and not v.diag_ok
+    assert "diagonal" in v.reason()
+
+
+def test_freivalds_catches_finite_silent_corruption(a):
+    """A single corrupted entry — finite, plausible magnitude, symmetric,
+    invisible to the NaN scan — is caught by the identity probe."""
+    c = _gram(a)
+    c[7, 3] += 0.5 * abs(c).max()
+    c[3, 7] = c[7, 3]                     # keep it symmetric: hard mode
+    passed, err = freivalds_gram(a, c, probes=4)
+    assert not passed and err > 1e-3
+    v = verify_gram(a, c, probes=4)
+    assert not v.ok and "freivalds" in v.reason()
+
+
+def test_freivalds_probabilistic_bound(a):
+    """One Rademacher probe misses a rank-one corruption with probability
+    <= 1/2; across many seeded trials the detection rate must clear it."""
+    c = _gram(a)
+    c[5, 9] += abs(c).max()
+    c[9, 5] = c[5, 9]
+    hits = sum(
+        not freivalds_gram(a, c, probes=1,
+                           rng=np.random.default_rng(t))[0]
+        for t in range(64))
+    assert hits >= 32, f"detected {hits}/64 < the 1/2 Freivalds bound"
+
+
+def test_zero_matrix_passes():
+    a = np.zeros((8, 6), np.float32)
+    assert verify_gram(a, np.zeros((6, 6)), probes=2).ok
+
+
+def test_shape_mismatch_rejected(a):
+    with pytest.raises(ValueError):
+        freivalds_gram(a, np.zeros((5, 5)))
+
+
+def test_default_rtol_by_dtype():
+    assert verify.default_rtol(np.float32) == pytest.approx(1e-4)
+    assert verify.default_rtol(np.float64) == pytest.approx(1e-10)
+    assert verify.default_rtol("bfloat16") == pytest.approx(5e-2)
+    assert verify.default_rtol(np.float16) == pytest.approx(5e-2)
+
+
+def test_check_packed_state_ok_and_corrupt(a):
+    packed = np.asarray(pack_tril(_gram(a)))
+    check_packed_state(packed, 24)         # clean state passes
+
+    bad = packed.copy()
+    bad[10] = np.inf
+    with pytest.raises(VerificationError, match="non-finite"):
+        check_packed_state(bad, 24)
+
+    # corrupt exactly one *diagonal* packed entry (row r at r(r+3)/2)
+    r = 5
+    bad2 = packed.copy()
+    bad2[r * (r + 3) // 2] = -1e6
+    with pytest.raises(VerificationError, match="negative diagonal"):
+        check_packed_state(bad2, 24)
+    # the same magnitude off-diagonal is legal
+    ok = packed.copy()
+    ok[r * (r + 3) // 2 - 1] = -1e6
+    check_packed_state(ok, 24)
