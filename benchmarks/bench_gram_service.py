@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from repro.core.ata import ata
 from repro.gram import GramEngine, bucket_shape
 from repro.launch.gram_serve import make_trace
+from repro.obs import trace as obs_trace
+from repro.obs.drift import DriftDetector
 from repro.runtime import faults
 from .common import write_json
 
@@ -168,6 +170,73 @@ def _fault_sweep(shapes, arrays, slots, requests):
     return sweep, overhead
 
 
+def _tracer_overhead(shapes, arrays, slots, requests):
+    """Flight-recorder cost, two ways (DESIGN.md §14).
+
+    A/B walls (tracer off vs enabled, best of 3) record what turning the
+    recorder ON costs.  The acceptance bound is on the *disabled* path —
+    but the disabled path IS the baseline path, so a wall-clock A/B of
+    "off vs off" is pure noise; the honest bound is derived:
+    (events/request x measured per-disabled-hook cost) over the
+    per-request wall, which must stay < 2%.
+    """
+    obs_trace.set_tracer(None)
+    wall_off = min(_serve_trace(shapes, arrays, slots, verify="finite")[1]
+                   for _ in range(3))
+    tracer = obs_trace.set_tracer(obs_trace.Tracer(enabled=True))
+    try:
+        walls_on = [_serve_trace(shapes, arrays, slots, verify="finite")[1]
+                    for _ in range(3)]
+    finally:
+        obs_trace.set_tracer(None)
+    hook_s = obs_trace.disabled_hook_cost()
+    events_per_req = len(tracer.events()) / (3 * requests) \
+        + tracer.dropped / (3 * requests)
+    derived = hook_s * events_per_req / (wall_off / requests)
+    out = {
+        "wall_off_s": wall_off,
+        "wall_on_s": min(walls_on),
+        "enabled_overhead_vs_off": min(walls_on) / wall_off - 1.0,
+        "events_per_request": events_per_req,
+        "disabled_hook_cost_s": hook_s,
+        "disabled_overhead_fraction": derived,
+        "acceptance_disabled_overhead_lt_2pct": bool(derived < 0.02),
+    }
+    print(f"[gram_service] tracer: enabled {out['enabled_overhead_vs_off']:+.1%} "
+          f"vs off; disabled path {derived:.4%} derived "
+          f"({events_per_req:.1f} events/req x {hook_s*1e9:.0f}ns)")
+    return out
+
+
+def _drift_verdicts(eng):
+    """Drift-detector verdicts: the live engine's wall-channel state from
+    the warm pass, plus a deterministic falsified-fixture check — three
+    synthetic buckets whose measured/predicted ratios share one machine
+    constant except one bucket running 5x off its model; the detector
+    must flag exactly that bucket."""
+    det = DriftDetector(theta=2.0, min_samples=3)
+    for _ in range(4):
+        det.observe("64x64/float32/ata", measured=1.0, predicted=1e6,
+                    channel="wall")
+        det.observe("128x128/float32/ata", measured=4.0, predicted=4e6,
+                    channel="wall")
+        # falsified: model says 16e6 bytes, "machine" runs 5x slower
+        # than that prediction implies
+        det.observe("256x256/float32/ata", measured=80.0, predicted=16e6,
+                    channel="wall")
+    flagged = [str(k) for k in det.stale_keys("wall")]
+    verdict = {
+        "live": eng.drift.snapshot(),
+        "synthetic_flagged": flagged,
+        "acceptance_flags_only_falsified":
+            flagged == ["256x256/float32/ata"],
+    }
+    print(f"[gram_service] drift: synthetic falsified bucket flagged="
+          f"{flagged} (live findings: "
+          f"{len(verdict['live']['findings'])})")
+    return verdict
+
+
 def run(quick: bool = False):
     requests = 16 if quick else 64
     slots = 4
@@ -204,6 +273,10 @@ def run(quick: bool = False):
     # -- fault-rate sweep + guard overhead ----------------------------------
     fault_sweep, guard_overhead = _fault_sweep(shapes, arrays, slots,
                                                requests)
+
+    # -- flight recorder: tracer overhead + drift verdicts ------------------
+    tracer_overhead = _tracer_overhead(shapes, arrays, slots, requests)
+    drift_verdicts = _drift_verdicts(eng2)
 
     speedup_cold = seq_cold_wall / wall_cold
     speedup_warm = seq_warm_wall / wall_warm
@@ -259,11 +332,17 @@ def run(quick: bool = False):
         },
         "fault_sweep": fault_sweep,
         "guard_overhead": guard_overhead,
+        "tracer_overhead": tracer_overhead,
+        "drift": drift_verdicts,
         "speedup_vs_status_quo": speedup_cold,
         "speedup_warm_batching_only": speedup_warm,
         "acceptance_recompiles_le_buckets": ok_recompiles,
         "acceptance_speedup_ge_2x": speedup_cold >= 2.0,
         "acceptance_faults_all_served": ok_faults,
+        "acceptance_tracer_overhead_lt_2pct":
+            tracer_overhead["acceptance_disabled_overhead_lt_2pct"],
+        "acceptance_drift_flags_only_falsified":
+            drift_verdicts["acceptance_flags_only_falsified"],
     }
     path = write_json("BENCH_gram_service.json", payload)
     print(f"[gram_service] wrote {path}")

@@ -489,10 +489,14 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
                                leaf=leaf, variant=variant, mode=mode,
                                out_dtype=out_dtype, interpret=interpret)
         out_spec = P() if scheme == "allreduce" else P(row_axis)
-        return shard_map(
-            fn, mesh=mesh, in_specs=P(row_axis, None), out_specs=out_spec,
-            **unchecked,
-        )(a)
+        # named_scope: the resolved scheme lands in the HLO metadata, so
+        # a profile (or HLO census) attributes traffic to the scheme the
+        # cost model actually picked
+        with jax.named_scope(f"gram_dist:{scheme}"):
+            return shard_map(
+                fn, mesh=mesh, in_specs=P(row_axis, None),
+                out_specs=out_spec, **unchecked,
+            )(a)
 
     if scheme in ("ring", "bfs25d"):
         if col_axis is None:
@@ -518,13 +522,15 @@ def distributed_gram(a: jax.Array, mesh: Mesh, *,
                                    col_size=T, rep_size=c,
                                    interpret=interpret)
 
-        stacks = shard_map(
-            body, mesh=mesh,
-            in_specs=P(row_axis, col_axis),
-            # stack: (half+1, n/T, n/T) per device -> gather cols of blocks
-            out_specs=P(None, None, col_axis),
-            **unchecked,
-        )(a)
+        with jax.named_scope(f"gram_dist:{scheme}"):
+            stacks = shard_map(
+                body, mesh=mesh,
+                in_specs=P(row_axis, col_axis),
+                # stack: (half+1, n/T, n/T) per device -> gather cols of
+                # blocks
+                out_specs=P(None, None, col_axis),
+                **unchecked,
+            )(a)
         if not assemble:
             return stacks        # production: circulant layout, sharded
         # stacks: (half+1, n/T, n) — device c's column of blocks at slot c.

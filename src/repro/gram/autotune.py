@@ -51,11 +51,24 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as _metrics
+
 __all__ = [
     "bucket_shape", "candidate_space", "model_score", "autotune", "lookup",
     "resolve_block_defaults", "load_cache", "default_cache_path",
-    "DEFAULT_BLOCK",
+    "invalidate", "DEFAULT_BLOCK",
 ]
+
+def _cache_event(outcome: str, amount: float = 1.0) -> None:
+    """Count one cache-lifecycle event: "hit"/"miss" per lookup,
+    "corrupt" (unparseable file degraded to empty), "stale_dropped"
+    (pre-v2 entries dropped wholesale at load), "persist" (entry
+    written), "invalidate" (winner dropped — drift findings land here).
+    Resolved from the live registry per call so a test-time registry
+    reset cannot orphan the counter."""
+    _metrics.counter("gram_autotune_cache_total",
+                     "autotune cache events by outcome").inc(
+        amount, outcome=outcome)
 
 DEFAULT_BLOCK = 256
 # v2: cache keys gained the jax-version segment (see _key) — a winner
@@ -234,6 +247,7 @@ def load_cache(path: Optional[os.PathLike] = None) -> dict:
         # let autotune repopulate (the migration path)
         if not isinstance(raw, dict) or raw.get("version", 0) \
                 < _CACHE_VERSION:
+            _cache_event("stale_dropped", len(entries) or 1)
             entries = {}
     except OSError:
         entries = {}
@@ -243,6 +257,7 @@ def load_cache(path: Optional[os.PathLike] = None) -> dict:
             f"autotune cache {p} is corrupt ({e}); ignoring it and "
             f"serving with untuned defaults — the next autotune run "
             f"rewrites it", stacklevel=2)
+        _cache_event("corrupt")
         entries = {}
     _memo.clear()           # one live file snapshot is enough
     _memo[memo_key] = entries
@@ -259,7 +274,35 @@ def _save_entry(key: str, entry: dict, path: Optional[os.PathLike]) -> Path:
         json.dump({"version": _CACHE_VERSION, "entries": entries}, f,
                   indent=1, sort_keys=True)
     os.replace(tmp, p)
+    _cache_event("persist")
     return p
+
+
+def invalidate(m: int, n: int, *, dtype: str = "float32",
+               kind: str = "ata", backend: Optional[str] = None,
+               min_side: int = 32,
+               cache_path: Optional[os.PathLike] = None) -> bool:
+    """Drop the persisted winner for the bucket containing (m, n) —
+    the action a cost-model drift finding maps to
+    (``GramEngine.invalidate_drifted``): the entry was a measurement of
+    conditions that no longer hold, so the next autotune re-measures.
+    Returns whether an entry existed."""
+    backend = backend or jax.default_backend()
+    M, N = bucket_shape(m, n, min_side=min_side)
+    key = _key(backend, str(dtype), kind, M, N)
+    p = Path(cache_path) if cache_path is not None else default_cache_path()
+    entries = dict(load_cache(p))
+    if key not in entries:
+        return False
+    del entries[key]
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        json.dump({"version": _CACHE_VERSION, "entries": entries}, f,
+                  indent=1, sort_keys=True)
+    os.replace(tmp, p)
+    _cache_event("invalidate")
+    return True
 
 
 def lookup(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
@@ -270,7 +313,9 @@ def lookup(m: int, n: int, *, dtype: str = "float32", kind: str = "ata",
     threads its ``min_bucket`` here)."""
     backend = backend or jax.default_backend()
     M, N = bucket_shape(m, n, min_side=min_side)
-    return load_cache(cache_path).get(_key(backend, str(dtype), kind, M, N))
+    hit = load_cache(cache_path).get(_key(backend, str(dtype), kind, M, N))
+    _cache_event("hit" if hit is not None else "miss")
+    return hit
 
 
 def resolve_block_defaults(kind: str, m: int, n: int, dtype,

@@ -57,12 +57,25 @@ executable is an outage.  Every batch therefore runs inside a
 Requests that exhaust the ladder are marked ``status="failed"`` with the
 error preserved — ``step()`` never propagates an executable exception,
 so one poisoned bucket cannot wedge ``run_to_completion``.
+
+Flight recorder (DESIGN.md §14).  The full request lifecycle — submit →
+queue-wait → batch → compile → execute (local or ``dist:scheme``) →
+verify → retry/backoff → rung transition → done — emits request-scoped
+spans and instants through ``obs.trace`` (one Perfetto-loadable
+timeline, shared with ``runtime.faults`` firings and guard vetoes), every
+serving count lands in the ``obs.metrics`` registry labeled by
+(engine, bucket, served_by), and each successful batch feeds an
+``obs.drift.DriftDetector`` comparing measured executable wall clock
+(and, at compile time, HLO-census traffic) against the
+``cost_model``/traffic-model predictions — ``stats()["drift"]`` surfaces
+buckets whose autotuned winner has drifted from its model, and
+``invalidate_drifted()`` drops those winners from the autotune cache.
 """
 from __future__ import annotations
 
 import itertools
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -70,11 +83,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ata import ata, ata_full
+from ..core.ata import ata, ata_full, ata_levels_for
 from ..core.distributed import (default_gram_axes, distributed_gram,
                                 feasible_schemes, scheme_fallback_chain,
                                 shrink_mesh)
+from ..core.strassen import AUTO_MAX_LEVELS, resolve_mode
 from ..core.symmetry import symmetrize_from_lower
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
+from ..obs.drift import DriftDetector
 from ..runtime import faults as _faults
 from . import autotune as _autotune
 from . import verify as _verify
@@ -142,6 +159,8 @@ _LOCAL_MAX_RUNG = 3
 class GramEngine:
     """Multi-tenant batched Gram service (see module docstring)."""
 
+    _ids = itertools.count()   # per-process engine label allocator
+
     def __init__(self, *, slots: int = 4, levels: Union[int, str] = 1,
                  leaf: int = 256, variant: str = "strassen",
                  mode: str = "auto", block: Optional[int] = None,
@@ -154,7 +173,9 @@ class GramEngine:
                  verify_rtol: Optional[float] = None,
                  verify_seed: int = 0,
                  max_retries: int = 3, backoff_s: float = 0.0,
-                 breaker_threshold: int = 2):
+                 breaker_threshold: int = 2,
+                 history_cap: int = 1024, drift_theta: float = 2.0,
+                 drift: Optional[DriftDetector] = None):
         self.slots = slots
         self.levels, self.leaf, self.variant = levels, leaf, variant
         self.mode, self.block = mode, block
@@ -187,7 +208,12 @@ class GramEngine:
         # bucket key -> FIFO of waiting requests (insertion-ordered so
         # tick scheduling is deterministic)
         self.waiting: "OrderedDict[tuple, List[GramRequest]]" = OrderedDict()
-        self.finished: List[GramRequest] = []
+        # finished history is CAPPED: the flight-recorder discipline —
+        # stats() reads the metrics histograms, not this buffer, so a
+        # long-running service neither grows without bound nor re-sorts
+        # its whole past on every scrape
+        self.history_cap = max(1, history_cap)
+        self.finished: "deque[GramRequest]" = deque(maxlen=self.history_cap)
         self._executables: Dict[tuple, object] = {}
         self._health: Dict[tuple, BucketHealth] = {}
         self._dist_chains: Dict[tuple, List[str]] = {}
@@ -200,6 +226,42 @@ class GramEngine:
         self.guard_failures = 0
         self.mesh_changes = 0
         self.ticks = 0
+        # observability: per-engine metric label into the process-wide
+        # registry, plus the cost-model drift detector fed one sample per
+        # successful rung-0 batch (wall) and per compile (HLO traffic)
+        self.engine_label = f"e{next(GramEngine._ids)}"
+        self.drift = drift if drift is not None \
+            else DriftDetector(theta=drift_theta)
+        self._drift_pred_cache: Dict[tuple, Optional[float]] = {}
+        self._m_requests = _metrics.counter(
+            "gram_requests_total", "requests submitted")
+        self._m_served = _metrics.counter(
+            "gram_served_total", "requests served ok, by served_by")
+        self._m_failed = _metrics.counter(
+            "gram_failed_total", "requests finished failed")
+        self._m_deadline = _metrics.counter(
+            "gram_deadline_expired_total", "requests failed on deadline")
+        self._m_retries = _metrics.counter(
+            "gram_retries_total", "failed executable attempts retried")
+        self._m_vetoes = _metrics.counter(
+            "gram_guard_vetoes_total", "output-guard vetoes")
+        self._m_rung = _metrics.counter(
+            "gram_rung_transitions_total", "degradation-ladder escalations")
+        self._m_compiles = _metrics.counter(
+            "gram_compiles_total", "executable compilations")
+        self._m_exec_cache = _metrics.counter(
+            "gram_exec_cache_total", "executable-cache lookups by outcome")
+        self._m_queue = _metrics.gauge(
+            "gram_queue_depth", "requests waiting across buckets")
+        self._m_latency = _metrics.histogram(
+            "gram_request_latency_s", "submit -> done seconds")
+        self._m_qwait = _metrics.histogram(
+            "gram_queue_wait_s", "submit -> batch-drain seconds")
+        self._m_fill = _metrics.histogram(
+            "gram_batch_fill", "live requests / slots per drained batch",
+            lo=1.0 / 64, hi=2.0)
+        self._m_exec = _metrics.histogram(
+            "gram_exec_s", "executable wall seconds per batch attempt")
 
     # -- request intake ----------------------------------------------------
     def submit(self, a, *, full: bool = True, gram_of: str = "cols",
@@ -222,11 +284,31 @@ class GramEngine:
                         deadline_s=deadline_s)
         key = self._bucket_key(a.shape, a.dtype, gram_of)
         self.waiting.setdefault(key, []).append(r)
+        b = self._blabel(key)
+        self._m_requests.inc(engine=self.engine_label, bucket=b)
+        self._m_queue.set(sum(len(q) for q in self.waiting.values()),
+                          engine=self.engine_label)
+        _trace.instant("submit", trace_id=r.uid, bucket=b,
+                       shape=f"{a.shape[0]}x{a.shape[1]}", gram_of=gram_of)
         return r.uid
 
     def _bucket_key(self, shape, dtype, gram_of: str = "cols") -> tuple:
         M, N = _autotune.bucket_shape(*shape, min_side=self.min_bucket)
         return (M, N, jnp.dtype(dtype).name, gram_of)
+
+    @staticmethod
+    def _blabel(key) -> str:
+        """Metric/trace label for one bucket key."""
+        M, N, dtype, gram_of = key
+        return f"{M}x{N}/{dtype}/{gram_of}"
+
+    @staticmethod
+    def _drift_key(key) -> str:
+        """Drift-detector key: the bucket in autotune's vocabulary (the
+        `kind` the winner was tuned for), so a finding maps 1:1 onto a
+        cache entry ``invalidate_drifted`` can drop."""
+        M, N, dtype, gram_of = key
+        return f"{M}x{N}/{dtype}/{'aat' if gram_of == 'rows' else 'ata'}"
 
     # -- degradation ladder ------------------------------------------------
     def _bucket_health(self, key) -> BucketHealth:
@@ -278,12 +360,19 @@ class GramEngine:
         health.failures += 1
         health.consecutive_failures += 1
         self.retries += 1
+        b = self._blabel(key)
+        self._m_retries.inc(engine=self.engine_label, bucket=b)
+        _trace.instant("retry", bucket=b, reason=reason)
         if (health.consecutive_failures >= self.breaker_threshold
                 and health.rung < max_rung):
             health.rung += 1
             health.consecutive_failures = 0
             health.quarantined.append(
                 f"rung{health.rung - 1}: {reason}")
+            self._m_rung.inc(engine=self.engine_label, bucket=b,
+                             rung=health.rung)
+            _trace.instant("rung_transition", bucket=b, rung=health.rung,
+                           reason=reason)
 
     def _record_success(self, key, health: BucketHealth):
         health.successes += 1
@@ -318,6 +407,7 @@ class GramEngine:
     # -- completion bookkeeping -------------------------------------------
     def _finish_ok(self, r: GramRequest, c: np.ndarray, *, served_by: str,
                    degraded: bool, t_done: Optional[float] = None):
+        b = self._blabel(self._bucket_key(r.shape, r.a.dtype, r.gram_of))
         r.result = c
         r.status, r.done = "ok", True
         r.t_done = t_done if t_done is not None else time.perf_counter()
@@ -329,14 +419,33 @@ class GramEngine:
         self.served += 1
         if degraded:
             self.degraded_served += 1
+        self._m_served.inc(engine=self.engine_label, bucket=b,
+                           served_by=served_by)
+        self._m_latency.observe(r.latency_s, engine=self.engine_label,
+                                bucket=b)
+        _trace.instant("done", trace_id=r.uid, status="ok",
+                       served_by=served_by)
+        _trace.add_span("request", r.t_submit, r.t_done, trace_id=r.uid,
+                        bucket=b, status="ok", served_by=served_by,
+                        attempts=r.attempts)
 
     def _finish_failed(self, r: GramRequest, error: str):
+        b = self._blabel(self._bucket_key(r.shape, r.a.dtype, r.gram_of))
         r.status, r.done = "failed", True
         r.error = error
         r.t_done = time.perf_counter()
         r.a = None
         self.finished.append(r)
         self.failed += 1
+        self._m_failed.inc(engine=self.engine_label, bucket=b)
+        if error.startswith("deadline"):
+            self._m_deadline.inc(engine=self.engine_label, bucket=b)
+        self._m_latency.observe(r.latency_s, engine=self.engine_label,
+                                bucket=b)
+        _trace.instant("done", trace_id=r.uid, status="failed", error=error)
+        _trace.add_span("request", r.t_submit, r.t_done, trace_id=r.uid,
+                        bucket=b, status="failed", error=error,
+                        attempts=r.attempts)
 
     # -- output guards -----------------------------------------------------
     def _guard(self, key, entries, out) -> Optional[str]:
@@ -357,7 +466,7 @@ class GramEngine:
         # of huge-but-finite values must not veto a correct result
         if not np.isfinite(np.sum(out, dtype=np.float64)) \
                 and not np.isfinite(out).all():
-            self.guard_failures += 1
+            self._veto(key, "non_finite")
             return "guard veto: non-finite entries in served batch"
         rtol = self.verify_rtol
         if rtol is None:
@@ -368,17 +477,25 @@ class GramEngine:
             d = np.diagonal(c).astype(np.float64)
             scale = float(np.abs(d).max()) if d.size else 0.0
             if not (d >= -rtol * max(scale, 1.0)).all():
-                self.guard_failures += 1
+                self._veto(key, "negative_diagonal", uid=r.uid)
                 return f"guard veto on request {r.uid}: negative diagonal"
             if self._probes:
                 ok, worst = _verify.freivalds_gram(
                     r.a, c, probes=self._probes, rtol=rtol,
                     gram_of=gram_of, full=False, rng=self._verify_rng)
                 if not ok:
-                    self.guard_failures += 1
+                    self._veto(key, "freivalds", uid=r.uid)
                     return (f"guard veto on request {r.uid}: freivalds "
                             f"identity violated (rel err {worst:.3e})")
         return None
+
+    def _veto(self, key, reason: str, uid: Optional[int] = None) -> None:
+        """One guard veto: counter + an instant on the shared timeline."""
+        self.guard_failures += 1
+        self._m_vetoes.inc(engine=self.engine_label,
+                           bucket=self._blabel(key))
+        _trace.instant("guard_veto", trace_id=uid, reason=reason,
+                       bucket=self._blabel(key))
 
     # -- mesh lifecycle ----------------------------------------------------
     def apply_mesh(self, mesh) -> None:
@@ -418,7 +535,11 @@ class GramEngine:
         M, N, dtype, gram_of = key
         ekey = ("local", key, self._cfg_fingerprint(cfg))
         if ekey in self._executables:
+            self._m_exec_cache.inc(engine=self.engine_label, path="local",
+                                   outcome="hit")
             return self._executables[ekey]
+        self._m_exec_cache.inc(engine=self.engine_label, path="local",
+                               outcome="miss")
 
         def single(x):
             return ata(x, gram_of=gram_of, levels=cfg["levels"],
@@ -426,8 +547,13 @@ class GramEngine:
                        mode=cfg["mode"], out_dtype=self.out_dtype,
                        block=cfg["block"], interpret=self.interpret)
         spec = jax.ShapeDtypeStruct((self.slots, M, N), jnp.dtype(dtype))
-        compiled = jax.jit(jax.vmap(single)).lower(spec).compile()
+        with _trace.span("compile", bucket=self._blabel(key), path="local",
+                         mode=str(cfg["mode"]), levels=str(cfg["levels"])):
+            compiled = jax.jit(jax.vmap(single)).lower(spec).compile()
         self.compile_count += 1
+        self._m_compiles.inc(engine=self.engine_label,
+                             bucket=self._blabel(key), path="local")
+        self._observe_traffic(key, cfg, compiled)
         self._executables[ekey] = compiled
         return compiled
 
@@ -435,7 +561,11 @@ class GramEngine:
         M, N, dtype, gram_of = key
         ekey = ("dist", key, scheme, self._mesh_epoch)
         if ekey in self._executables:
+            self._m_exec_cache.inc(engine=self.engine_label, path="dist",
+                                   outcome="hit")
             return self._executables[ekey]
+        self._m_exec_cache.inc(engine=self.engine_label, path="dist",
+                               outcome="miss")
 
         # one request at a time on the whole mesh: the mesh IS the
         # batch dimension here, slot-stacking would fight the sharding
@@ -449,10 +579,87 @@ class GramEngine:
                 out_dtype=self.out_dtype, interpret=self.interpret,
                 **self.dist_axes)
         spec = jax.ShapeDtypeStruct((M, N), jnp.dtype(dtype))
-        compiled = jax.jit(one).lower(spec).compile()
+        with _trace.span("compile", bucket=self._blabel(key),
+                         path=f"dist:{scheme}"):
+            compiled = jax.jit(one).lower(spec).compile()
         self.compile_count += 1
+        self._m_compiles.inc(engine=self.engine_label,
+                             bucket=self._blabel(key), path="dist")
         self._executables[ekey] = compiled
         return compiled
+
+    # -- cost-model drift ---------------------------------------------------
+    def _drift_prediction(self, key, cfg) -> Optional[float]:
+        """Model-predicted HBM bytes for one (bucket, config) — the
+        denominator of both drift channels.  Resolves the same defaults
+        the executable resolves (the "auto" mode dispatch, natural
+        recursion depth, default block) so the prediction prices the
+        config actually run; None when the model cannot price it."""
+        ck = (key, self._cfg_fingerprint(cfg))
+        if ck in self._drift_pred_cache:
+            return self._drift_pred_cache[ck]
+        M, N, dtype, gram_of = key
+        pred: Optional[float] = None
+        try:
+            levels = cfg["levels"]
+            if levels == "auto":
+                levels = min(ata_levels_for(M, N, cfg["leaf"]),
+                             AUTO_MAX_LEVELS)
+            blk = cfg["block"] or _autotune.DEFAULT_BLOCK
+            cand = {"mode": resolve_mode(cfg["mode"]), "levels": int(levels),
+                    "variant": cfg["variant"], "bm": blk, "bk": blk,
+                    "bn": blk}
+            pred = _autotune.model_score(
+                M, N, cand, in_bytes=int(jnp.dtype(dtype).itemsize),
+                out_bytes=int(self.out_dtype.itemsize),
+                kind="aat" if gram_of == "rows" else "ata")
+        except Exception:
+            pred = None
+        self._drift_pred_cache[ck] = pred
+        return pred
+
+    def _observe_traffic(self, key, cfg, compiled) -> None:
+        """Traffic drift channel: HLO-census HBM bytes of the compiled
+        executable vs the analytic traffic model (same units — the
+        [1/theta, theta] band applies directly)."""
+        pred = self._drift_prediction(key, cfg)
+        if pred is None:
+            return
+        try:
+            from ..roofline.hlo_census import hbm_intermediate_census
+            measured = float(hbm_intermediate_census(
+                compiled.as_text())["total_bytes"])
+        except Exception:
+            return                      # census is best-effort telemetry
+        self.drift.observe(self._drift_key(key), measured=measured,
+                           predicted=pred, channel="traffic",
+                           config=str(self._cfg_fingerprint(cfg)))
+
+    def invalidate_drifted(self, channel: str = "wall") -> List[str]:
+        """Act on drift findings: drop each flagged bucket's autotune
+        winner (``gram.autotune.invalidate``), its cached executables and
+        prediction, and its drift history — the next touch re-tunes and
+        re-measures from scratch.  Returns the flagged drift keys."""
+        dropped = []
+        for dk in self.drift.stale_keys(channel):
+            size, dtype, kind = str(dk).split("/")
+            M, N = (int(x) for x in size.split("x"))
+            try:
+                _autotune.invalidate(M, N, dtype=dtype, kind=kind,
+                                     min_side=self.min_bucket)
+            except Exception:
+                pass                    # no cache entry to drop is fine
+            key = (M, N, dtype, "rows" if kind == "aat" else "cols")
+            self._executables = {
+                ek: exe for ek, exe in self._executables.items()
+                if ek[1] != key}
+            self._drift_pred_cache = {
+                ck: v for ck, v in self._drift_pred_cache.items()
+                if ck[0] != key}
+            self.drift.reset(dk)
+            dropped.append(str(dk))
+            _trace.instant("drift_invalidate", key=str(dk), channel=channel)
+        return dropped
 
     def _is_distributed(self, key) -> bool:
         """Buckets at/above the element threshold route to the mesh (when
@@ -528,14 +735,31 @@ class GramEngine:
         else:
             del self.waiting[key]
 
+        b = self._blabel(key)
+        t_batch = time.perf_counter()
+        for r in batch:
+            self._m_qwait.observe(t_batch - r.t_submit,
+                                  engine=self.engine_label, bucket=b)
+        if _trace.tracing_enabled():
+            for r in batch:
+                _trace.add_span("queue_wait", r.t_submit, t_batch,
+                                trace_id=r.uid, bucket=b)
+        self._m_queue.set(sum(len(q) for q in self.waiting.values()),
+                          engine=self.engine_label)
+        self._m_fill.observe(len(batch) / self.slots,
+                             engine=self.engine_label)
+
         entries, done = self._expire(list(enumerate(batch)))
         if entries:
-            if self._is_distributed(key):
-                for _, r in entries:
-                    self._serve_one_distributed(key, r)
-                    done.append(r)
-            else:
-                done.extend(self._serve_local(key, entries))
+            dist = self._is_distributed(key)
+            with _trace.span("batch", bucket=b, n=len(entries),
+                             path="dist" if dist else "local"):
+                if dist:
+                    for _, r in entries:
+                        self._serve_one_distributed(key, r)
+                        done.append(r)
+                else:
+                    done.extend(self._serve_local(key, entries))
         return done
 
     # -- local (slot-batched) serving -------------------------------------
@@ -550,24 +774,56 @@ class GramEngine:
             m, n = r.shape
             clean[slot, :m, :n] = r.a
 
+        b = self._blabel(key)
         attempt, last_err = 0, "unknown failure"
         while True:
             entries, expired = self._expire(entries)
             if not entries:
                 return expired + [r for _, r in entries]
             rung = health.rung
+            cfg = self._bucket_config(key, rung)
             site = f"gram.engine.exec.local.{M}x{N}.{dtype}.{gram_of}"
             try:
                 _faults.check_exec(site)
                 stack = _faults.poison("poison_operand",
                                        "gram.engine.operand", clean)
-                exe = self._local_executable(
-                    key, self._bucket_config(key, rung))
-                out = np.asarray(exe(jnp.asarray(stack)))
+                exe = self._local_executable(key, cfg)
+                t_x0 = time.perf_counter()
+                if _trace.tracing_enabled():
+                    with jax.profiler.TraceAnnotation(f"gram_exec:{b}"):
+                        out = np.asarray(exe(jnp.asarray(stack)))
+                else:
+                    out = np.asarray(exe(jnp.asarray(stack)))
+                t_x1 = time.perf_counter()
+                self._m_exec.observe(t_x1 - t_x0, engine=self.engine_label,
+                                     bucket=b, path="local")
                 out = _faults.poison("poison_output",
                                      "gram.engine.output", out)
+                t_v0 = time.perf_counter()
                 veto = self._guard(key, entries, out)
+                t_v1 = time.perf_counter()
+                if _trace.tracing_enabled():
+                    for _, r in entries:
+                        _trace.add_span("execute", t_x0, t_x1,
+                                        trace_id=r.uid, bucket=b,
+                                        path="local", rung=rung,
+                                        attempt=attempt)
+                        if self._guard_on:
+                            _trace.add_span("verify", t_v0, t_v1,
+                                            trace_id=r.uid, bucket=b,
+                                            vetoed=veto is not None)
                 if veto is None:
+                    if rung == 0:
+                        # wall drift channel: measured executable seconds
+                        # vs model bytes, per tuned bucket (rung 0 only —
+                        # degraded rungs run a different config)
+                        pred = self._drift_prediction(key, cfg)
+                        if pred is not None:
+                            self.drift.observe(
+                                self._drift_key(key),
+                                measured=t_x1 - t_x0, predicted=pred,
+                                channel="wall",
+                                config=str(self._cfg_fingerprint(cfg)))
                     break                       # success
                 last_err = veto
             except Exception as e:  # noqa: BLE001 — ladder, not crash
@@ -630,11 +886,19 @@ class GramEngine:
                                      "gram.engine.operand", clean)
                 exe = self._dist_executable(key, scheme,
                                             self._bucket_config(key, 0))
+                t_x0 = time.perf_counter()
                 c = np.asarray(jax.device_get(exe(jnp.asarray(pad))))
+                t_x1 = time.perf_counter()
+                b = self._blabel(key)
+                self._m_exec.observe(t_x1 - t_x0, engine=self.engine_label,
+                                     bucket=b, path="dist")
+                _trace.add_span("execute", t_x0, t_x1, trace_id=r.uid,
+                                bucket=b, path=rung_name, attempt=attempt)
                 c = _faults.poison("poison_output",
                                    "gram.engine.output", c)
                 c = c[:n, :n]
-                veto = self._guard(key, [(0, r)], c[None])
+                with _trace.span("verify", trace_id=r.uid, bucket=b):
+                    veto = self._guard(key, [(0, r)], c[None])
                 if veto is None:
                     if not r.full:
                         c = np.tril(c)
@@ -661,16 +925,17 @@ class GramEngine:
             if not self.waiting:
                 break
             self.step()
-        return self.finished
+        return list(self.finished)
 
     # -- introspection -----------------------------------------------------
     def stats(self) -> dict:
-        lats = sorted(r.latency_s for r in self.finished
-                      if r.latency_s is not None)
-
-        def pct(p):
-            return lats[min(int(p * len(lats)), len(lats) - 1)] \
-                if lats else None
+        """Serving snapshot.  Latency percentiles read this engine's
+        slice of the O(1)-update log-bucketed histogram in the metrics
+        registry — ``stats()`` neither re-sorts a latency list nor
+        depends on ``finished`` (which is capped at ``history_cap`` and
+        kept only for callers that want the request objects).  ``drift``
+        carries the wall-channel cost-model findings (``obs.drift``)."""
+        eng = {"engine": self.engine_label}
         bucket_keys = sorted({ek[1] for ek in self._executables})
         return {
             "served": self.served,
@@ -688,6 +953,10 @@ class GramEngine:
             "quarantined": {str(k): list(h.quarantined)
                             for k, h in self._health.items()
                             if h.quarantined},
-            "p50_latency_s": pct(0.50),
-            "p99_latency_s": pct(0.99),
+            "history_cap": self.history_cap,
+            "engine": self.engine_label,
+            "queue_depth": sum(len(q) for q in self.waiting.values()),
+            "p50_latency_s": self._m_latency.quantile(0.50, eng),
+            "p99_latency_s": self._m_latency.quantile(0.99, eng),
+            "drift": [f.as_dict() for f in self.drift.findings("wall")],
         }

@@ -46,6 +46,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.ata import ata, ata_levels_for
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from ..core.distributed import (assemble_ring_gram, gram_bfs25d,
                                 gram_reducescatter, gram_ring,
                                 ring_stack_len, shard_map_compat)
@@ -449,7 +451,8 @@ class CheckpointedGramStream:
             self.state = init(n, dtype=dtype)
         else:
             self.state = stack_init(n, block=block, dtype=dtype)
-        restored, meta = self.manager.restore()
+        with _trace.span("stream_restore", layout=layout):
+            restored, meta = self.manager.restore()
         if restored is not None:
             if int(meta.get("n", n)) != n or meta.get("layout") != layout:
                 raise ValueError(
@@ -491,9 +494,14 @@ class CheckpointedGramStream:
             tree = {"packed": self.state.packed, "rows": self.state.rows}
         else:
             tree = {"stack": self.state.stack, "rows": self.state.rows}
-        self.manager.save(self.chunks, tree,
-                          extra={"chunks": self.chunks, "n": self.n,
-                                 "layout": self.layout})
+        with _trace.span("stream_commit", chunks=self.chunks,
+                         dirty=self._dirty, layout=self.layout):
+            self.manager.save(self.chunks, tree,
+                              extra={"chunks": self.chunks, "n": self.n,
+                                     "layout": self.layout})
+        _metrics.counter("gram_stream_commits_total",
+                         "checkpoint commits of streamed Gram state").inc(
+            layout=self.layout)
         self._dirty = 0
 
     def finalize(self, *, symmetrize: bool = True, out_dtype=None,

@@ -40,6 +40,8 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from ..obs import trace as _trace
+
 __all__ = [
     "GramVerdict", "VerificationError", "default_rtol", "finite_ok",
     "freivalds_gram", "verify_gram", "check_packed_state",
@@ -156,6 +158,12 @@ def verify_gram(a: np.ndarray, c: np.ndarray, *, probes: int = 2,
         fre_ok, worst = freivalds_gram(a, c_arr, probes=probes, rtol=rtol,
                                        gram_of=gram_of, full=full, rng=rng)
     ok = finite and diag_ok and fre_ok
+    if not ok:
+        _trace.instant(
+            "verify_veto",
+            reason=("non_finite" if not finite
+                    else "negative_diagonal" if not diag_ok
+                    else "freivalds"))
     return GramVerdict(ok=ok, finite=finite, diag_ok=diag_ok,
                        freivalds_ok=fre_ok,
                        probes=probes if finite else 0, max_rel_err=worst)
@@ -168,6 +176,7 @@ def check_packed_state(packed: np.ndarray, n: int, *,
     it).  Raises :class:`VerificationError` on violation."""
     p = np.asarray(packed)
     if not np.isfinite(p).all():
+        _trace.instant("verify_veto", reason="non_finite", where="stream")
         raise VerificationError(
             "streamed Gram state contains non-finite entries")
     # diagonal of the packed lower triangle: row r starts at r(r+1)/2,
@@ -176,5 +185,7 @@ def check_packed_state(packed: np.ndarray, n: int, *,
     d = p.astype(np.float64)[idx]
     scale = float(np.abs(d).max()) if d.size else 0.0
     if not (d >= -rtol * max(scale, 1.0)).all():
+        _trace.instant("verify_veto", reason="negative_diagonal",
+                       where="stream")
         raise VerificationError(
             "streamed Gram state has a negative diagonal entry")

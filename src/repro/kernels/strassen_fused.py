@@ -484,17 +484,23 @@ def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
         out_specs=pl.BlockSpec((spec.bi, spec.bj), out_map),
         scratch_shapes=[pltpu.VMEM((spec.bi, spec.bj), jnp.float32)],
     )
-    return pl.pallas_call(
-        functools.partial(_leaf_kernel, spec=spec),
-        grid_spec=grid_spec,
-        out_shape=out_shape,
-        # output tiles (t) are independent -> megacore partitions them;
-        # the (contribution, K) sweep carries the VMEM accumulator and
-        # must stay sequential per tile.
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(*tables, *operands)
+    # named_scope: the bound program's identity (kind/levels/variant)
+    # lands in the HLO metadata of the pallas_call, so profiler traces
+    # and HLO censuses attribute kernel time/traffic to the schedule
+    # that produced it (DESIGN.md §14)
+    with jax.named_scope(
+            f"fused:{spec.kind}:l{spec.levels}:{spec.variant}"):
+        return pl.pallas_call(
+            functools.partial(_leaf_kernel, spec=spec),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            # output tiles (t) are independent -> megacore partitions
+            # them; the (contribution, K) sweep carries the VMEM
+            # accumulator and must stay sequential per tile.
+            compiler_params=pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(*tables, *operands)
 
 
 # ---------------------------------------------------------------------------

@@ -12,15 +12,28 @@ Robustness drills ride the same driver: ``--faults`` arms a
 map straight onto the engine's degradation ladder — e.g.
 
     ... --faults "poison_output:rate=0.1;exec_fail:rate=0.05" --verify 2
+
+The flight recorder rides along too (DESIGN.md §14): ``--trace-out``
+enables request-scoped tracing and writes the Chrome trace-event JSON
+(open it in Perfetto — every request's submit -> queue-wait -> execute ->
+verify -> done chain, with fault firings, guard vetoes and rung
+transitions as instants on the same timeline; a ``.jsonl`` sidecar holds
+the grep-friendly form), ``--metrics-out`` writes the Prometheus-style
+registry snapshot, and ``--drift-theta`` sets the cost-model drift band
+(findings print at exit and land in ``stats()["drift"]``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
 from ..gram import GramEngine, autotune_bucket, bucket_shape
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..runtime import faults
 
 
@@ -66,6 +79,17 @@ def main(argv=None):
                          "fast instead of retrying)")
     ap.add_argument("--backoff-ms", type=float, default=0.0,
                     help="base retry backoff (doubles per attempt)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable request-scoped tracing and write the "
+                         "Chrome trace-event JSON here (Perfetto-"
+                         "loadable; a .jsonl sidecar is written too)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus-style metrics snapshot "
+                         "here at exit")
+    ap.add_argument("--drift-theta", type=float, default=2.0,
+                    help="cost-model drift band: flag buckets whose "
+                         "measured/predicted ratio leaves "
+                         "[1/theta, theta]")
     args = ap.parse_args(argv)
     levels = args.levels if args.levels == "auto" else int(args.levels)
     verify = args.verify if args.verify in ("off", "finite") \
@@ -84,11 +108,14 @@ def main(argv=None):
 
     if args.faults:
         faults.install(faults.parse_profile(args.faults, seed=args.seed))
+    if args.trace_out:
+        obs_trace.set_tracer(obs_trace.Tracer(enabled=True))
 
     eng = GramEngine(slots=args.slots, levels=levels, mode=args.mode,
                      min_bucket=args.min_bucket, verify=verify,
                      max_retries=args.retries,
-                     backoff_s=args.backoff_ms / 1e3)
+                     backoff_s=args.backoff_ms / 1e3,
+                     drift_theta=args.drift_theta)
     deadline = None if args.deadline_ms is None else args.deadline_ms / 1e3
     for m, n in shapes:
         eng.submit(rng.standard_normal((m, n)).astype(np.float32),
@@ -107,6 +134,28 @@ def main(argv=None):
               f"degraded={s['degraded_served']} retries={s['retries']} "
               f"guard_vetoes={s['guard_failures']} "
               f"injected={faults.active().count('poison_output') + faults.active().count('exec_fail')}")
+    for f in s["drift"]:
+        print(f"[drift] {f['key']}: measured/predicted ratio "
+              f"{f['ratio']:.2f} outside [1/{f['theta']:g}, {f['theta']:g}] "
+              f"over {f['n']} samples — autotune winner suspect")
+    if args.trace_out:
+        tracer = obs_trace.get_tracer()
+        out = Path(args.trace_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        tracer.write_chrome_trace(out)
+        tracer.write_jsonl(out.with_suffix(".jsonl"))
+        print(f"[trace] {len(tracer)} events -> {out} "
+              f"(+ {out.with_suffix('.jsonl').name}; "
+              f"dropped={tracer.dropped})")
+        obs_trace.set_tracer(None)
+    if args.metrics_out:
+        out = Path(args.metrics_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(obs_metrics.render_prometheus())
+        out.with_suffix(".drift.json").write_text(
+            json.dumps(eng.drift.snapshot(), indent=1))
+        print(f"[metrics] registry snapshot -> {out} "
+              f"(+ {out.with_suffix('.drift.json').name})")
     if args.faults:
         faults.reset()
     return s

@@ -37,6 +37,7 @@ check per hook.
 """
 from __future__ import annotations
 
+import itertools
 import math
 import os
 import time
@@ -46,6 +47,8 @@ from fnmatch import fnmatch
 from typing import List, Optional, Tuple
 
 import numpy as np
+
+from ..obs import trace as _trace
 
 __all__ = [
     "FaultSpec", "FaultEvent", "FaultRegistry", "InjectedFault",
@@ -101,6 +104,11 @@ class FaultEvent:
     kind: str
     site: str
     detail: str = ""
+    t: float = 0.0        # time.perf_counter() at the firing — the same
+    #                       clock the tracer uses, so fault events align
+    #                       with request spans on one timeline
+    seq: int = 0          # per-registry firing sequence (1-based): total
+    #                       order even when perf_counter ties
 
 
 @dataclass
@@ -111,11 +119,14 @@ class FaultRegistry:
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
+        self._seq = itertools.count(1)
 
     # -- core matching ----------------------------------------------------
     def match(self, kind: str, site: str) -> Optional[FaultSpec]:
         """The first armed spec firing for (kind, site) this opportunity,
-        with its budget decremented and the event logged; else None."""
+        with its budget decremented and the event logged (timestamped +
+        sequence-numbered, and mirrored onto the tracer timeline as an
+        instant); else None."""
         for spec in self.specs:
             if spec.kind != kind or not fnmatch(site, spec.site):
                 continue
@@ -124,7 +135,10 @@ class FaultRegistry:
             if spec.rate < 1.0 and self._rng.random() >= spec.rate:
                 continue
             spec.fired += 1
-            self.events.append(FaultEvent(kind=kind, site=site))
+            ev = FaultEvent(kind=kind, site=site,
+                            t=time.perf_counter(), seq=next(self._seq))
+            self.events.append(ev)
+            _trace.instant(f"fault:{kind}", site=site, seq=ev.seq)
             return spec
         return None
 

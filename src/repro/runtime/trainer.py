@@ -22,6 +22,8 @@ from ..configs.base import ModelConfig, TrainConfig
 from ..data.pipeline import DataConfig, get_batch
 from ..checkpoint.manager import CheckpointManager
 from ..models import init_params, loss_fn
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..optim import adamw, shampoo, apply_updates, warmup_cosine
 
 log = logging.getLogger("repro.trainer")
@@ -164,20 +166,30 @@ class Trainer:
     def run(self, num_steps: int):
         """Run until ``self.step == num_steps`` (absolute), checkpointing
         every tc.checkpoint_every; resumable after any crash."""
+        step_s = obs_metrics.histogram(
+            "trainer_step_s", "wall seconds per optimizer step")
+        steps_total = obs_metrics.counter(
+            "trainer_steps_total", "optimizer steps completed")
+        loss_g = obs_metrics.gauge("trainer_loss", "last step's loss")
         while self.step < num_steps:
             step = self.step
             batch = get_batch(self.dc, step)   # pure fn of step: resumable
             t0 = time.perf_counter()
-            self.state, metrics = self.step_fn(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
+            with obs_trace.span("train_step", step=step):
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             self.watchdog.observe(dt)
+            step_s.observe(dt)
+            steps_total.inc()
+            loss_g.set(float(metrics["loss"]))
             self.metrics_history.append(
                 {k: float(v) for k, v in metrics.items()})
             new_step = step + 1
             if new_step % self.tc.checkpoint_every == 0 \
                     or new_step == num_steps:
-                self.ckpt.save(new_step, self.state)
+                with obs_trace.span("checkpoint_save", step=new_step):
+                    self.ckpt.save(new_step, self.state)
             # failure injection AFTER the optimizer step, BEFORE the next
             # checkpoint boundary — the worst-case crash point.
             self.failure.check(new_step)

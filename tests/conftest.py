@@ -34,6 +34,15 @@ def _isolated_autotune_cache(tmp_path_factory, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
 
 
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    """Each test starts with a fresh (disabled) tracer; a test that
+    enabled tracing cannot leak events into the next one."""
+    yield
+    from repro.obs import trace
+    trace.set_tracer(None)
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",

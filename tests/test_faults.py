@@ -131,3 +131,51 @@ def test_installed_registry_overrides_env(monkeypatch):
         faults.check_exec("s")
     with pytest.raises(InjectedFault):
         faults.check_exec("s")              # env profile back in force
+
+
+# ---------------------------------------------------------------------------
+# Flight-recorder integration: every firing is timestamped, sequenced,
+# and mirrored as an instant on the trace timeline (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def test_events_carry_monotonic_time_and_sequence():
+    import time
+    with faults.inject(FaultSpec("exec_fail", site="s*"),
+                       FaultSpec("mesh_shrink")) as reg:
+        for _ in range(3):
+            with pytest.raises(InjectedFault):
+                faults.check_exec("s1")
+        assert faults.fire("mesh_shrink", "anywhere")
+    evs = reg.events
+    assert len(evs) == 4
+    # seq: strictly increasing, 1-based, gap-free per registry
+    assert [e.seq for e in evs] == [1, 2, 3, 4]
+    # t: the tracer's clock (perf_counter), non-decreasing
+    ts = [e.t for e in evs]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    assert all(0 < t <= time.perf_counter() for t in ts)
+
+
+def test_each_registry_sequences_independently():
+    with faults.inject(FaultSpec("exec_fail")) as outer:
+        with pytest.raises(InjectedFault):
+            faults.check_exec("a")
+        with faults.inject(FaultSpec("exec_fail")) as inner:
+            with pytest.raises(InjectedFault):
+                faults.check_exec("b")
+        with pytest.raises(InjectedFault):
+            faults.check_exec("c")
+    assert [e.seq for e in outer.events] == [1, 2]
+    assert [e.seq for e in inner.events] == [1]
+
+
+def test_fault_firings_land_on_the_trace_timeline():
+    from repro.obs import trace
+    tracer = trace.set_tracer(trace.Tracer(enabled=True))
+    with faults.inject(FaultSpec("exec_fail")) as reg:
+        with pytest.raises(InjectedFault):
+            faults.check_exec("gram.engine.exec.local")
+    (ev,) = tracer.events()
+    assert ev.name == "fault:exec_fail" and ev.ph == "i"
+    assert ev.attrs["site"] == "gram.engine.exec.local"
+    assert ev.attrs["seq"] == reg.events[0].seq

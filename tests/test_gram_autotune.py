@@ -227,3 +227,45 @@ def test_autotune_rank_k_measured(tmp_cache):
                         measure=True, top_k=1, interpret=True)
     assert entry["source"] == "measured"
     assert entry["measured_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Cache lifecycle counters (obs.metrics): hit / miss / persist /
+# invalidate / stale_dropped are observable through the registry
+# ---------------------------------------------------------------------------
+
+def test_cache_event_counters_track_lifecycle(tmp_cache):
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.reset()
+    try:
+        c = obs_metrics.counter("gram_autotune_cache_total")
+        assert at.lookup(40, 40) is None
+        assert c.value(outcome="miss") == 1
+        at.autotune(40, 40, blocks=(16,), levels=(0,), measure=False)
+        assert c.value(outcome="persist") == 1
+        assert at.lookup(40, 40) is not None
+        assert c.value(outcome="hit") == 1
+        assert at.invalidate(40, 40)
+        assert c.value(outcome="invalidate") == 1
+        assert not at.invalidate(40, 40)     # nothing left to drop
+        assert c.value(outcome="invalidate") == 1
+        # a pre-v2 file is dropped wholesale, counted per stale entry
+        tmp_cache.write_text(json.dumps(
+            {"version": 1, "entries": {"k1": {}, "k2": {}}}))
+        assert at.load_cache() == {}
+        assert c.value(outcome="stale_dropped") == 2
+    finally:
+        obs_metrics.reset()
+
+
+def test_cache_counters_survive_registry_reset(tmp_cache):
+    """The counter handle is resolved per event from the live registry:
+    a metrics.reset() between events must not orphan the instrument."""
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.reset()
+    at.lookup(40, 40)
+    obs_metrics.reset()                      # drop every instrument
+    at.lookup(40, 40)                        # must land in the NEW registry
+    c = obs_metrics.counter("gram_autotune_cache_total")
+    assert c.value(outcome="miss") == 1
+    obs_metrics.reset()

@@ -1,0 +1,181 @@
+"""obs.drift: the cost-model drift detector — EWMA mechanics, the
+wall-channel median normalization, traffic-channel direct banding, and
+the engine's invalidate_drifted action (DESIGN.md §14).
+
+Acceptance: a synthetically falsified bucket is flagged while
+well-modeled buckets stay unflagged."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.gram import GramEngine
+from repro.gram import autotune as at
+from repro.obs.drift import DriftDetector
+
+
+def _feed(det, key, measured, predicted, n=4, channel="wall"):
+    for _ in range(n):
+        det.observe(key, measured=measured, predicted=predicted,
+                    channel=channel)
+
+
+# ---------------------------------------------------------------------------
+# EWMA mechanics
+# ---------------------------------------------------------------------------
+
+def test_observe_returns_ewma_and_seeds_on_first_sample():
+    det = DriftDetector(alpha=0.5)
+    assert det.observe("k", measured=2.0, predicted=1.0) == 2.0
+    # 0.5 * 2.0 + 0.5 * 4.0
+    assert det.observe("k", measured=4.0, predicted=1.0) == pytest.approx(3.0)
+    rec = det.record("k")
+    assert rec.n == 2
+    assert rec.last_measured == 4.0 and rec.last_predicted == 1.0
+
+
+def test_non_positive_samples_carry_no_ratio_and_are_dropped():
+    det = DriftDetector()
+    assert det.observe("k", measured=0.0, predicted=1.0) is None
+    assert det.observe("k", measured=1.0, predicted=-2.0) is None
+    assert det.record("k") is None
+
+
+def test_constructor_validates_theta_and_alpha():
+    with pytest.raises(ValueError, match="theta"):
+        DriftDetector(theta=1.0)
+    with pytest.raises(ValueError, match="alpha"):
+        DriftDetector(alpha=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Findings: acceptance semantics
+# ---------------------------------------------------------------------------
+
+def test_wall_channel_flags_only_the_falsified_bucket():
+    """Three buckets whose measured/predicted share a machine constant
+    (1e-6 s/byte) — except one that runs 20x its model.  Only that one
+    may be flagged, despite NO channel sharing units with the model."""
+    det = DriftDetector(theta=2.0, min_samples=3)
+    _feed(det, "64x64/float32/ata", 1.0, 1e6)
+    _feed(det, "128x128/float32/ata", 4.0, 4e6)
+    _feed(det, "256x256/float32/ata", 80.0, 4e6)    # falsified: 20x
+    findings = det.findings("wall")
+    assert [f.key for f in findings] == ["256x256/float32/ata"]
+    (f,) = findings
+    assert f.channel == "wall"
+    assert f.ratio > f.theta                # normalized ratio escaped band
+    assert f.n == 4
+    assert det.stale_keys("wall") == ["256x256/float32/ata"]
+
+
+def test_wall_channel_is_robust_to_whole_machine_slowdown():
+    """Every bucket 10x slower (thermals, noisy neighbour): ratios move
+    together, the median normalization cancels it, nothing is flagged."""
+    det = DriftDetector(theta=2.0, min_samples=2)
+    _feed(det, "a", 10.0, 1e6)
+    _feed(det, "b", 40.0, 4e6)
+    _feed(det, "c", 160.0, 16e6)
+    assert det.findings("wall") == []
+
+
+def test_wall_channel_needs_peer_keys_to_flag():
+    """One bucket cannot be told apart from the machine constant; once
+    honest peers pin the median, the outlier is attributable."""
+    det = DriftDetector(theta=2.0, min_samples=2)
+    _feed(det, "only", 1e9, 1.0)            # wildly off, but alone
+    assert det.findings("wall") == []
+    _feed(det, "peer1", 1.0, 1e6)
+    _feed(det, "peer2", 1.1, 1e6)
+    assert [f.key for f in det.findings("wall")] == ["only"]
+
+
+def test_min_samples_gates_findings():
+    det = DriftDetector(theta=2.0, min_samples=3)
+    _feed(det, "ok1", 1.0, 1e6, n=3)
+    _feed(det, "ok2", 1.1, 1e6, n=3)
+    _feed(det, "young", 100.0, 1e6, n=2)    # off-band but immature
+    assert det.findings("wall") == []
+    det.observe("young", measured=100.0, predicted=1e6)
+    assert [f.key for f in det.findings("wall")] == ["young"]
+
+
+def test_traffic_channel_bands_directly_both_sides():
+    """Same units (bytes vs bytes): no normalization, one key suffices,
+    and both over- and under-prediction escape the band."""
+    det = DriftDetector(theta=2.0, min_samples=2)
+    _feed(det, "honest", 1.1e6, 1e6, channel="traffic")
+    _feed(det, "hungry", 5e6, 1e6, channel="traffic")
+    _feed(det, "phantom", 1e5, 1e6, channel="traffic")
+    keys = {f.key for f in det.findings("traffic")}
+    assert keys == {"hungry", "phantom"}
+    # channels are independent namespaces
+    assert det.findings("wall") == []
+
+
+def test_reset_scopes_and_snapshot_is_json_friendly():
+    det = DriftDetector(min_samples=1)
+    det.observe("k1", measured=1.0, predicted=1.0, config="c1")
+    det.observe("k1", measured=1.0, predicted=1.0, channel="traffic")
+    det.observe("k2", measured=9.0, predicted=1.0)
+    det.reset("k1", channel="wall")
+    assert det.record("k1", "wall") is None
+    assert det.record("k1", "traffic") is not None
+    snap = json.loads(json.dumps(det.snapshot()))
+    assert snap["theta"] == det.theta
+    assert "k1|traffic" in snap["records"]
+    assert snap["records"]["k2|wall"]["n"] == 1
+    det.reset()
+    assert det.snapshot()["records"] == {}
+
+
+# ---------------------------------------------------------------------------
+# The engine action: drift finding -> autotune winner dropped
+# ---------------------------------------------------------------------------
+
+def test_engine_invalidate_drifted_drops_winner_and_history(tmp_path,
+                                                            monkeypatch):
+    cache = tmp_path / "gram_autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    eng = GramEngine(slots=2, levels=0, min_bucket=32)
+
+    # a persisted winner for the 64x64 ata bucket...
+    at.autotune(64, 64, blocks=(16,), levels=(0,), measure=False)
+    assert at.lookup(64, 64) is not None
+
+    # ...whose wall-channel EWMA is 20x off its peers (two honest peers
+    # pin the cross-key median)
+    key = (64, 64, "float32", "cols")
+    _feed(eng.drift, "64x64/float32/ata", 80.0, 4e6)
+    _feed(eng.drift, "128x128/float32/ata", 1.0, 1e6)
+    _feed(eng.drift, "256x256/float32/ata", 1.1, 1e6)
+    eng._executables[("local", key)] = object()
+    eng._drift_pred_cache[(key, "fp")] = 1.0
+
+    st = eng.stats()
+    assert [f["key"] for f in st["drift"]] == ["64x64/float32/ata"]
+
+    dropped = eng.invalidate_drifted()
+    assert dropped == ["64x64/float32/ata"]
+    assert at.lookup(64, 64) is None, "stale winner must leave the cache"
+    assert ("local", key) not in eng._executables
+    assert (key, "fp") not in eng._drift_pred_cache
+    # history forgotten: the re-measured bucket starts clean
+    assert eng.drift.record("64x64/float32/ata") is None
+    assert eng.stats()["drift"] == []
+    # healthy bucket untouched
+    assert eng.drift.record("128x128/float32/ata") is not None
+
+
+def test_engine_feeds_wall_drift_from_real_serving():
+    """An end-to-end smoke: serving at rung 0 populates the wall channel
+    with the model's predicted bytes for the served bucket."""
+    rng = np.random.default_rng(5)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16)
+    for _ in range(3):
+        eng.submit(rng.standard_normal((40, 20)).astype(np.float32))
+    eng.run_to_completion()
+    # one observation per executed batch (3 requests over 2 slots -> 2)
+    rec = eng.drift.record("64x32/float32/ata")
+    assert rec is not None and rec.n == 2
+    assert rec.last_measured > 0 and rec.last_predicted > 0

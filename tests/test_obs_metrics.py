@@ -1,0 +1,203 @@
+"""obs.metrics: instrument semantics, the log-bucketed histogram's O(1)
+observe / bucket-resolution quantiles, label-schema pinning, Prometheus
+rendering, and the capped-history engine stats they back (DESIGN.md §14)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.gram import GramEngine
+from repro.obs import metrics
+from repro.obs.metrics import Histogram, MetricsRegistry
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registry():
+    metrics.reset()
+    yield
+    metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# Counters / gauges
+# ---------------------------------------------------------------------------
+
+def test_counter_inc_value_total_and_monotonicity():
+    c = metrics.counter("served_total", "requests served")
+    c.inc(bucket="64x64")
+    c.inc(2.5, bucket="64x64")
+    c.inc(bucket="128x64")
+    assert c.value(bucket="64x64") == 3.5
+    assert c.value(bucket="128x64") == 1.0
+    assert c.value(bucket="nope") == 0.0
+    assert c.total() == 4.5
+    with pytest.raises(ValueError, match="only go up"):
+        c.inc(-1, bucket="64x64")
+
+
+def test_gauge_set_inc_dec():
+    g = metrics.gauge("queue_depth")
+    g.set(5, engine="e0")
+    g.inc(2, engine="e0")
+    g.dec(engine="e0")
+    assert g.value(engine="e0") == 6.0
+
+
+def test_label_schema_pinned_by_first_observation():
+    c = metrics.counter("pinned")
+    c.inc(bucket="a", rung="0")
+    with pytest.raises(ValueError, match="schema"):
+        c.inc(bucket="a")                       # missing label
+    with pytest.raises(ValueError, match="schema"):
+        c.inc(bucket="a", scheme="ring")        # renamed label
+
+
+def test_registry_rejects_kind_conflicts_and_is_idempotent():
+    c = metrics.counter("x_total")
+    assert metrics.counter("x_total") is c      # same instrument back
+    with pytest.raises(ValueError, match="already registered"):
+        metrics.gauge("x_total")
+
+
+# ---------------------------------------------------------------------------
+# Log-bucketed histogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_single_sample_quantile_is_that_sample():
+    h = metrics.histogram("lat_s")
+    h.observe(0.0123, engine="e0")
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert h.quantile(q) == pytest.approx(0.0123)
+
+
+def test_histogram_quantiles_within_one_bucket_ratio():
+    """Bucket resolution is base 2^(1/4): any quantile answer must land
+    within one bucket ratio of the exact order statistic."""
+    h = metrics.histogram("lat_s")
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=-5.0, sigma=1.0, size=2000)
+    for v in vals:
+        h.observe(float(v))
+    base = h.base
+    for q in (0.10, 0.50, 0.90, 0.99):
+        exact = float(np.quantile(vals, q))
+        est = h.quantile(q)
+        assert exact / base <= est <= exact * base, (q, exact, est)
+    assert h.count() == 2000
+    assert h.sum() == pytest.approx(float(vals.sum()), rel=1e-9)
+
+
+def test_histogram_out_of_range_clamps_to_observed_extremes():
+    h = metrics.histogram("clamped", lo=1e-3, hi=1.0)
+    h.observe(1e-7)                      # underflow bucket
+    h.observe(50.0)                      # overflow bucket
+    assert h.quantile(0.0) == pytest.approx(1e-7)
+    assert h.quantile(1.0) == pytest.approx(50.0)
+
+
+def test_histogram_partial_label_merge():
+    """quantile({"engine": "e0"}) merges that engine's per-bucket series;
+    quantile(None) merges everything — the fleet-wide view."""
+    h = metrics.histogram("lat_s")
+    for v in (1e-3, 2e-3):
+        h.observe(v, engine="e0", bucket="64x64")
+    for v in (4e-3, 8e-3):
+        h.observe(v, engine="e0", bucket="128x64")
+    h.observe(1e2, engine="e1", bucket="64x64")
+    assert h.count({"engine": "e0"}) == 4
+    assert h.count({"engine": "e1"}) == 1
+    assert h.count(None) == 5
+    # e0's p100 never sees e1's 100s outlier (answers are bucket
+    # resolution: within one base ratio, clamped to the observed max)
+    p100_e0 = h.quantile(1.0, {"engine": "e0"})
+    assert 8e-3 / h.base <= p100_e0 <= 8e-3
+    p100_all = h.quantile(1.0)
+    assert 1e2 / h.base <= p100_all <= 1e2
+    assert h.quantile(0.5, {"engine": "nope"}) is None
+
+
+def test_histogram_validates_construction():
+    with pytest.raises(ValueError):
+        Histogram("bad", lo=0.0)
+    with pytest.raises(ValueError):
+        Histogram("bad", lo=1.0, hi=0.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", base=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+def test_snapshot_shape():
+    metrics.counter("a_total", "help a").inc(2, k="v")
+    metrics.histogram("h").observe(0.5)
+    snap = metrics.snapshot()
+    assert snap["a_total"]["kind"] == "counter"
+    assert snap["a_total"]["series"]["k=v"] == 2.0
+    hs = snap["h"]["series"][""]
+    assert hs["count"] == 1 and hs["sum"] == 0.5
+    assert hs["min"] == 0.5 and hs["max"] == 0.5
+
+
+def test_render_prometheus_counter_suffix_and_histogram_series():
+    metrics.counter("gram_served_total", "served").inc(3, rung="0")
+    metrics.counter("plain", "no suffix yet").inc()
+    h = metrics.histogram("lat", lo=1e-3, hi=1.0)
+    h.observe(5e-3)
+    text = metrics.render_prometheus()
+    # already-suffixed counters are NOT doubled; bare ones gain _total
+    assert 'gram_served_total{rung="0"} 3' in text
+    assert "gram_served_total_total" not in text
+    assert "plain_total 1" in text
+    # histogram: cumulative le buckets, +Inf == count, sum/count lines
+    assert 'lat_bucket{le="+Inf"} 1' in text
+    assert "lat_sum 0.005" in text
+    assert "lat_count 1" in text
+    buckets = [ln for ln in text.splitlines() if ln.startswith("lat_bucket")]
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in buckets]
+    assert counts == sorted(counts), "le buckets must be cumulative"
+    assert "# TYPE lat histogram" in text
+
+
+def test_local_registry_is_isolated_from_process_registry():
+    local = MetricsRegistry()
+    local.counter("only_here_total").inc()
+    assert "only_here_total" not in metrics.snapshot()
+    assert local.snapshot()["only_here_total"]["series"][""] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# The engine stats these instruments back (tentpole satellite: capped
+# history + O(1)-update percentiles instead of the unbounded re-sort)
+# ---------------------------------------------------------------------------
+
+def test_engine_finished_history_is_capped_but_stats_count_everything():
+    rng = np.random.default_rng(3)
+    eng = GramEngine(slots=4, levels=0, min_bucket=16, history_cap=8)
+    for _ in range(12):
+        eng.submit(rng.standard_normal((24, 12)).astype(np.float32))
+    finished = eng.run_to_completion()
+    assert len(finished) == 8, "finished ring must stay at history_cap"
+    st = eng.stats()
+    assert st["served"] == 12, "counters must survive history eviction"
+    assert st["history_cap"] == 8
+    assert st["queue_depth"] == 0
+    assert st["p50_latency_s"] is not None
+    assert st["p99_latency_s"] >= st["p50_latency_s"]
+    # percentiles come from the histogram over ALL 12 observations
+    lat = metrics.histogram("gram_request_latency_s")
+    assert lat.count({"engine": st["engine"]}) == 12
+
+
+def test_two_engines_keep_separate_metric_slices():
+    rng = np.random.default_rng(4)
+    e1 = GramEngine(slots=2, levels=0, min_bucket=16)
+    e2 = GramEngine(slots=2, levels=0, min_bucket=16)
+    assert e1.engine_label != e2.engine_label
+    e1.submit(rng.standard_normal((20, 10)).astype(np.float32))
+    e1.run_to_completion()
+    lat = metrics.histogram("gram_request_latency_s")
+    assert lat.count({"engine": e1.engine_label}) == 1
+    assert lat.count({"engine": e2.engine_label}) == 0
+    assert e2.stats()["p50_latency_s"] is None
