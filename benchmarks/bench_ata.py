@@ -20,7 +20,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import ata
+from repro.core.cost_model import ir_leaf_count
+from repro.core.leaf_ir import compile_program
 from repro.kernels.strassen_fused import (aat_traffic_model,
                                           ata_traffic_model,
                                           rank_k_traffic_model)
@@ -134,6 +138,47 @@ def run(quick: bool = False):
     aat_fus_b = by["aat_fused"]["hbm_intermediate_bytes"]
     rk_model = rank_k_traffic_model(n, n, levels=LEVELS, bk=block, bn=block)
     rk_base = rk_model["baseline"]
+
+    # -- the algebra axis: per-(variant, gram) leaf counts + parity ------
+    # The mult-count deliverable of the gram-algebra registry: at equal
+    # levels the dps recursion G(l) = 2G(l-1) + 3t^(l-1) does fewer leaf
+    # products than the paper's 4G(l-1) + 2t^(l-1), with fused parity.
+    want = np.tril(np.asarray(a, np.float64).T @ np.asarray(a, np.float64))
+    scale = max(np.abs(want).max(), 1.0)
+    variant_rows = []
+    # (winograd, dps) is excluded: its levels=2 operand fan-in exceeds
+    # MAX_OPERAND_TERMS, so the executor clamps the depth and the row's
+    # closed-form counts would describe a program the kernel did not run
+    for variant, gram in (("strassen", "strassen"), ("strassen", "dps"),
+                          ("winograd", "strassen")):
+        fn = lambda x: ops.ata_fused(x, levels=LEVELS, variant=variant,
+                                     gram=gram, bk=block, bn=block)
+        compiled = jax.jit(fn).lower(a).compile()
+        wall = timeit(compiled, a, warmup=1, iters=2 if quick else 3)
+        err = float(np.abs(np.asarray(compiled(a), np.float64)
+                           - want).max() / scale)
+        prog = compile_program("ata", LEVELS, variant, gram=gram)
+        row = {
+            "treatment": f"ata_{variant}_{gram}",
+            "variant": variant,
+            "gram": gram,
+            "n": n,
+            "levels": LEVELS,
+            "leaf_count": ir_leaf_count("ata", LEVELS, variant, gram=gram),
+            "mult_count_at_block": prog.mult_count(block, block),
+            "wall_s": wall,
+            "parity_max_rel_err": err,
+            "parity_ok": err < 1e-5,
+        }
+        variant_rows.append(row)
+        print(f"[ata] {row['treatment']:22s} leaves {row['leaf_count']:4d} "
+              f"wall {wall*1e3:8.2f} ms   err {err:.2e}")
+    vby = {(r["variant"], r["gram"]): r for r in variant_rows}
+    dps_below = (vby[("strassen", "dps")]["leaf_count"]
+                 < vby[("strassen", "strassen")]["leaf_count"])
+    print(f"[ata] dps leaf count below strassen-gram at levels={LEVELS}: "
+          f"{dps_below}")
+
     payload = {
         "rows": rows,
         "reference_intermediate_bytes": ref_b,
@@ -149,6 +194,10 @@ def run(quick: bool = False):
         "rank_k_baseline_total_bytes": (
             rk_base["read_bytes"] + rk_base["write_bytes"]
             + rk_base["intermediate_bytes"]),
+        "variant_rows": variant_rows,
+        "acceptance_dps_leaf_count_below_strassen": dps_below,
+        "acceptance_variant_parity": all(r["parity_ok"]
+                                         for r in variant_rows),
     }
     path = write_json("BENCH_ata.json", payload)
     print(f"[ata] wrote {path}")

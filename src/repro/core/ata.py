@@ -55,6 +55,7 @@ def ata(
     levels: Union[int, str] = DEFAULT_LEVELS,
     leaf: int = DEFAULT_LEAF,
     variant: str = "strassen",
+    gram: str = "strassen",
     base_syrk: Optional[Callable] = None,
     base_matmul: Optional[Callable] = None,
     mode: str = "auto",
@@ -86,7 +87,13 @@ def ata(
         Reference mode only (the fused schedule unrolls exactly ``levels``);
         also sets the ``levels="auto"`` depth for both modes.
       variant: Strassen variant for the off-diagonal C21 products
-        ("strassen" | "winograd" | "classical").
+        (any registered algebra — "strassen" | "winograd" | "classical"
+        by default; ``leaf_ir.registered_algebras()``).
+      gram: registered gram algebra for the symmetric decomposition on
+        the FUSED path ("strassen" = the paper's 4-gram + 2-product
+        recursion, "dps" = the Dumas-Pernet-Sedoglavic-shaped 5-product
+        scheme; ``leaf_ir.registered_gram_algebras()``).  The reference
+        recursion is the paper's fixed oracle and ignores it.
       base_syrk: leaf gram fn (n-triangular); default jnp, or Pallas syrk.
         Forces reference mode under ``mode="auto"``.
       base_matmul: leaf matmul for the HASA calls.  Same.
@@ -122,8 +129,8 @@ def ata(
     if gram_of == "rows":
         if mode == "fused":
             from ..kernels.ops import aat_fused
-            return aat_fused(a, levels=levels, variant=variant, bm=block,
-                             bk=block, out_dtype=out_dtype,
+            return aat_fused(a, levels=levels, variant=variant, gram=gram,
+                             bm=block, bk=block, out_dtype=out_dtype,
                              interpret=interpret)
         # reference oracle: AAT(A) = ATA(A^t) — the 2021 paper's identity
         syrk = base_syrk or _default_base_syrk
@@ -131,9 +138,9 @@ def ata(
         return out.astype(out_dtype)
     if mode == "fused":
         from ..kernels.ops import ata_fused
-        return ata_fused(a, levels=levels, variant=variant, bk=block,
-                         bn=block, out_dtype=out_dtype, interpret=interpret,
-                         bwd=bwd)
+        return ata_fused(a, levels=levels, variant=variant, gram=gram,
+                         bk=block, bn=block, out_dtype=out_dtype,
+                         interpret=interpret, bwd=bwd)
     syrk = base_syrk or _default_base_syrk
     out = _ata_rec(a, levels, leaf, variant, syrk, base_matmul)
     return out.astype(out_dtype)

@@ -68,9 +68,11 @@ def ata_mults_exact(m: int, n: int, leaf: int = 32, levels: int | None = None,
 # ---------------------------------------------------------------------------
 # Leaf-IR closed forms (core/leaf_ir.py): leaf-op and operand-term counts
 # of every compiled program kind, as functions of the algebra table's two
-# scalars — products per level t and max operand fan-in q.  The property
-# suite (tests/test_leaf_ir.py) pins compile_program against these for
-# every registered algebra x kind x levels 0-3.
+# scalars — products per level t and max operand fan-in q — and, for gram
+# kinds, the gram algebra's recursion shape (n_sym recursive Grams +
+# n_mm general products per level).  The property suite
+# (tests/test_leaf_ir.py) pins compile_program against these for every
+# registered algebra x gram algebra x kind x levels 0-3.
 # ---------------------------------------------------------------------------
 
 def _algebra_scalars(variant: str) -> tuple[int, int]:
@@ -84,34 +86,56 @@ def _algebra_scalars(variant: str) -> tuple[int, int]:
     return t, q
 
 
-def ir_leaf_count(kind: str, levels: int, variant: str = "strassen") -> int:
-    """Leaf ops of ``compile_program(kind, levels, variant)``.
+def _gram_scalars(gram: str) -> tuple[int, int, int, int]:
+    """(n_sym, n_mm, sym term fan-in, mm term fan-in) of a registered
+    gram algebra — pure table inspection, like :func:`_algebra_scalars`."""
+    from .leaf_ir import get_gram_algebra
+    galg = get_gram_algebra(gram)
+    n_sym, n_mm = len(galg["sym"]), len(galg["mm"])
+    f_sym = max(len(terms) for terms, _d in galg["sym"])
+    f_mm = max(max(len(lt), len(rt)) for lt, rt, _d in galg["mm"])
+    return n_sym, n_mm, f_sym, f_mm
+
+
+def ir_leaf_count(kind: str, levels: int, variant: str = "strassen",
+                  gram: str = "strassen") -> int:
+    """Leaf ops of ``compile_program(kind, levels, variant, gram=gram)``.
 
     matmul/symm: t^levels (one table row choice per level).
-    Gram kinds (ata/aat/rank_k): G(l) = 4 G(l-1) + 2 t^(l-1), G(0) = 1 —
-    four recursive gram quadrant calls plus two off-diagonal products
-    expanded with the table.
+    Gram kinds (ata/aat/rank_k): G(l) = n_sym G(l-1) + n_mm t^(l-1),
+    G(0) = 1 — the gram algebra's recursive Gram calls plus its general
+    products expanded with the table (strassen-gram: 4 + 2 t^(l-1);
+    dps: 2 + 3 t^(l-1), strictly fewer at every level).
     """
     t, _q = _algebra_scalars(variant)
     if kind in ("matmul", "symm"):
         return t ** levels
     if kind in ("ata", "aat", "rank_k"):
+        n_sym, n_mm, _fs, _fm = _gram_scalars(gram)
         g = 1
         for lv in range(1, levels + 1):
-            g = 4 * g + 2 * t ** (lv - 1)
+            g = n_sym * g + n_mm * t ** (lv - 1)
         return g
     raise ValueError(f"unknown IR kind {kind!r}")
 
 
-def ir_max_terms(kind: str, levels: int, variant: str = "strassen") -> int:
+def ir_max_terms(kind: str, levels: int, variant: str = "strassen",
+                 gram: str = "strassen") -> int:
     """Max operand-term fan-in of a compiled program: q^levels for
-    matmul/symm; gram kinds expand their off-diagonal products one level
-    shallower (SYRK leaves are single-term), so q^(levels-1)."""
+    matmul/symm.  Gram kinds: a depth-d sym chain compounds its term
+    fan-in f_sym d times; an mm product spawned at depth d starts at
+    f_sym^d * f_mm terms and expands the remaining levels-1-d splits at
+    q per level (SYRK leaves stay at f_sym^levels).  The classic
+    strassen-gram entry (f_sym = f_mm = 1) reduces to q^(levels-1)."""
     _t, q = _algebra_scalars(variant)
     if kind in ("matmul", "symm"):
         return q ** levels
     if kind in ("ata", "aat", "rank_k"):
-        return q ** max(levels - 1, 0)
+        n_sym, _n_mm, f_sym, f_mm = _gram_scalars(gram)
+        best = f_sym ** levels
+        for d in range(levels):
+            best = max(best, f_sym ** d * f_mm * q ** (levels - 1 - d))
+        return best
     raise ValueError(f"unknown IR kind {kind!r}")
 
 
@@ -125,23 +149,31 @@ def aat_mults_exact(m: int, n: int, leaf: int = 32,
 
 def symm_leaf_count(levels: int, variant: str = "strassen") -> int:
     """Leaf products of a flattened ``X @ Sym`` schedule
-    (``core.schedule.plan_symm``): 7 per level for the fast variants,
-    8 for classical."""
-    return (8 if variant == "classical" else 7) ** levels
+    (``core.schedule.plan_symm``): one table-row choice per level, so
+    t^levels with t the registered table's product count (7 for the
+    fast square variants, 8 classical, 11 for <3,2,2> bb322, ...) —
+    derived from the table itself, so user-registered algebras count
+    correctly instead of being silently priced as Strassen."""
+    t, _q = _algebra_scalars(variant)
+    return t ** levels
 
 
 def symm_mults_exact(m: int, n: int, levels: int,
                      variant: str = "strassen") -> int:
     """Exact multiplication count of the flattened ``X @ Sym`` schedule on
-    an (m, n) x (n, n) problem with ``m``, ``n`` already padded to
-    ``2^levels`` multiples (the executor's padded shape): each of the
-    ``symm_leaf_count`` leaves is an (m/2^l, n/2^l) x (n/2^l, n/2^l)
-    product.  Matches ``schedule.plan_symm(levels).mult_count(mb, nb)``
+    an (m, n) x (n, n) problem with ``m``, ``n`` already padded to the
+    per-axis leaf-grid multiples of the algebra's <dm, dk, dn> split
+    (the executor's padded shape): each of the ``symm_leaf_count``
+    leaves is an (m/Bm, n/Bn) x (n/Bn, n/Bn) product.  Matches
+    ``schedule.plan_symm(levels).mult_count(mb, nb)``
     (tests/test_properties.py)."""
-    B = 1 << levels
-    if m % B or n % B:
-        raise ValueError(f"shape ({m}, {n}) not padded to 2^{levels}")
-    return symm_leaf_count(levels, variant) * (m // B) * (n // B) ** 2
+    from .leaf_ir import algebra_dims
+    dm, _dk, dn = algebra_dims(variant)
+    bm, bn = dm ** levels, dn ** levels
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m}, {n}) not padded to the "
+                         f"({bm}, {bn}) leaf grid at {levels} levels")
+    return symm_leaf_count(levels, variant) * (m // bm) * (n // bn) ** 2
 
 
 def ata_bwd_mults_exact(m: int, n: int, leaf: int = 32,

@@ -2,8 +2,11 @@
 
 The Benson–Ballard observation carried into this repo: a fast-matmul
 variant only pays off when the variant *and* blocking are selected per
-shape.  This module searches ``mode x levels x (bm, bk, bn)`` per
-(shape bucket, dtype, backend), ranks candidates with the analytic HBM
+shape.  This module searches ``mode x levels x variant x gram x
+(bm, bk, bn)`` per (shape bucket, dtype, backend) — the variant and
+gram-algebra axes enumerate the live leaf-IR registries, so registering
+a new algebra automatically enters it in the contest — ranks candidates
+with the analytic HBM
 traffic model (``kernels.strassen_fused.ata_traffic_model`` — exact for
 the fused kernel on hardware), optionally times the top-K on the current
 device, and persists the winner to a JSON cache under
@@ -20,7 +23,7 @@ Cache file format (``gram_autotune.json``)::
      "entries": {
        "<backend>/jax-<version>/<dtype>/<kind>/<M>x<N>": {
           "mode": "fused", "levels": 2, "variant": "strassen",
-          "bm": 256, "bk": 256, "bn": 256,
+          "gram": "strassen", "bm": 256, "bk": 256, "bn": 256,
           "model_bytes": 1234, "measured_s": null, "source": "model",
           "jax": "<version>", "backend": "<backend>"}}}
 
@@ -117,18 +120,40 @@ def _key(backend: str, dtype: str, kind: str, M: int, N: int) -> str:
 # Search space + model scoring
 # ---------------------------------------------------------------------------
 
+def _variant_axis(kind: str) -> list:
+    """(variant, gram) pairs ``kind`` can execute, from the live
+    registries.  Gram kinds need square 2x2 variants for the off-diagonal
+    table expansion; the gram-algebra axis only exists for them (matmul
+    and everything else runs any registered split with the fixed
+    placeholder gram)."""
+    from ..core import leaf_ir
+    if kind in ("ata", "aat", "rank_k", "ata_bwd"):
+        variants = [v for v in leaf_ir.registered_algebras()
+                    if leaf_ir.algebra_dims(v) == (2, 2, 2)]
+        return [(v, g) for v in variants
+                for g in leaf_ir.registered_gram_algebras()]
+    return [(v, "strassen") for v in leaf_ir.registered_algebras()]
+
+
 def candidate_space(M: int, N: int, *, backend: Optional[str] = None,
                     blocks=(128, 256, 512), levels=(0, 1, 2),
                     modes=("fused", "reference"), kind: str = "ata"):
-    """Enumerate (mode, levels, bm/bk/bn) candidates for an (M, N) bucket.
+    """Enumerate (mode, levels, variant, gram, bm/bk/bn) candidates for an
+    (M, N) bucket.
 
-    Blocks larger than the bucket only add padding, so they are dropped
-    (keeping at least the smallest candidate).  The grid only varies the
-    knobs ``kind`` actually uses — ``aat`` ties bm=bk and ignores bn, so
-    enumerating bn would fill the measured top-K with identically-scored
-    duplicates.
+    The variant/gram axes come from the live leaf-IR registries
+    (``_variant_axis``), so registering a new algebra automatically puts
+    it in contention — the historical hardcoded ``"strassen"`` meant even
+    the registered winograd table could never win.  Blocks larger than
+    the bucket only add padding, so they are dropped (keeping at least
+    the smallest candidate).  The grid only varies the knobs ``kind``
+    actually uses — ``aat`` ties bm=bk and ignores bn, and at levels=0
+    every (variant, gram) compiles the identical classical program, so
+    only one candidate is emitted there; enumerating the rest would fill
+    the measured top-K with identically-scored duplicates.
     """
     usable = [b for b in blocks if b <= max(M, N)] or [min(blocks)]
+    axis = _variant_axis(kind)
     out = []
     for mode in modes:
         for lv in levels:
@@ -136,16 +161,18 @@ def candidate_space(M: int, N: int, *, backend: Optional[str] = None,
                 # blocking is a fused-kernel knob; the reference recursion
                 # leaves tiling to XLA — one candidate per level.
                 out.append({"mode": "reference", "levels": lv,
-                            "variant": "strassen",
+                            "variant": "strassen", "gram": "strassen",
                             "bm": min(usable), "bk": min(usable),
                             "bn": min(usable)})
                 continue
-            for bk in usable:
-                bns = [bk] if kind == "aat" else usable
-                for bn in bns:
-                    out.append({"mode": "fused", "levels": lv,
-                                "variant": "strassen",
-                                "bm": bk, "bk": bk, "bn": bn})
+            pairs = axis if lv > 0 else [("strassen", "strassen")]
+            for variant, gram in pairs:
+                for bk in usable:
+                    bns = [bk] if kind == "aat" else usable
+                    for bn in bns:
+                        out.append({"mode": "fused", "levels": lv,
+                                    "variant": variant, "gram": gram,
+                                    "bm": bk, "bk": bk, "bn": bn})
     return out
 
 
@@ -171,7 +198,9 @@ def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
         # runner (and the ata() consumer the winner applies to) drives —
         # jax.grad through the dense forward packs the cotangent first.
         t = ata_bwd_traffic_model(m, n, levels=cand["levels"],
-                                  variant=cand["variant"], bk=cand["bk"],
+                                  variant=cand["variant"],
+                                  gram=cand.get("gram", "strassen"),
+                                  bk=cand["bk"],
                                   bn=cand["bn"], in_bytes=in_bytes,
                                   cotangent="dense")
         side = t if cand["mode"] == "fused" else t["dense_baseline"]
@@ -180,7 +209,9 @@ def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
     if kind == "rank_k":
         from ..kernels.strassen_fused import rank_k_traffic_model
         t = rank_k_traffic_model(m, n, levels=cand["levels"],
-                                 variant=cand["variant"], bk=cand["bk"],
+                                 variant=cand["variant"],
+                                 gram=cand.get("gram", "strassen"),
+                                 bk=cand["bk"],
                                  bn=cand["bn"], in_bytes=in_bytes,
                                  state_bytes=out_bytes)
         # "reference" = the status-quo streamed update (delta stack +
@@ -193,12 +224,16 @@ def model_score(m: int, n: int, cand: dict, *, in_bytes: int = 4,
                                               ata_traffic_model)
         if kind == "aat":
             t = aat_traffic_model(m, n, levels=cand["levels"],
-                                  variant=cand["variant"], bm=cand["bm"],
+                                  variant=cand["variant"],
+                                  gram=cand.get("gram", "strassen"),
+                                  bm=cand["bm"],
                                   bk=cand["bk"], in_bytes=in_bytes,
                                   out_bytes=out_bytes)
         else:
             t = ata_traffic_model(m, n, levels=cand["levels"],
-                                  variant=cand["variant"], bk=cand["bk"],
+                                  variant=cand["variant"],
+                                  gram=cand.get("gram", "strassen"),
+                                  bk=cand["bk"],
                                   bn=cand["bn"], in_bytes=in_bytes,
                                   out_bytes=out_bytes)
         return float(t["read_bytes"] + t["write_bytes"]
@@ -352,12 +387,13 @@ def _build_runner(M: int, N: int, dtype, cand: dict, interpret,
                   kind: str = "ata"):
     from ..core.ata import ata
 
+    galg = cand.get("gram", "strassen")
     if kind == "aat":
         def fn(a):
             return ata(a, gram_of="rows", levels=cand["levels"],
-                       variant=cand["variant"], mode=cand["mode"],
-                       block=cand["bk"], out_dtype=jnp.float32,
-                       interpret=interpret)
+                       variant=cand["variant"], gram=galg,
+                       mode=cand["mode"], block=cand["bk"],
+                       out_dtype=jnp.float32, interpret=interpret)
         return jax.jit(fn)
 
     if kind == "rank_k":
@@ -371,7 +407,7 @@ def _build_runner(M: int, N: int, dtype, cand: dict, interpret,
                 stack = jnp.zeros((t * (t + 1) // 2 * cand["bn"],
                                    cand["bn"]), jnp.float32)
                 return rank_k_update(stack, a, levels=cand["levels"],
-                                     variant=cand["variant"],
+                                     variant=cand["variant"], gram=galg,
                                      bk=cand["bk"], interpret=interpret,
                                      donate=False)
             return jax.jit(fn)
@@ -393,13 +429,13 @@ def _build_runner(M: int, N: int, dtype, cand: dict, interpret,
         def fn(a):
             return jax.grad(lambda x: ata(
                 x, levels=cand["levels"], variant=cand["variant"],
-                mode="fused", bwd=bwd, block=cand["bk"],
+                gram=galg, mode="fused", bwd=bwd, block=cand["bk"],
                 out_dtype=jnp.float32, interpret=interpret).sum())(a)
         return jax.jit(fn)
 
     def fn(a):
         return ata(a, levels=cand["levels"], variant=cand["variant"],
-                   mode=cand["mode"], block=cand["bk"],
+                   gram=galg, mode=cand["mode"], block=cand["bk"],
                    out_dtype=jnp.float32, interpret=interpret)
     return jax.jit(fn)
 

@@ -153,49 +153,54 @@ def pallas_base_syrk(bk=None, bn=None, interpret=None):
 # core recursion routes here via ata(..., mode="fused").
 # ---------------------------------------------------------------------------
 
-def ata_fused(a, *, levels=2, variant="strassen", bk=None, bn=None,
-              out_dtype=None, interpret=None, bwd="fused"):
+def ata_fused(a, *, levels=2, variant="strassen", gram="strassen", bk=None,
+              bn=None, out_dtype=None, interpret=None, bwd="fused"):
     """Dense ``tril(a.T @ a)`` via the fused leaf-task schedule.
     ``bk``/``bn`` default to the autotune-cache winner for this shape
-    bucket (256 when untuned).  ``bwd`` picks the VJP engine: ``"fused"``
+    bucket (256 when untuned).  ``gram`` picks the registered symmetric
+    decomposition (``leaf_ir.registered_gram_algebras()``; ``"dps"`` is
+    the 5-product scheme).  ``bwd`` picks the VJP engine: ``"fused"``
     (packed-cotangent symm schedule, the default) or ``"dense"`` (the
     classical dense-dot baseline)."""
     bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
-    return _ata_fused_jit(a, levels=levels, variant=variant, bk=bs["bk"],
-                          bn=bs["bn"], out_dtype=out_dtype,
+    return _ata_fused_jit(a, levels=levels, variant=variant, gram=gram,
+                          bk=bs["bk"], bn=bs["bn"], out_dtype=out_dtype,
                           interpret=interpret, bwd=bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bk", "bn", "out_dtype", "interpret", "bwd"))
-def _ata_fused_jit(a, *, levels, variant, bk, bn, out_dtype=None,
-                   interpret=None, bwd="fused"):
+    "levels", "variant", "gram", "bk", "bn", "out_dtype", "interpret",
+    "bwd"))
+def _ata_fused_jit(a, *, levels, variant, gram="strassen", bk, bn,
+                   out_dtype=None, interpret=None, bwd="fused"):
     from . import strassen_fused as _sf
-    return _sf.fused_ata(a, levels=levels, variant=variant, bk=bk, bn=bn,
-                         out_dtype=out_dtype,
+    return _sf.fused_ata(a, levels=levels, variant=variant, gram=gram,
+                         bk=bk, bn=bn, out_dtype=out_dtype,
                          interpret=_auto_interpret(interpret), bwd=bwd)
 
 
-def ata_fused_packed(a, *, levels=2, variant="strassen", bk=None, bn=None,
-                     out_dtype=None, interpret=None, bwd="fused"):
+def ata_fused_packed(a, *, levels=2, variant="strassen", gram="strassen",
+                     bk=None, bn=None, out_dtype=None, interpret=None,
+                     bwd="fused"):
     """Packed lower-tri block stack of ``a.T @ a`` via the fused schedule
     (upper-triangular blocks are never computed or written).
     Differentiable: the custom VJP consumes the *packed* cotangent
     directly (``bwd="fused"``) — no dense n^2 buffer in the backward."""
     bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
     return _ata_fused_packed_jit(a, levels=levels, variant=variant,
-                                 bk=bs["bk"], bn=bs["bn"],
+                                 gram=gram, bk=bs["bk"], bn=bs["bn"],
                                  out_dtype=out_dtype, interpret=interpret,
                                  bwd=bwd)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bk", "bn", "out_dtype", "interpret", "bwd"))
-def _ata_fused_packed_jit(a, *, levels, variant, bk, bn, out_dtype=None,
-                          interpret=None, bwd="fused"):
+    "levels", "variant", "gram", "bk", "bn", "out_dtype", "interpret",
+    "bwd"))
+def _ata_fused_packed_jit(a, *, levels, variant, gram="strassen", bk, bn,
+                          out_dtype=None, interpret=None, bwd="fused"):
     from . import strassen_fused as _sf
     packed, _ = _sf.fused_ata_packed(
-        a, levels=levels, variant=variant, bk=bk, bn=bn,
+        a, levels=levels, variant=variant, gram=gram, bk=bk, bn=bn,
         out_dtype=out_dtype, interpret=_auto_interpret(interpret), bwd=bwd)
     return packed
 
@@ -255,52 +260,53 @@ def _matmul_fused_jit(a, b, *, levels, variant, bm, bk, bn, trans_a=False,
                             interpret=_auto_interpret(interpret), bwd=bwd)
 
 
-def aat_fused(a, *, levels=2, variant="strassen", bm=None, bk=None,
-              out_dtype=None, interpret=None):
+def aat_fused(a, *, levels=2, variant="strassen", gram="strassen", bm=None,
+              bk=None, out_dtype=None, interpret=None):
     """Dense ``tril(a @ a.T)`` — the Arrigoni-Massini row gram
     (``ata(x, gram_of="rows")``) via the same leaf-program executor; the
     transpose of ``a`` never exists in HBM."""
     bs = _resolve_blocks("aat", a.shape[0], a.shape[1], a.dtype,
                          bm=bm, bk=bk)
-    return _aat_fused_jit(a, levels=levels, variant=variant, bm=bs["bm"],
-                          bk=bs["bk"], out_dtype=out_dtype,
+    return _aat_fused_jit(a, levels=levels, variant=variant, gram=gram,
+                          bm=bs["bm"], bk=bs["bk"], out_dtype=out_dtype,
                           interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bm", "bk", "out_dtype", "interpret"))
-def _aat_fused_jit(a, *, levels, variant, bm, bk, out_dtype=None,
-                   interpret=None):
+    "levels", "variant", "gram", "bm", "bk", "out_dtype", "interpret"))
+def _aat_fused_jit(a, *, levels, variant, gram="strassen", bm, bk,
+                   out_dtype=None, interpret=None):
     from . import strassen_fused as _sf
-    return _sf.fused_aat(a, levels=levels, variant=variant, bm=bm, bk=bk,
-                         out_dtype=out_dtype,
+    return _sf.fused_aat(a, levels=levels, variant=variant, gram=gram,
+                         bm=bm, bk=bk, out_dtype=out_dtype,
                          interpret=_auto_interpret(interpret))
 
 
-def aat_fused_packed(a, *, levels=2, variant="strassen", bm=None, bk=None,
-                     out_dtype=None, interpret=None):
+def aat_fused_packed(a, *, levels=2, variant="strassen", gram="strassen",
+                     bm=None, bk=None, out_dtype=None, interpret=None):
     """Packed lower-tri block stack of ``a @ a.T`` (row-gram dual of
     :func:`ata_fused_packed`)."""
     bs = _resolve_blocks("aat", a.shape[0], a.shape[1], a.dtype,
                          bm=bm, bk=bk)
     return _aat_fused_packed_jit(a, levels=levels, variant=variant,
-                                 bm=bs["bm"], bk=bs["bk"],
+                                 gram=gram, bm=bs["bm"], bk=bs["bk"],
                                  out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bm", "bk", "out_dtype", "interpret"))
-def _aat_fused_packed_jit(a, *, levels, variant, bm, bk, out_dtype=None,
-                          interpret=None):
+    "levels", "variant", "gram", "bm", "bk", "out_dtype", "interpret"))
+def _aat_fused_packed_jit(a, *, levels, variant, gram="strassen", bm, bk,
+                          out_dtype=None, interpret=None):
     from . import strassen_fused as _sf
     packed, _ = _sf.fused_aat_packed(
-        a, levels=levels, variant=variant, bm=bm, bk=bk,
+        a, levels=levels, variant=variant, gram=gram, bm=bm, bk=bk,
         out_dtype=out_dtype, interpret=_auto_interpret(interpret))
     return packed
 
 
-def rank_k_update(c_stack, a, *, levels=2, variant="strassen", bk=None,
-                  out_dtype=None, interpret=None, donate=True):
+def rank_k_update(c_stack, a, *, levels=2, variant="strassen",
+                  gram="strassen", bk=None, out_dtype=None, interpret=None,
+                  donate=True):
     """``C += tril(a.T @ a)`` on a packed tile stack in ONE kernel — the
     accumulating (rank-k) program.  The stack seeds the kernel's VMEM
     accumulator, so a streamed Gram chunk materializes no delta stack
@@ -308,19 +314,20 @@ def rank_k_update(c_stack, a, *, levels=2, variant="strassen", bk=None,
     donated so XLA updates it in place at the jit boundary."""
     bs = _resolve_blocks("rank_k", a.shape[0], a.shape[1], a.dtype, bk=bk)
     fn = _rank_k_jit_donated if donate else _rank_k_jit
-    return fn(c_stack, a, levels=levels, variant=variant, bk=bs["bk"],
-              out_dtype=out_dtype, interpret=interpret)
+    return fn(c_stack, a, levels=levels, variant=variant, gram=gram,
+              bk=bs["bk"], out_dtype=out_dtype, interpret=interpret)
 
 
-def _rank_k_impl(c_stack, a, *, levels, variant, bk, out_dtype=None,
-                 interpret=None):
+def _rank_k_impl(c_stack, a, *, levels, variant, gram="strassen", bk,
+                 out_dtype=None, interpret=None):
     from . import strassen_fused as _sf
     return _sf.fused_rank_k_update(
-        c_stack, a, levels=levels, variant=variant, bk=bk,
+        c_stack, a, levels=levels, variant=variant, gram=gram, bk=bk,
         out_dtype=out_dtype, interpret=_auto_interpret(interpret))
 
 
-_rank_k_static = ("levels", "variant", "bk", "out_dtype", "interpret")
+_rank_k_static = ("levels", "variant", "gram", "bk", "out_dtype",
+                  "interpret")
 _rank_k_jit = jax.jit(_rank_k_impl, static_argnames=_rank_k_static)
 _rank_k_jit_donated = jax.jit(_rank_k_impl, static_argnames=_rank_k_static,
                               donate_argnums=(0,))

@@ -63,7 +63,6 @@ from jax.experimental.pallas import tpu as pltpu
 from ..core import leaf_ir
 from ..core.ata import ata_levels_for
 from ..core.leaf_ir import LeafProgram, compile_program
-from ..core.strassen import strassen_levels_for
 from ..core.symmetry import unpack_tril_blocks
 from .ops import _auto_interpret
 from .syrk import _tri_decode
@@ -91,31 +90,34 @@ MAX_OPERAND_TERMS = 8
 _CLAMP_WARNED: set = set()
 
 
-def _warn_fan_in_clamp(kind: str, variant: str, requested: int,
+def _warn_fan_in_clamp(kind: str, variant: str, gram: str, requested: int,
                        clamped: int) -> None:
-    key = (kind, variant, requested, clamped)
+    key = (kind, variant, gram, requested, clamped)
     if key in _CLAMP_WARNED:
         return
     _CLAMP_WARNED.add(key)
     warnings.warn(
-        f"fused {kind} schedule: levels={requested} (variant={variant!r}) "
-        f"exceeds the MAX_OPERAND_TERMS={MAX_OPERAND_TERMS} VMEM operand "
-        f"fan-in; clamped to levels={clamped}",
+        f"fused {kind} schedule: levels={requested} (variant={variant!r}, "
+        f"gram={gram!r}) exceeds the MAX_OPERAND_TERMS={MAX_OPERAND_TERMS} "
+        f"VMEM operand fan-in; clamped to levels={clamped}",
         stacklevel=3)
 
 
-def _fan_in_clamp(kind: str, levels: int, variant: str) -> int:
+def _fan_in_clamp(kind: str, levels: int, variant: str,
+                  gram: str = "strassen") -> int:
     """Clamp ``levels`` until the program's operand fan-in fits VMEM,
     warning once per distinct clamp (the shape-driven clamp above this is
     expected behaviour and stays silent).  ``rank_k`` shares the ``ata``
     program, ``symm`` warns under its own name as before."""
     prog_kind = "ata" if kind == "rank_k" else kind
+    g = gram if prog_kind in ("ata", "aat") else "strassen"
     requested = levels
-    while levels > 0 and compile_program(prog_kind, levels, variant) \
-            .max_terms > MAX_OPERAND_TERMS:
+    while levels > 0 and compile_program(prog_kind, levels, variant,
+                                         gram=g).max_terms \
+            > MAX_OPERAND_TERMS:
         levels -= 1
     if levels < requested:
-        _warn_fan_in_clamp(kind, variant, requested, levels)
+        _warn_fan_in_clamp(kind, variant, g, requested, levels)
     return levels
 
 
@@ -125,7 +127,8 @@ def _fan_in_clamp(kind: str, levels: int, variant: str) -> int:
 # ---------------------------------------------------------------------------
 
 def _ata_geometry(m: int, n: int, levels: int, variant: str,
-                  bk: int, bn: int, kind: str = "ata"):
+                  bk: int, bn: int, kind: str = "ata",
+                  gram: str = "strassen"):
     """Executor/traffic-model geometry for the column-gram kinds.
 
     Clamps ``levels`` so (a) every leaf block holds at least one (bk, bn)
@@ -133,9 +136,9 @@ def _ata_geometry(m: int, n: int, levels: int, variant: str,
     then derives leaf/padded shapes and grid extents.
     """
     levels = min(levels, ata_levels_for(m, n, max(bk, bn)))
-    levels = _fan_in_clamp(kind, levels, variant)
+    levels = _fan_in_clamp(kind, levels, variant, gram)
     plan = compile_program("rank_k" if kind == "rank_k" else "ata",
-                           levels, variant)
+                           levels, variant, gram=gram)
     B = plan.blocks
     mb = _round_up(max(m, 1), B * bk) // B     # leaf rows (bk multiple)
     nb = _round_up(max(n, 1), B * bn) // B     # leaf cols (bn multiple)
@@ -149,13 +152,13 @@ def _ata_geometry(m: int, n: int, levels: int, variant: str,
 
 
 def _aat_geometry(m: int, n: int, levels: int, variant: str,
-                  bm: int, bk: int):
+                  bm: int, bk: int, gram: str = "strassen"):
     """Geometry for the row-gram (A A^t) kind — the column-gram geometry
     with the roles of the two grids swapped: output tiles tile the *row*
     dimension, the contraction sweeps the columns."""
     levels = min(levels, ata_levels_for(m, n, max(bm, bk)))
-    levels = _fan_in_clamp("aat", levels, variant)
-    plan = compile_program("aat", levels, variant)
+    levels = _fan_in_clamp("aat", levels, variant, gram)
+    plan = compile_program("aat", levels, variant, gram=gram)
     B = plan.blocks
     mb = _round_up(max(m, 1), B * bm) // B     # leaf rows (bm multiple)
     nb = _round_up(max(n, 1), B * bk) // B     # leaf cols (bk multiple)
@@ -172,26 +175,29 @@ def _symm_geometry(m: int, T: int, levels: int, variant: str, bm: int):
     """Level clamp + padded-row geometry for the symm executor (shared
     with ``ata_bwd_traffic_model``).  ``T`` is the packed stack's tile
     count per side; the column side cannot be padded (the stack layout is
-    fixed), so levels clamp to divisors of T."""
-    while levels > 0 and T % (1 << levels):
+    fixed), so levels clamp to divisors of T.  Rectangular variants pad
+    rows to their own ``blocks_m`` grid while T divides ``blocks_n``."""
+    dn = leaf_ir.algebra_dims(variant)[2]
+    while levels > 0 and T % (dn ** levels):
         levels -= 1
     levels = _fan_in_clamp("symm", levels, variant)
     plan = compile_program("symm", levels, variant)
-    B = plan.blocks
-    mb = _round_up(max(m, 1), B * bm) // B
-    return {"plan": plan, "levels": levels, "M": B * mb,
-            "nbm": mb // bm, "q": T // B}
+    bm_blocks = plan.blocks_m
+    mb = _round_up(max(m, 1), bm_blocks * bm) // bm_blocks
+    return {"plan": plan, "levels": levels, "M": bm_blocks * mb,
+            "nbm": mb // bm, "q": T // plan.blocks_n}
 
 
-def _rank_k_geometry(m: int, T: int, levels: int, variant: str, bk: int):
+def _rank_k_geometry(m: int, T: int, levels: int, variant: str, bk: int,
+                     gram: str = "strassen"):
     """Geometry for C += A^t A against an existing packed (T-tile) stack:
     the ata geometry with the column side pinned to the stack layout, so
     levels clamp to divisors of T (like symm)."""
     while levels > 0 and T % (1 << levels):
         levels -= 1
     levels = min(levels, ata_levels_for(m, T, 1))   # never exceed the grid
-    levels = _fan_in_clamp("rank_k", levels, variant)
-    plan = compile_program("rank_k", levels, variant)
+    levels = _fan_in_clamp("rank_k", levels, variant, gram)
+    plan = compile_program("rank_k", levels, variant, gram=gram)
     B = plan.blocks
     mb = _round_up(max(m, 1), B * bk) // B
     return {"plan": plan, "levels": levels, "M": B * mb, "mb": mb,
@@ -216,6 +222,7 @@ class _Spec:
     kind: str
     levels: int
     variant: str
+    gram: str                   # gram-algebra entry (gram kinds)
     trans_a: bool               # matmul-only operand-spec transposes
     trans_b: bool
     tmax: int
@@ -225,7 +232,7 @@ class _Spec:
     n_tj: int                   # dense outputs: tiles along j (0 for tri)
     q_i: int
     q_j: int
-    blocks: int
+    blocks_j: int               # dense outputs: leaf blocks along j
     bi: int
     bj: int
     bc: int
@@ -246,10 +253,12 @@ def _bind(prog: LeafProgram, *, n_out, n_tj, q_i, q_j, n_k, bi, bj, bc,
     ls, rs, os_ = prog.left_spec, prog.right_spec, prog.out_spec
     return _Spec(
         kind=prog.kind, levels=prog.levels, variant=prog.variant,
+        gram=prog.gram,
         trans_a=ls.transpose if prog.kind == "matmul" else False,
         trans_b=rs.transpose if prog.kind == "matmul" else False,
         tmax=prog.max_terms, n_c=prog.max_contributions, n_k=n_k,
-        n_out=n_out, n_tj=n_tj, q_i=q_i, q_j=q_j, blocks=prog.blocks,
+        n_out=n_out, n_tj=n_tj, q_i=q_i, q_j=q_j,
+        blocks_j=prog.out_blocks[1],
         bi=bi, bj=bj, bc=bc,
         out_tri=os_.packing == "tri",
         left_trans=ls.transpose, right_trans=rs.transpose,
@@ -258,29 +267,34 @@ def _bind(prog: LeafProgram, *, n_out, n_tj, q_i, q_j, n_k, bi, bj, bc,
 
 
 # ---------------------------------------------------------------------------
-# Scalar-prefetch tables: the program lowered to int32 arrays indexed by
-# (leaf destination, contribution slot[, term slot]).  Empty slots carry
-# sign 0 (the kernel skips them) and index block (0, 0) (a harmless
-# fetch).  Uniform across kinds: sign + (row, col, sign) per side + the
-# right-side trans table (per-term mirrors only ever occur on tri-stored
-# right operands; left per-term trans is asserted unused at lowering —
-# the left side's transposes are whole-operand OperandSpec flags).
+# Scalar-prefetch tables: the program lowered to arrays indexed by
+# (leaf destination, contribution slot[, term slot]) — int32 index
+# tables, float32 coefficient tables (rational gram-algebra coefficients
+# like dps's +-1/2, +-1/4 must survive lowering).  Empty slots carry
+# coefficient 0 (the kernel skips them) and index block (0, 0) (a
+# harmless fetch).  Uniform across kinds: coeff + (row, col, coeff) per
+# side + the right-side trans table (per-term mirrors only ever occur on
+# tri-stored right operands; left per-term trans is asserted unused at
+# lowering — the left side's transposes are whole-operand OperandSpec
+# flags, and transposed gram destinations were normalized into
+# side-swapped contributions at the IR layer).
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
 def _program_tables(kind: str, levels: int, variant: str,
+                    gram: str = "strassen",
                     trans_a: bool = False, trans_b: bool = False):
-    prog = compile_program(kind, levels, variant,
+    prog = compile_program(kind, levels, variant, gram=gram,
                            trans_a=trans_a, trans_b=trans_b)
     n_dest, n_c, tmax = prog.n_dests(), prog.max_contributions, \
         prog.max_terms
-    sign = np.zeros((n_dest, n_c), np.int32)
+    sign = np.zeros((n_dest, n_c), np.float32)
     lrow = np.zeros((n_dest, n_c, tmax), np.int32)
     lcol = np.zeros_like(lrow)
-    lsgn = np.zeros_like(lrow)
+    lsgn = np.zeros((n_dest, n_c, tmax), np.float32)
     rrow = np.zeros_like(lrow)
     rcol = np.zeros_like(lrow)
-    rsgn = np.zeros_like(lrow)
+    rsgn = np.zeros_like(lsgn)
     rtrn = np.zeros_like(lrow)
     for (di, dj), contribs in prog.by_dest().items():
         ld = prog.dest_index(di, dj)
@@ -316,7 +330,7 @@ def _dest_ld(gi, gj, spec: _Spec):
     di, dj = gi // spec.q_i, gj // spec.q_j
     if spec.out_tri:
         return di * (di + 1) // 2 + dj
-    return di * spec.blocks + dj
+    return di * spec.blocks_j + dj
 
 
 def _tri_term_coords(rrow_ref, rcol_ref, rtrn_ref, ld, c, qt, spec, k, jq):
@@ -410,7 +424,7 @@ def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
     tri stack for tri-packed programs, the dense (padded) grid otherwise.
     """
     tables = _program_tables(spec.kind, spec.levels, spec.variant,
-                             spec.trans_a, spec.trans_b)
+                             spec.gram, spec.trans_a, spec.trans_b)
     n_tab = len(tables)
 
     def left_map(p):
@@ -489,7 +503,7 @@ def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
     # and HLO censuses attribute kernel time/traffic to the schedule
     # that produced it (DESIGN.md §14)
     with jax.named_scope(
-            f"fused:{spec.kind}:l{spec.levels}:{spec.variant}"):
+            f"fused:{spec.kind}:l{spec.levels}:{spec.variant}:{spec.gram}"):
         return pl.pallas_call(
             functools.partial(_leaf_kernel, spec=spec),
             grid_spec=grid_spec,
@@ -512,6 +526,7 @@ def fused_ata_packed(
     *,
     levels: int = 2,
     variant: str = "strassen",
+    gram: str = "strassen",
     bk: int = 256,
     bn: int = 256,
     out_dtype=None,
@@ -543,36 +558,36 @@ def fused_ata_packed(
     """
     interpret = _auto_interpret(interpret)
     m, n = a.shape
-    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-    packed = _fused_ata_packed_core(a, levels, variant, bk, bn, out_dtype,
-                                    interpret, bwd)
+    packed = _fused_ata_packed_core(a, levels, variant, gram, bk, bn,
+                                    out_dtype, interpret, bwd)
     return packed, geo["N"]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
-def _fused_ata_packed_core(a, levels, variant, bk, bn, out_dtype, interpret,
-                           bwd):
-    return _fused_ata_packed_exec(a, levels, variant, bk, bn, out_dtype,
-                                  interpret)[0]
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
+def _fused_ata_packed_core(a, levels, variant, gram, bk, bn, out_dtype,
+                           interpret, bwd):
+    return _fused_ata_packed_exec(a, levels, variant, gram, bk, bn,
+                                  out_dtype, interpret)[0]
 
 
-def _fused_ata_packed_fwd(a, levels, variant, bk, bn, out_dtype, interpret,
-                          bwd):
-    return (_fused_ata_packed_core(a, levels, variant, bk, bn, out_dtype,
-                                   interpret, bwd), a)
+def _fused_ata_packed_fwd(a, levels, variant, gram, bk, bn, out_dtype,
+                          interpret, bwd):
+    return (_fused_ata_packed_core(a, levels, variant, gram, bk, bn,
+                                   out_dtype, interpret, bwd), a)
 
 
-def _fused_ata_packed_bwd(levels, variant, bk, bn, out_dtype, interpret,
-                          bwd, a, gp):
+def _fused_ata_packed_bwd(levels, variant, gram, bk, bn, out_dtype,
+                          interpret, bwd, a, gp):
     # vdot(gp, packed(A)) has S = block-lower cotangent (diagonal tiles
     # full — the forward computes them full), so dA = A (S + S^t): the
     # packed stack *is* S and feeds the symm executor directly.
     acc = jnp.promote_types(a.dtype, jnp.float32)
     m, n = a.shape
     if bwd == "dense":
-        geo = _ata_geometry(m, n, levels, variant, bk, bn)
+        geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
         M, N = geo["M"], geo["N"]
         s = unpack_tril_blocks(gp.astype(acc), N, bn, symmetrize=False)
         ap = jnp.pad(a.astype(acc), ((0, M - m), (0, N - n)))
@@ -591,6 +606,7 @@ def _fused_ata_packed_exec(
     a: jax.Array,
     levels: int,
     variant: str,
+    gram: str,
     bk: int,
     bn: int,
     out_dtype,
@@ -598,7 +614,7 @@ def _fused_ata_packed_exec(
 ):
     """Forward executor (no autodiff surface — see the custom VJP above)."""
     m, n = a.shape
-    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
     plan = geo["plan"]
     M, N = geo["M"], geo["N"]
     if (M, N) != (m, n):
@@ -615,6 +631,7 @@ def fused_ata(
     *,
     levels: int = 2,
     variant: str = "strassen",
+    gram: str = "strassen",
     bk: int = 256,
     bn: int = 256,
     out_dtype=None,
@@ -634,23 +651,24 @@ def fused_ata(
     interpret = _auto_interpret(interpret)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-    return _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret,
-                            bwd)
+    return _fused_ata_dense(a, levels, variant, gram, bk, bn, out_dtype,
+                            interpret, bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
-def _fused_ata_dense(a, levels, variant, bk, bn, out_dtype, interpret, bwd):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
+def _fused_ata_dense(a, levels, variant, gram, bk, bn, out_dtype, interpret,
+                     bwd):
     n = a.shape[1]
     packed, n_pad = _fused_ata_packed_exec(
-        a, levels, variant, bk, bn, out_dtype, interpret)
+        a, levels, variant, gram, bk, bn, out_dtype, interpret)
     dense = unpack_tril_blocks(packed, n_pad, bn, symmetrize=False)
     # diagonal blocks are computed full — drop their upper halves
     return jnp.tril(dense)[:n, :n]
 
 
-def _fused_ata_dense_fwd(a, levels, variant, bk, bn, out_dtype, interpret,
-                         bwd):
-    return (_fused_ata_dense(a, levels, variant, bk, bn, out_dtype,
+def _fused_ata_dense_fwd(a, levels, variant, gram, bk, bn, out_dtype,
+                         interpret, bwd):
+    return (_fused_ata_dense(a, levels, variant, gram, bk, bn, out_dtype,
                              interpret, bwd), a)
 
 
@@ -678,7 +696,7 @@ def _pack_cotangent(g: jax.Array, n: int, n_pad: int, bn: int) -> jax.Array:
     return jnp.concatenate(blocks, axis=0)
 
 
-def _fused_ata_dense_bwd(levels, variant, bk, bn, out_dtype, interpret,
+def _fused_ata_dense_bwd(levels, variant, gram, bk, bn, out_dtype, interpret,
                          bwd, a, g):
     # C = tril(A^t A) => dL/dA = A (S + S^t), S = tril(dL/dC); the factor
     # 2 on the diagonal of S + S^t is exactly the quadratic term's.
@@ -688,7 +706,7 @@ def _fused_ata_dense_bwd(levels, variant, bk, bn, out_dtype, interpret,
         s = jnp.tril(g).astype(acc)
         da = jnp.dot(a.astype(acc), s + s.T, preferred_element_type=acc)
     else:
-        geo = _ata_geometry(m, n, levels, variant, bk, bn)
+        geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
         sp = _pack_cotangent(g.astype(acc), n, geo["N"], bn)
         da = fused_symm_matmul(a, sp, levels=geo["levels"], variant=variant,
                                bm=bk, diag_sym=True, out_dtype=acc,
@@ -711,6 +729,7 @@ def fused_aat_packed(
     *,
     levels: int = 2,
     variant: str = "strassen",
+    gram: str = "strassen",
     bm: int = 256,
     bk: int = 256,
     out_dtype=None,
@@ -725,7 +744,7 @@ def fused_aat_packed(
     """
     interpret = _auto_interpret(interpret)
     m, n = a.shape
-    geo = _aat_geometry(m, n, levels, variant, bm, bk)
+    geo = _aat_geometry(m, n, levels, variant, bm, bk, gram=gram)
     plan = geo["plan"]
     M, N = geo["M"], geo["N"]
     if (M, N) != (m, n):
@@ -742,6 +761,7 @@ def fused_aat(
     *,
     levels: int = 2,
     variant: str = "strassen",
+    gram: str = "strassen",
     bm: int = 256,
     bk: int = 256,
     out_dtype=None,
@@ -757,25 +777,28 @@ def fused_aat(
     interpret = _auto_interpret(interpret)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-    return _fused_aat_dense(a, levels, variant, bm, bk, out_dtype, interpret)
+    return _fused_aat_dense(a, levels, variant, gram, bm, bk, out_dtype,
+                            interpret)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
-def _fused_aat_dense(a, levels, variant, bm, bk, out_dtype, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+def _fused_aat_dense(a, levels, variant, gram, bm, bk, out_dtype, interpret):
     m = a.shape[0]
     packed, m_pad = fused_aat_packed(a, levels=levels, variant=variant,
-                                     bm=bm, bk=bk, out_dtype=out_dtype,
+                                     gram=gram, bm=bm, bk=bk,
+                                     out_dtype=out_dtype,
                                      interpret=interpret)
     dense = unpack_tril_blocks(packed, m_pad, bm, symmetrize=False)
     return jnp.tril(dense)[:m, :m]
 
 
-def _fused_aat_dense_fwd(a, levels, variant, bm, bk, out_dtype, interpret):
-    return (_fused_aat_dense(a, levels, variant, bm, bk, out_dtype,
+def _fused_aat_dense_fwd(a, levels, variant, gram, bm, bk, out_dtype,
+                         interpret):
+    return (_fused_aat_dense(a, levels, variant, gram, bm, bk, out_dtype,
                              interpret), a)
 
 
-def _fused_aat_dense_bwd(levels, variant, bm, bk, out_dtype, interpret,
+def _fused_aat_dense_bwd(levels, variant, gram, bm, bk, out_dtype, interpret,
                          a, g):
     # C = tril(A A^t) => dA = (S + S^t) A, S = tril(g)
     acc = jnp.promote_types(a.dtype, jnp.float32)
@@ -800,6 +823,7 @@ def fused_rank_k_update(
     *,
     levels: int = 2,
     variant: str = "strassen",
+    gram: str = "strassen",
     bk: int = 256,
     out_dtype=None,
     interpret=None,
@@ -835,25 +859,25 @@ def fused_rank_k_update(
                          f"spans {N}")
     out_dtype = (c_stack.dtype if out_dtype is None
                  else jnp.dtype(out_dtype))
-    return _fused_rank_k_core(c_stack, a, levels, variant, bk, bn,
+    return _fused_rank_k_core(c_stack, a, levels, variant, gram, bk, bn,
                               out_dtype, jnp.dtype(c_stack.dtype),
                               interpret)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
-def _fused_rank_k_core(c_stack, a, levels, variant, bk, bn, out_dtype,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
+def _fused_rank_k_core(c_stack, a, levels, variant, gram, bk, bn, out_dtype,
                        stack_dtype, interpret):
-    return _fused_rank_k_exec(c_stack, a, levels, variant, bk, bn,
+    return _fused_rank_k_exec(c_stack, a, levels, variant, gram, bk, bn,
                               out_dtype, interpret)
 
 
-def _fused_rank_k_exec(c_stack, a, levels, variant, bk, bn, out_dtype,
+def _fused_rank_k_exec(c_stack, a, levels, variant, gram, bk, bn, out_dtype,
                        interpret):
     n_tri = c_stack.shape[0] // bn
     T = (math.isqrt(8 * n_tri + 1) - 1) // 2
     N = T * bn
     m, n = a.shape
-    geo = _rank_k_geometry(m, T, levels, variant, bk)
+    geo = _rank_k_geometry(m, T, levels, variant, bk, gram=gram)
     plan, M = geo["plan"], geo["M"]
     if (M, N) != (m, n):
         a = jnp.pad(a, ((0, M - m), (0, N - n)))
@@ -862,13 +886,13 @@ def _fused_rank_k_exec(c_stack, a, levels, variant, bk, bn, out_dtype,
     return _execute(spec, a, a, out_dtype, interpret, c_in=c_stack)
 
 
-def _fused_rank_k_fwd(c_stack, a, levels, variant, bk, bn, out_dtype,
+def _fused_rank_k_fwd(c_stack, a, levels, variant, gram, bk, bn, out_dtype,
                       stack_dtype, interpret):
-    return (_fused_rank_k_core(c_stack, a, levels, variant, bk, bn,
+    return (_fused_rank_k_core(c_stack, a, levels, variant, gram, bk, bn,
                                out_dtype, stack_dtype, interpret), a)
 
 
-def _fused_rank_k_bwd(levels, variant, bk, bn, out_dtype, stack_dtype,
+def _fused_rank_k_bwd(levels, variant, gram, bk, bn, out_dtype, stack_dtype,
                       interpret, a, g):
     # C_out = C_in + tril(A^t A): dC_in = g (packed pass-through, cast
     # back to the stack primal's dtype); dA = A (S + S^t) with S the
@@ -876,7 +900,8 @@ def _fused_rank_k_bwd(levels, variant, bk, bn, out_dtype, stack_dtype,
     acc = jnp.promote_types(a.dtype, jnp.float32)
     n = a.shape[1]
     T = (math.isqrt(8 * (g.shape[0] // bn) + 1) - 1) // 2
-    lv = _rank_k_geometry(a.shape[0], T, levels, variant, bk)["levels"]
+    lv = _rank_k_geometry(a.shape[0], T, levels, variant, bk,
+                          gram=gram)["levels"]
     da = fused_symm_matmul(a, g, levels=lv, variant=variant, bm=bk,
                            diag_sym=True, out_dtype=acc,
                            interpret=interpret)[:, :n]
@@ -990,6 +1015,7 @@ def _traffic(spec: _Spec, *, left_bytes: int, right_bytes: int,
 
 def ata_traffic_model(
     m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    gram: str = "strassen",
     bk: int = 256, bn: int = 256, in_bytes: int = 4, out_bytes: int = 4,
 ) -> dict:
     """HBM bytes of ``fused_ata_packed`` on an (m, n) input.
@@ -1000,7 +1026,7 @@ def ata_traffic_model(
     ``_ata_geometry`` as the executor, so the model cannot drift from
     the kernel's clamping/padding.
     """
-    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
     M, N = geo["M"], geo["N"]
     spec = _bind(geo["plan"], n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
                  q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
@@ -1013,11 +1039,12 @@ def ata_traffic_model(
 
 def aat_traffic_model(
     m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    gram: str = "strassen",
     bm: int = 256, bk: int = 256, in_bytes: int = 4, out_bytes: int = 4,
 ) -> dict:
     """HBM bytes of ``fused_aat_packed`` (row gram) — same core model,
     the row-gram geometry."""
-    geo = _aat_geometry(m, n, levels, variant, bm, bk)
+    geo = _aat_geometry(m, n, levels, variant, bm, bk, gram=gram)
     M, N = geo["M"], geo["N"]
     spec = _bind(geo["plan"], n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
                  q_j=geo["nbt"], n_k=geo["n_k"], bi=bm, bj=bm, bc=bk)
@@ -1030,6 +1057,7 @@ def aat_traffic_model(
 
 def rank_k_traffic_model(
     m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    gram: str = "strassen",
     bk: int = 256, bn: int = 256, state_bytes: int = 4, in_bytes: int = 4,
 ) -> dict:
     """HBM bytes of one ``fused_rank_k_update`` chunk vs the status-quo
@@ -1038,7 +1066,7 @@ def rank_k_traffic_model(
     rewritten)."""
     T = _round_up(max(n, 1), bn) // bn
     # the stack layout fixes T; mirror the executor's divisibility clamp
-    geo = _rank_k_geometry(m, T, levels, variant, bk)
+    geo = _rank_k_geometry(m, T, levels, variant, bk, gram=gram)
     M, N = geo["M"], T * bn
     spec = _bind(geo["plan"], n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
                  q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
@@ -1060,6 +1088,7 @@ def rank_k_traffic_model(
 
 def ata_bwd_traffic_model(
     m: int, n: int, *, levels: int = 2, variant: str = "strassen",
+    gram: str = "strassen",
     bk: int = 256, bn: int = 256, in_bytes: int = 4, cot_bytes: int = 4,
     cotangent: str = "packed",
 ) -> dict:
@@ -1083,7 +1112,7 @@ def ata_bwd_traffic_model(
     adds more).  The fused read term honestly includes the
     contribution-slot padding amplification, same as the forward model.
     """
-    geo = _ata_geometry(m, n, levels, variant, bk, bn)
+    geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
     M, N = geo["M"], geo["N"]
     T = N // bn
     sgeo = _symm_geometry(M, T, geo["levels"], variant, bk)
@@ -1170,15 +1199,23 @@ def _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
     """Executor binding for C = op(a) @ op(b)."""
     m, k_dim = a.shape[::-1] if trans_a else a.shape
     n, _ = b.shape if trans_b else b.shape[::-1]
-    levels = min(levels, strassen_levels_for(m, k_dim, n, max(bm, bk, bn)))
+    # generic per-axis level clamp (== strassen_levels_for at (2,2,2)):
+    # stop splitting once the smallest leaf axis reaches tile size
+    dm, dk, dn = leaf_ir.algebra_dims(variant)
+    leaf, lv = max(bm, bk, bn), 0
+    cm, ck, cn = m, k_dim, n
+    while min(cm, ck, cn) > leaf:
+        cm, ck, cn = cm // dm, ck // dk, cn // dn
+        lv += 1
+    levels = min(levels, lv)
     levels = _fan_in_clamp("matmul", levels, variant)
     plan = compile_program("matmul", levels, variant,
                            trans_a=trans_a, trans_b=trans_b)
-    B = plan.blocks
-    mb = _round_up(max(m, 1), B * bm) // B
-    kb = _round_up(max(k_dim, 1), B * bk) // B
-    nb = _round_up(max(n, 1), B * bn) // B
-    M, K, N = B * mb, B * kb, B * nb
+    Bm, Bk, Bn = plan.blocks_m, plan.blocks_k, plan.blocks_n
+    mb = _round_up(max(m, 1), Bm * bm) // Bm
+    kb = _round_up(max(k_dim, 1), Bk * bk) // Bk
+    nb = _round_up(max(n, 1), Bn * bn) // Bn
+    M, K, N = Bm * mb, Bk * kb, Bn * nb
     a_shape = (K, M) if trans_a else (M, K)
     b_shape = (N, K) if trans_b else (K, N)
     if a.shape != a_shape:

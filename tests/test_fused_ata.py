@@ -315,7 +315,7 @@ def test_schedule_destinations_lower_triangular():
     for levels in range(4):
         plan = plan_ata(levels)
         for p in plan.products:
-            for di, dj, _ in p.dests:
+            for di, dj, *_ in p.dests:
                 assert di >= dj, "upper-triangular destination scheduled"
         # every lower-triangular leaf destination is covered
         B = plan.blocks

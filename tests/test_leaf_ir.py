@@ -11,10 +11,14 @@ import jax.numpy as jnp
 
 from repro.core import ata
 from repro.core.cost_model import (aat_mults_exact, ata_mults_exact,
-                                   ir_leaf_count, ir_max_terms)
-from repro.core.leaf_ir import (PROGRAM_KINDS, compile_program,
-                                get_algebra, interpret_program,
-                                register_algebra, registered_algebras)
+                                   ir_leaf_count, ir_max_terms,
+                                   symm_leaf_count)
+from repro.core.leaf_ir import (PROGRAM_KINDS, algebra_dims,
+                                compile_program, get_algebra,
+                                get_gram_algebra, interpret_program,
+                                register_algebra, register_gram_algebra,
+                                registered_algebras,
+                                registered_gram_algebras)
 from repro.gram import stream
 from repro.kernels import ops
 from repro.kernels.strassen_fused import (
@@ -111,68 +115,103 @@ def test_unknown_kind_and_bad_trans_rejected():
 # the same space) adds fuzzed coverage where hypothesis is installed.
 # ---------------------------------------------------------------------------
 
-def _check_counts_and_interpreter(kind, variant, levels, mb, nb):
+def _check_counts_and_interpreter(kind, variant, levels, mb, nb,
+                                  gram="strassen"):
     """Compiled LeafProgram leaf/term counts == cost-model closed forms;
     numpy interpreter == dense oracle."""
-    prog = compile_program(kind, levels, variant)
-    assert len(prog.ops) == ir_leaf_count(kind, levels, variant)
-    assert prog.max_terms == ir_max_terms(kind, levels, variant)
+    prog = compile_program(kind, levels, variant, gram=gram)
+    assert len(prog.ops) == ir_leaf_count(kind, levels, variant, gram=gram)
+    assert prog.max_terms == ir_max_terms(kind, levels, variant, gram=gram)
+    Bm, Bk, Bn = prog.blocks_m, prog.blocks_k, prog.blocks_n
     # gram kinds: mult_count ties to the recursion closed forms too
     # (ata_mults_exact models the paper's 7-product HASA — the 8-product
-    # classical table deliberately differs, as in test_fused_ata)
-    B = prog.blocks
-    if variant in ("strassen", "winograd"):
+    # classical table and the dps gram recursion deliberately differ)
+    if variant in ("strassen", "winograd") and gram == "strassen":
         if kind in ("ata", "rank_k"):
             assert prog.mult_count(mb, nb) == ata_mults_exact(
-                mb * B, nb * B, leaf=0, levels=levels)
+                mb * Bm, nb * Bn, leaf=0, levels=levels)
         elif kind == "aat":
             assert prog.mult_count(mb, nb) == aat_mults_exact(
-                mb * B, nb * B, leaf=0, levels=levels)
+                mb * Bm, nb * Bn, leaf=0, levels=levels)
 
     rng = np.random.RandomState(levels * 7 + mb)
-    a = rng.randn(B * mb, B * nb)
     if kind in ("ata", "rank_k"):
-        c0 = (np.tril(rng.randn(B * nb, B * nb))
+        a = rng.randn(Bm * mb, Bn * nb)
+        c0 = (np.tril(rng.randn(Bn * nb, Bn * nb))
               if kind == "rank_k" else None)
         got = interpret_program(prog, a, c0=c0)
         want = np.tril(a.T @ a) + (c0 if c0 is not None else 0.0)
     elif kind == "aat":
+        a = rng.randn(Bm * mb, Bn * nb)
         got = interpret_program(prog, a)
         want = np.tril(a @ a.T)
     elif kind == "matmul":
-        b = rng.randn(B * nb, B * mb)
+        a = rng.randn(Bm * mb, Bk * nb)
+        b = rng.randn(Bk * nb, Bn * mb)
         got = interpret_program(prog, a, b)
         want = a @ b
     else:                                   # symm
-        s = rng.randn(B * nb, B * nb)
+        a = rng.randn(Bm * mb, Bn * nb)
+        s = rng.randn(Bn * nb, Bn * nb)
         got = interpret_program(prog, a, s)
         want = a @ (np.tril(s) + np.tril(s, -1).T)
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
 
 
-@pytest.mark.parametrize("variant", ["strassen", "winograd", "classical"])
-@pytest.mark.parametrize("kind", PROGRAM_KINDS)
-def test_program_counts_and_interpreter_match(kind, variant):
-    """Every registered algebra x kind x levels 0-3 (the satellite's
-    exhaustive grid at fixed leaf shape)."""
-    for levels in range(4):
-        _check_counts_and_interpreter(kind, variant, levels, 3, 2)
+def _kind_variant_grid():
+    """(kind, variant, gram) combos the compiler accepts, enumerated
+    from the LIVE registries — a newly registered algebra or gram table
+    is automatically swept (the satellite's dynamic parametrization)."""
+    out = []
+    for kind in PROGRAM_KINDS:
+        for v in registered_algebras():
+            dm, dk, dn = algebra_dims(v)
+            if kind in ("ata", "aat", "rank_k"):
+                if (dm, dk, dn) != (2, 2, 2):
+                    continue            # gram table expansion needs 2x2x2
+                out.extend((kind, v, g)
+                           for g in registered_gram_algebras())
+            elif kind == "symm":
+                if dk != dn:
+                    continue            # Sym operand splits k like n
+                out.append((kind, v, "strassen"))
+            else:
+                out.append((kind, v, "strassen"))
+    return out
+
+
+@pytest.mark.parametrize("kind,variant,gram", _kind_variant_grid())
+def test_program_counts_and_interpreter_match(kind, variant, gram):
+    """Every registered algebra/gram x kind x levels 0-3 (the
+    satellite's exhaustive grid at fixed leaf shape)."""
+    # rect tables fan out fast (bb422 symm @ 4 = 14^4 ops) — depth 3 is
+    # plenty for them
+    depth = 4 if max(algebra_dims(variant)) == 2 else 3
+    for levels in range(depth):
+        _check_counts_and_interpreter(kind, variant, levels, 3, 2,
+                                      gram=gram)
 
 
 def test_gram_programs_cover_lower_triangle_exactly():
     """Every gram-kind destination satisfies di >= dj and the programs
-    cover each lower-triangular leaf destination."""
-    for variant in ("strassen", "winograd", "classical"):
-        for levels in range(4):
-            for kind in ("ata", "aat", "rank_k"):
-                prog = compile_program(kind, levels, variant)
-                B = prog.blocks
-                for p in prog.ops:
-                    for di, dj, _s in p.dests:
-                        assert di >= dj, (kind,
-                                          "upper-triangular destination")
-                assert set(prog.by_dest()) == {
-                    (i, j) for i in range(B) for j in range(i + 1)}
+    cover each lower-triangular leaf destination — for every registered
+    square variant x gram algebra."""
+    variants = [v for v in registered_algebras()
+                if algebra_dims(v) == (2, 2, 2)]
+    for variant in variants:
+        for gram in registered_gram_algebras():
+            for levels in range(4):
+                for kind in ("ata", "aat", "rank_k"):
+                    prog = compile_program(kind, levels, variant,
+                                           gram=gram)
+                    B = prog.blocks
+                    for p in prog.ops:
+                        for di, dj, *_ in p.dests:
+                            assert di >= dj, (kind,
+                                              "upper-triangular "
+                                              "destination")
+                    assert set(prog.by_dest()) == {
+                        (i, j) for i in range(B) for j in range(i + 1)}
 
 
 try:
@@ -185,15 +224,15 @@ if _HAVE_HYPOTHESIS:
     SET = dict(deadline=None, max_examples=40,
                suppress_health_check=[HealthCheck.too_slow])
 
-    @given(st.sampled_from(PROGRAM_KINDS),
-           st.sampled_from(["strassen", "winograd", "classical"]),
+    @given(st.sampled_from(_kind_variant_grid()),
            st.integers(0, 3), st.integers(1, 3), st.integers(1, 3))
     @settings(**SET)
-    def test_program_counts_and_interpreter_property(kind, variant,
-                                                     levels, mb, nb):
+    def test_program_counts_and_interpreter_property(kvg, levels, mb, nb):
         """Fuzzed leaf shapes over the same algebra x kind x levels
         space (the satellite's hypothesis property)."""
-        _check_counts_and_interpreter(kind, variant, levels, mb, nb)
+        kind, variant, gram = kvg
+        _check_counts_and_interpreter(kind, variant, levels, mb, nb,
+                                      gram=gram)
 
 
 # ---------------------------------------------------------------------------
@@ -407,3 +446,244 @@ def test_ops_aat_fused_entry_points():
     assert np.abs(got - want).max() < 1e-4
     packed = ops.aat_fused_packed(a, levels=1, bm=8, bk=8, interpret=True)
     assert packed.ndim == 2 and packed.shape[1] == 8
+
+
+# ---------------------------------------------------------------------------
+# The DPS gram algebra: counts below strassen-gram, fused parity
+# ---------------------------------------------------------------------------
+
+def test_dps_leaf_counts_beat_strassen_gram():
+    """G(l) = 2 G(l-1) + 3 t^(l-1) vs the paper's 4 G(l-1) + 2 t^(l-1):
+    the dps scheme does strictly fewer leaf products at every level > 0,
+    and the compiled programs realize exactly the closed forms."""
+    dps_want = (1, 5, 31, 209)
+    str_want = (1, 6, 38, 250)
+    for lv in range(4):
+        dps = ir_leaf_count("ata", lv, "strassen", gram="dps")
+        base = ir_leaf_count("ata", lv, "strassen", gram="strassen")
+        assert dps == dps_want[lv]
+        assert base == str_want[lv]
+        if lv > 0:
+            assert dps < base
+        assert len(compile_program("ata", lv, gram="dps").ops) == dps
+
+
+def test_dps_interpreter_and_mult_count():
+    """The dps program is exact (rational coefficients survive the IR)
+    and its scalar mult count undercuts the strassen gram's at equal
+    levels and leaf shape."""
+    rng = np.random.RandomState(3)
+    a = rng.randn(12, 8)
+    prog = compile_program("ata", 2, gram="dps")
+    np.testing.assert_allclose(interpret_program(prog, a),
+                               np.tril(a.T @ a), rtol=1e-9, atol=1e-9)
+    base = compile_program("ata", 2, gram="strassen")
+    assert prog.mult_count(3, 2) < base.mult_count(3, 2)
+
+
+def test_acceptance_dps_ata_512_parity():
+    """PR acceptance: a registered DPS gram algebra through the fused
+    executor — parity <= 1e-5 at 512^2 fp32."""
+    a = _rand((512, 512), seed=23)
+    got = ops.ata_fused(a, levels=2, gram="dps", bk=128, bn=128,
+                        interpret=True)
+    a64 = np.asarray(a, np.float64)
+    want = np.tril(a64.T @ a64)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(np.asarray(got, np.float64) - want).max() / scale < 1e-5
+
+
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+def test_acceptance_dps_bf16_levels(levels):
+    """PR acceptance: dps gram at bf16, levels 0-3 (level 3's 16-term
+    operands exceed MAX_OPERAND_TERMS and clamp with a warning — the
+    result must still be correct)."""
+    a = _rand((64, 64), jnp.bfloat16, seed=levels + 40)
+    got = np.asarray(ops.ata_fused(a, levels=levels, gram="dps", bk=8,
+                                   bn=8, interpret=True), np.float64)
+    a64 = np.asarray(a.astype(jnp.float32), np.float64)
+    want = np.tril(a64.T @ a64)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 2e-2
+
+
+def test_dps_aat_and_rank_k_parity():
+    """The same gram table drives the row gram and the accumulating
+    update."""
+    a = _rand((48, 32), seed=24)
+    got = fused_aat(a, levels=2, variant="strassen", gram="dps", bm=8,
+                    bk=8, interpret=True)
+    assert np.abs(np.asarray(got, np.float64)
+                  - _aat_oracle(a)).max() < 1e-4
+    stack, _ = fused_ata_packed(a[:20], levels=1, gram="dps", bk=8, bn=8,
+                                interpret=True)
+    stack = fused_rank_k_update(stack, a[20:], levels=1, gram="dps", bk=8,
+                                interpret=True)
+    one, _ = fused_ata_packed(a, levels=1, gram="dps", bk=8, bn=8,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(stack), np.asarray(one),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Rectangular base cases through the fused matmul executor
+# ---------------------------------------------------------------------------
+
+def _matmul_oracle(a, b):
+    return np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+
+def test_acceptance_bb322_matmul_512_parity():
+    """PR acceptance: a <3, 2, 2>-style rectangular base case through
+    compile_program AND the fused executor — parity <= 1e-5 at 512^2
+    fp32."""
+    from repro.kernels.strassen_fused import fused_matmul
+    prog = compile_program("matmul", 2, "bb322")
+    assert (prog.blocks_m, prog.blocks_k, prog.blocks_n) == (9, 4, 4)
+    a = _rand((512, 512), seed=25)
+    b = _rand((512, 512), seed=26)
+    got = fused_matmul(a, b, levels=2, variant="bb322", bm=64, bk=64,
+                       bn=64, interpret=True)
+    want = _matmul_oracle(a, b)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(np.asarray(got, np.float64) - want).max() / scale < 1e-5
+
+
+@pytest.mark.parametrize("levels", [0, 1, 2, 3])
+def test_bb322_matmul_bf16_levels(levels):
+    from repro.kernels.strassen_fused import fused_matmul
+    a = _rand((54, 16), jnp.bfloat16, seed=levels + 50)
+    b = _rand((16, 16), jnp.bfloat16, seed=levels + 60)
+    got = np.asarray(fused_matmul(a, b, levels=levels, variant="bb322",
+                                  bm=2, bk=2, bn=2, interpret=True),
+                     np.float64)
+    want = _matmul_oracle(a.astype(jnp.float32), b.astype(jnp.float32))
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 2e-2
+
+
+def test_bb422_matmul_parity_and_trans():
+    from repro.kernels.strassen_fused import fused_matmul
+    a = _rand((64, 32), seed=27)
+    b = _rand((32, 16), seed=28)
+    got = fused_matmul(a, b, levels=1, variant="bb422", bm=8, bk=8, bn=8,
+                       interpret=True)
+    assert np.abs(np.asarray(got, np.float64)
+                  - _matmul_oracle(a, b)).max() < 1e-4
+    # rect split + folded transpose compose
+    got_t = fused_matmul(jnp.asarray(np.asarray(a).T), b, levels=1,
+                         variant="bb422", bm=8, bk=8, bn=8, trans_a=True,
+                         interpret=True)
+    assert np.abs(np.asarray(got_t, np.float64)
+                  - _matmul_oracle(a, b)).max() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: cost-model derivation, registration validation,
+# per-instance caches
+# ---------------------------------------------------------------------------
+
+def test_symm_leaf_count_derived_from_registered_table():
+    """symm_leaf_count must be t**levels of the ACTUAL registered table,
+    not a hardcoded (8 if classical else 7)**levels — regression via a
+    toy 6-product <6, 1, 1> classical split."""
+    name = "toy-611-test"
+    if name not in registered_algebras():
+        # C[i, 0] = A[i, 0] * B[0, 0]: six scalar products, one per
+        # output row — trivially correct, deliberately not 7 or 8 wide
+        register_algebra(
+            name,
+            tuple((((i, 0, 1),), ((0, 0, 1),), ((i, 0, 1),))
+                  for i in range(6)),
+            dims=(6, 1, 1))
+    for lv in range(3):
+        want = 6 ** lv
+        assert symm_leaf_count(lv, name) == want
+        assert want not in (7 ** lv, 8 ** lv) or lv == 0
+        # dk == dn == 1, so the symm kind compiles: the closed form must
+        # match the program the executor would actually run
+        assert len(compile_program("symm", lv, name).ops) == want
+    assert symm_leaf_count(2, "classical") == 64
+    assert symm_leaf_count(2, "strassen") == 49
+
+
+def test_register_algebra_rejects_malformed_tables():
+    """Empty tables/quad lists and malformed rows must fail with clear
+    ValueErrors at registration, not crash mid-compile on tuple
+    unpacking."""
+    with pytest.raises(ValueError, match="non-empty"):
+        register_algebra("bad-empty-test", ())
+    with pytest.raises(ValueError, match="empty a_quads"):
+        register_algebra("bad-equad-test",
+                         (((), ((0, 0, 1),), ((0, 0, 1),)),))
+    with pytest.raises(ValueError, match=r"\(a, b, dest\) triple"):
+        register_algebra("bad-arity-test", ((((0, 0, 1),), ((0, 0, 1),)),))
+    with pytest.raises(ValueError, match=r"\(row, col, coeff\)"):
+        register_algebra("bad-quad-test",
+                         ((((0, 0),), ((0, 0, 1),), ((0, 0, 1),)),))
+    with pytest.raises(ValueError, match="nonzero finite real"):
+        register_algebra("bad-coeff-test",
+                         ((((0, 0, 0),), ((0, 0, 1),), ((0, 0, 1),)),))
+    # structurally fine but algebraically wrong: the levels=1 numeric
+    # identity smoke-check catches it at registration time
+    with pytest.raises(ValueError, match="identity"):
+        register_algebra(
+            "bad-algebra-test",
+            tuple((((i, j, 1),), ((j, kq, 1),), ((i, kq, 2),))
+                  for i in range(2) for j in range(2) for kq in range(2)))
+    for n in ("bad-empty-test", "bad-equad-test", "bad-arity-test",
+              "bad-quad-test", "bad-coeff-test", "bad-algebra-test"):
+        assert n not in registered_algebras()
+
+
+def test_register_gram_algebra_validation():
+    base = get_gram_algebra("strassen")
+    with pytest.raises(ValueError, match="already registered"):
+        register_gram_algebra("strassen", **base)
+    with pytest.raises(ValueError, match="empty term list"):
+        register_gram_algebra("bad-gram-test",
+                              sym=(((), ((0, 0, 1, 0),)),), mm=base["mm"])
+    with pytest.raises(ValueError, match=r"\(g, o, coeff\)"):
+        register_gram_algebra("bad-gram-test",
+                              sym=((((0, 0),), ((0, 0, 1, 0),)),),
+                              mm=base["mm"])
+    with pytest.raises(ValueError, match=r"\(di, dj, coeff, trans\)"):
+        register_gram_algebra("bad-gram-test",
+                              sym=((((0, 0, 1),), ((0, 0, 1),)),),
+                              mm=base["mm"])
+    with pytest.raises(ValueError, match="lower triangle"):
+        register_gram_algebra("bad-gram-test",
+                              sym=((((0, 0, 1),), ((0, 1, 1, 0),)),),
+                              mm=base["mm"])
+    with pytest.raises(ValueError, match="sym dest"):
+        register_gram_algebra("bad-gram-test",
+                              sym=((((0, 0, 1),), ((1, 0, 1, 1),)),),
+                              mm=base["mm"])
+    with pytest.raises(ValueError, match="at least one mm"):
+        register_gram_algebra("bad-gram-test", sym=base["sym"], mm=())
+    with pytest.raises(ValueError, match="at least one sym"):
+        register_gram_algebra("bad-gram-test", sym=(), mm=base["mm"])
+    # structurally valid, numerically wrong (C11 doubled)
+    wrong_sym = ((((0, 0, 2),), ((0, 0, 1, 0),)),) + base["sym"][1:]
+    with pytest.raises(ValueError, match="identity"):
+        register_gram_algebra("bad-gram-test", sym=wrong_sym,
+                              mm=base["mm"])
+    assert "bad-gram-test" not in registered_gram_algebras()
+
+
+def test_program_caches_die_with_program():
+    """contributions()/by_dest() memoize per instance — a module-level
+    lru_cache keyed on the program would pin every program ever compiled
+    for process lifetime (regression: autotune sweeps compile many)."""
+    import dataclasses
+    import gc
+    import weakref
+    # dataclasses.replace with a fresh _cache gives an instance the
+    # compile_program lru_cache does NOT hold
+    prog = dataclasses.replace(compile_program("ata", 2), _cache={})
+    assert prog.contributions() and prog.by_dest()
+    assert "contributions" in prog._cache and "by_dest" in prog._cache
+    ref = weakref.ref(prog)
+    del prog
+    gc.collect()
+    assert ref() is None, "program (and its memoized tables) leaked"
