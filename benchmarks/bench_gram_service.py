@@ -25,6 +25,20 @@ corruption and failing executables at 0 / 1% / 10% rates, recording
 success rate, degraded fraction and the latency percentiles under each —
 plus the guard overhead on the fault-free path (verify off vs finite vs
 probed), which acceptance requires to be in the noise.
+
+The **sustained-load section** (DESIGN.md §15) drives the async engine
+open-loop: Poisson arrivals at sub-critical / critical / 2x-overload
+rates against a *deterministic* service floor — an injected
+``exec_delay`` makes every batch take ``DELAY`` seconds, so critical
+capacity is ``slots / DELAY`` req/s on any machine and the offered rates
+are machine-independent multiples of it.  Each phase records offered vs
+admitted vs served rates, shed and deadline-miss fractions, queue peak
+and per-tenant latency percentiles.  Acceptance: the engine stays live
+under 2x overload (queue bounded, every request terminal, sheds fail
+fast), admitted-and-served requests meet their deadlines, and a
+compliant tenant's p99 is insensitive to a neighboring tenant turning
+into an abusive flood (bounded change, and the compliant tenant is not
+the one being shed).
 """
 from __future__ import annotations
 
@@ -237,6 +251,176 @@ def _drift_verdicts(eng):
     return verdict
 
 
+# -- sustained load: open-loop Poisson arrivals vs a deterministic floor --
+
+DELAY = 0.02          # injected per-batch service time (exec_delay)
+SLOTS_LOAD = 4        # batch slots in the load phases
+DEADLINE_S = 0.35     # per-request SLO in the load phases
+MAX_QUEUE = 48        # global admission bound in the load phases
+
+
+def _poisson_arrivals(rng, rate, duration):
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= duration:
+            return out
+        out.append(t)
+
+
+def _open_loop_phase(name, tenants, *, duration, seed):
+    """One open-loop phase: merged Poisson arrival schedules (one per
+    tenant, each with its own rate and shape) submitted on the wall
+    clock regardless of completions, under an ``exec_delay`` service
+    floor.  Returns the phase record."""
+    rng = np.random.default_rng(seed)
+    sched = []
+    for tname, (rate, shape, gram_of) in tenants.items():
+        sched += [(t, tname, shape, gram_of)
+                  for t in _poisson_arrivals(rng, rate, duration)]
+    sched.sort()
+    shapes = sorted({shape for _, (_, shape, _) in tenants.items()})
+    arrays = {s: rng.standard_normal(s).astype(np.float32) for s in shapes}
+    eng = GramEngine(slots=SLOTS_LOAD, levels=0, min_bucket=16,
+                     verify="finite", max_retries=2, backoff_s=0.0,
+                     max_queue=MAX_QUEUE, tenant_quota=20,
+                     tenant_max_inflight=SLOTS_LOAD - 1
+                     if len(tenants) > 1 else None)
+    for _, (_, shape, gram_of) in tenants.items():
+        eng.serve(arrays[shape], full=False, gram_of=gram_of)
+    futs = []                         # compiles stay out of the clock
+    with faults.inject(faults.FaultSpec("exec_delay", delay=DELAY,
+                                        site="gram.engine.exec.*")):
+        eng.start()
+        t0 = time.perf_counter()
+        for t_arr, tname, shape, gram_of in sched:
+            wait = t_arr - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+            futs.append((tname, eng.submit(arrays[shape], full=False,
+                                           gram_of=gram_of,
+                                           deadline_s=DEADLINE_S,
+                                           tenant=tname)))
+        drained = eng.drain(timeout=60.0)
+        wall = time.perf_counter() - t0
+        eng.shutdown()
+    s = eng.stats()
+
+    per_tenant = {}
+    on_time = served = late = 0
+    shed_lat = []
+    for tname in tenants:
+        mine = [f for tn, f in futs if tn == tname]
+        ok = [f.request for f in mine if f.request.status == "ok"]
+        lat = sorted(r.latency_s for r in ok)
+        n_shed = sum(1 for f in mine if f.request.status == "shed")
+        shed_lat += [f.request.latency_s for f in mine
+                     if f.request.status == "shed"
+                     and f.request.latency_s is not None]
+        served += len(ok)
+        for r in ok:
+            # grace of one service quantum: a request that entered the
+            # batch before its deadline finishes at most DELAY past it
+            if r.t_deadline is None or r.t_done <= r.t_deadline + DELAY:
+                on_time += 1
+            else:
+                late += 1
+        per_tenant[tname] = {
+            "offered": len(mine),
+            "served": len(ok),
+            "shed": n_shed,
+            "failed": sum(1 for f in mine
+                          if f.request.status == "failed"),
+            "shed_fraction": n_shed / max(len(mine), 1),
+            "p50_latency_s": _pct(lat, 0.50),
+            "p99_latency_s": _pct(lat, 0.99),
+        }
+    rec = {
+        "offered": len(futs),
+        "offered_rps": len(futs) / duration,
+        "capacity_rps": SLOTS_LOAD / DELAY,
+        "duration_s": duration,
+        "wall_s": wall,
+        "drained": bool(drained),
+        "all_terminal": all(f.done() for _, f in futs),
+        "served": served,
+        "served_rps": served / wall,
+        "shed": s["shed"],
+        "shed_fraction": s["shed"] / max(len(futs), 1),
+        "deadline_missed": s["deadline_missed"],
+        "served_on_time_fraction": on_time / max(served, 1),
+        "served_late": late,
+        "queue_peak": s["queue_peak"],
+        "shed_p99_latency_s": _pct(sorted(shed_lat), 0.99),
+        "ring": s["ring"],
+        "tenants": per_tenant,
+    }
+    print(f"[gram_service] load/{name}: offered {rec['offered_rps']:.0f} "
+          f"rps vs capacity {rec['capacity_rps']:.0f}, served {served}, "
+          f"shed {s['shed']} ({rec['shed_fraction']:.0%}), on-time "
+          f"{rec['served_on_time_fraction']:.1%}, queue_peak "
+          f"{s['queue_peak']}")
+    return rec
+
+
+def _sustained_load(quick):
+    """Sub-critical / critical / 2x-overload open-loop phases plus the
+    fairness A/B: the compliant tenant keeps its offered rate while the
+    neighbor turns from compliant into a 1.55x-capacity flood."""
+    duration = 0.8 if quick else 2.0
+    cap = SLOTS_LOAD / DELAY
+    # same shape, different gram_of -> distinct buckets (so WFQ
+    # arbitrates across them) with IDENTICAL per-request work, so the
+    # vtime a request charges its tenant is the same on both sides and
+    # the A/B isolates scheduling, not the cost model
+    good_req = ((16, 16), "rows")
+    peer_req = ((16, 16), "cols")
+    # the compliant tenant keeps 0.35x capacity throughout; only the
+    # neighbor changes character (0.65x compliant -> 1.65x flood), so
+    # the phase totals hit 1.0x and 2.0x while "good" is identical
+    phases = {
+        "subcritical": _open_loop_phase(
+            "subcritical", {"good": (0.5 * cap, *good_req)},
+            duration=duration, seed=11),
+        "critical": _open_loop_phase(
+            "critical", {"good": (0.35 * cap, *good_req),
+                         "peer": (0.65 * cap, *peer_req)},
+            duration=duration, seed=12),
+        "overload_2x": _open_loop_phase(
+            "overload_2x", {"good": (0.35 * cap, *good_req),
+                            "abuser": (1.65 * cap, *peer_req)},
+            duration=duration, seed=13),
+    }
+    over = phases["overload_2x"]
+    good_crit = phases["critical"]["tenants"]["good"]
+    good_over = over["tenants"]["good"]
+    p99_c, p99_o = good_crit["p99_latency_s"], good_over["p99_latency_s"]
+    # relative bound with an absolute slack of a few service quanta:
+    # scheduling granularity is one DELAY batch, CI walls are noisy
+    fair_p99 = (p99_o is not None and p99_c is not None
+                and p99_o <= p99_c * 1.2 + 6 * DELAY)
+    fair_shed = good_over["shed_fraction"] < 0.05
+    live = (over["drained"] and over["all_terminal"]
+            and over["queue_peak"] <= MAX_QUEUE
+            and (over["shed_p99_latency_s"] is None
+                 or over["shed_p99_latency_s"] < 0.05))
+    deadlines = min(p["served_on_time_fraction"]
+                    for p in phases.values()) >= 0.99
+    acceptance = {
+        "acceptance_overload_live": bool(live),
+        "acceptance_admitted_deadlines_met": bool(deadlines),
+        "acceptance_tenant_fairness": bool(fair_p99 and fair_shed),
+    }
+    print(f"[gram_service] fairness: good p99 {p99_c*1e3:.1f}ms "
+          f"(compliant neighbor) -> {p99_o*1e3:.1f}ms (abusive flood), "
+          f"good shed {good_over['shed_fraction']:.1%}; "
+          f"abuser shed {over['tenants']['abuser']['shed_fraction']:.1%}"
+          if p99_c is not None and p99_o is not None else
+          "[gram_service] fairness: good tenant starved (no p99)")
+    print(f"[gram_service] sustained-load acceptance: {acceptance}")
+    return phases, acceptance
+
+
 def run(quick: bool = False):
     requests = 16 if quick else 64
     slots = 4
@@ -277,6 +461,9 @@ def run(quick: bool = False):
     # -- flight recorder: tracer overhead + drift verdicts ------------------
     tracer_overhead = _tracer_overhead(shapes, arrays, slots, requests)
     drift_verdicts = _drift_verdicts(eng2)
+
+    # -- sustained load: open-loop Poisson phases (DESIGN.md §15) -----------
+    load_phases, load_acceptance = _sustained_load(quick)
 
     speedup_cold = seq_cold_wall / wall_cold
     speedup_warm = seq_warm_wall / wall_warm
@@ -334,6 +521,7 @@ def run(quick: bool = False):
         "guard_overhead": guard_overhead,
         "tracer_overhead": tracer_overhead,
         "drift": drift_verdicts,
+        "sustained_load": load_phases,
         "speedup_vs_status_quo": speedup_cold,
         "speedup_warm_batching_only": speedup_warm,
         "acceptance_recompiles_le_buckets": ok_recompiles,
@@ -343,6 +531,7 @@ def run(quick: bool = False):
             tracer_overhead["acceptance_disabled_overhead_lt_2pct"],
         "acceptance_drift_flags_only_falsified":
             drift_verdicts["acceptance_flags_only_falsified"],
+        **load_acceptance,
     }
     path = write_json("BENCH_gram_service.json", payload)
     print(f"[gram_service] wrote {path}")

@@ -139,6 +139,19 @@ def ir_max_terms(kind: str, levels: int, variant: str = "strassen",
     raise ValueError(f"unknown IR kind {kind!r}")
 
 
+def gram_serve_work(m: int, n: int, *, gram_of: str = "cols",
+                    leaf: int = 32, levels: int | None = None) -> int:
+    """Admission-control work units for one serving-bucket Gram request:
+    the exact leaf-product count of the recursion the engine will run
+    (column gram, or the row gram for ``gram_of="rows"``).
+    ``gram.engine``'s CoDel-style shedder and WFQ scheduler price queued
+    work in these machine-independent units and convert to seconds with
+    a measured seconds-per-unit EWMA."""
+    if gram_of == "rows":
+        return aat_mults_exact(m, n, leaf=leaf, levels=levels)
+    return ata_mults_exact(m, n, leaf=leaf, levels=levels)
+
+
 def aat_mults_exact(m: int, n: int, leaf: int = 32,
                     levels: int | None = None) -> int:
     """Exact multiplication count of the row-gram recursion (Arrigoni-

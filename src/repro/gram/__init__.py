@@ -20,7 +20,8 @@ from .autotune import (  # noqa: F401
 )
 from . import verify  # noqa: F401
 from .engine import (  # noqa: F401
-    BucketHealth, GramEngine, GramRequest, batched_gram,
+    BucketHealth, EngineShutdown, GramEngine, GramFuture, GramRequest,
+    GramServeError, Overloaded, TenantState, batched_gram,
 )
 from .stream import (  # noqa: F401
     GramStream, init as stream_init, update as stream_update,
@@ -38,7 +39,9 @@ __all__ = [
     "autotune", "engine", "stream", "verify",
     "autotune_bucket", "bucket_shape", "autotune_lookup",
     "resolve_block_defaults",
-    "GramEngine", "GramRequest", "BucketHealth", "batched_gram",
+    "GramEngine", "GramRequest", "GramFuture", "BucketHealth",
+    "TenantState", "GramServeError", "Overloaded", "EngineShutdown",
+    "batched_gram",
     "GramStream", "stream_init", "stream_update", "stream_finalize",
     "GramStackStream", "stack_init", "stack_update", "stack_finalize",
     "sharded_init", "update_sharded",

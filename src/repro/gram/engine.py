@@ -58,6 +58,23 @@ Requests that exhaust the ladder are marked ``status="failed"`` with the
 error preserved — ``step()`` never propagates an executable exception,
 so one poisoned bucket cannot wedge ``run_to_completion``.
 
+Overload model (DESIGN.md §15).  ``submit`` returns a thread-safe
+:class:`GramFuture` and decides **admission** on the spot: bounded
+global / per-bucket / per-tenant queues either accept the request
+(operand staged into a donated per-bucket ring buffer — steady-state
+serving allocates nothing per request), shed it fast through the future
+with :class:`Overloaded`, or (``admission="block"``) apply backpressure
+until space frees.  A CoDel-style controller prices queued work in
+``core.cost_model`` leaf-product units against a measured
+seconds-per-unit EWMA and sheds the requests whose deadlines are
+already unmeetable instead of the newest arrivals.  Scheduling extends
+full-batch-first with earliest-deadline-first within a bucket and
+weighted per-tenant fair queuing across buckets (quotas, in-flight
+caps, per-tenant stats) so one tenant's flood degrades only that
+tenant.  ``start()`` runs the scheduler on a background thread;
+``shutdown()`` fails everything still queued with
+:class:`EngineShutdown` — no future is ever left hanging.
+
 Flight recorder (DESIGN.md §14).  The full request lifecycle — submit →
 queue-wait → batch → compile → execute (local or ``dist:scheme``) →
 verify → retry/backoff → rung transition → done — emits request-scoped
@@ -74,16 +91,20 @@ buckets whose autotuned winner has drifted from its model, and
 from __future__ import annotations
 
 import itertools
+import math
+import threading
 import time
 from collections import OrderedDict, deque
+from concurrent.futures import CancelledError
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.ata import ata, ata_full, ata_levels_for
+from ..core.cost_model import gram_serve_work
 from ..core.distributed import (default_gram_axes, distributed_gram,
                                 feasible_schemes, scheme_fallback_chain,
                                 shrink_mesh)
@@ -96,7 +117,25 @@ from ..runtime import faults as _faults
 from . import autotune as _autotune
 from . import verify as _verify
 
-__all__ = ["GramEngine", "GramRequest", "BucketHealth", "batched_gram"]
+__all__ = ["GramEngine", "GramRequest", "GramFuture", "BucketHealth",
+           "TenantState", "GramServeError", "Overloaded", "EngineShutdown",
+           "batched_gram"]
+
+
+class GramServeError(RuntimeError):
+    """A request reached a terminal failure: retry ladder exhausted,
+    deadline blown, or the engine shut down under it."""
+
+
+class Overloaded(GramServeError):
+    """Admission control refused (or the CoDel-style controller shed)
+    this request — the engine is overloaded.  Raised *through the
+    future*, never out of ``submit`` itself, so callers handle sheds and
+    serve failures the same way: ``future.result()``."""
+
+
+class EngineShutdown(GramServeError):
+    """The engine was shut down while this request was still queued."""
 
 
 def batched_gram(blocks: jax.Array, *, levels: Union[int, str] = 1,
@@ -117,6 +156,164 @@ def batched_gram(blocks: jax.Array, *, levels: Union[int, str] = 1,
         out_dtype=out_dtype, block=block, interpret=interpret))(blocks)
 
 
+class GramFuture:
+    """Thread-safe handle to one submitted Gram request.
+
+    Terminal exactly once: result delivery, ladder failure, shed and
+    cancellation all pass through one atomic claim (``_deliver``), so a
+    request is delivered-or-cancelled exactly once — never both, never
+    dropped.  ``result()`` re-raises the terminal exception
+    (``Overloaded`` for sheds, ``EngineShutdown`` on teardown,
+    ``GramServeError`` for ladder/deadline failures,
+    ``concurrent.futures.CancelledError`` after a successful
+    ``cancel()``).  Done-callbacks run on the delivering thread and must
+    not block.
+    """
+
+    __slots__ = ("_engine", "_request", "_cond", "_done", "_result",
+                 "_exception", "_callbacks")
+
+    def __init__(self, engine: "GramEngine", request: "GramRequest"):
+        self._engine = engine
+        self._request = request
+        self._cond = threading.Condition(threading.Lock())
+        self._done = False
+        self._result: Optional[np.ndarray] = None
+        self._exception: Optional[BaseException] = None
+        self._callbacks: List[Callable[["GramFuture"], None]] = []
+
+    @property
+    def uid(self) -> int:
+        return self._request.uid
+
+    @property
+    def request(self) -> "GramRequest":
+        return self._request
+
+    def done(self) -> bool:
+        with self._cond:
+            return self._done
+
+    def cancelled(self) -> bool:
+        with self._cond:
+            return self._done and isinstance(self._exception,
+                                             CancelledError)
+
+    def cancel(self) -> bool:
+        """Cancel if still queued.  Returns False when the request is
+        already in a batch in flight or terminal — an in-flight request
+        is *delivered*, not dropped."""
+        return self._engine._cancel(self._request)
+
+    def add_done_callback(self, fn: Callable[["GramFuture"], None]) -> None:
+        with self._cond:
+            if not self._done:
+                self._callbacks.append(fn)
+                return
+        try:
+            fn(self)
+        except Exception:
+            pass
+
+    def _deliver(self, result=None, exception=None) -> bool:
+        """Claim the terminal state; False if someone beat us to it."""
+        with self._cond:
+            if self._done:
+                return False
+            self._result, self._exception = result, exception
+            self._done = True
+            self._cond.notify_all()
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:
+                pass
+        return True
+
+    def _wait(self, timeout: Optional[float]) -> None:
+        with self._cond:
+            if not self._cond.wait_for(lambda: self._done, timeout):
+                raise TimeoutError(
+                    f"gram request {self.uid} not done after {timeout}s")
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        self._wait(timeout)
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) \
+            -> Optional[BaseException]:
+        self._wait(timeout)
+        return self._exception
+
+
+class _OperandRing:
+    """Donated ring of host staging buffers for one bucket: request
+    operands are copied into a recycled ``(M, N)`` buffer at admission,
+    so steady-state serving allocates nothing per request.  When the
+    ring is exhausted (more than ``depth`` requests of one bucket in
+    flight at once) staging falls back to a fresh allocation — counted
+    in ``misses``, never an error.  All access is under the engine
+    lock."""
+
+    __slots__ = ("bufs", "free", "hits", "misses")
+
+    def __init__(self, depth: int, shape: Tuple[int, int], dtype):
+        self.bufs = [np.zeros(shape, dtype) for _ in range(depth)]
+        self.free = list(range(depth))
+        self.hits = 0
+        self.misses = 0
+
+    def acquire(self) -> Optional[int]:
+        if self.free:
+            self.hits += 1
+            return self.free.pop()
+        self.misses += 1
+        return None
+
+    def release(self, idx: int) -> None:
+        self.free.append(idx)
+
+
+@dataclass
+class TenantState:
+    """Per-tenant serving accounting + weighted-fair-queuing state.
+    ``vtime`` is the tenant's virtual finish time in cost-model work
+    units per unit weight — the WFQ currency the scheduler compares
+    across buckets."""
+    name: str
+    weight: float = 1.0
+    vtime: float = 0.0
+    queued: int = 0
+    inflight: int = 0
+    submitted: int = 0
+    admitted: int = 0
+    served: int = 0
+    failed: int = 0
+    shed: int = 0
+    cancelled: int = 0
+    deadline_missed: int = 0
+
+    def snapshot(self) -> dict:
+        return {"weight": self.weight, "vtime": self.vtime,
+                "queued": self.queued, "inflight": self.inflight,
+                "submitted": self.submitted, "admitted": self.admitted,
+                "served": self.served, "failed": self.failed,
+                "shed": self.shed, "cancelled": self.cancelled,
+                "deadline_missed": self.deadline_missed}
+
+
+def _edf_key(r: "GramRequest") -> tuple:
+    """Within-bucket scheduling order: priority first, then earliest
+    deadline, then FIFO — deadline-less same-priority traffic degrades
+    to exactly the old FIFO order."""
+    return (-r.priority,
+            r.t_deadline if r.t_deadline is not None else math.inf,
+            r.t_submit, r.uid)
+
+
 @dataclass
 class GramRequest:
     uid: int
@@ -129,12 +326,18 @@ class GramRequest:
     t_done: Optional[float] = None
     result: Optional[np.ndarray] = None
     done: bool = False
-    status: str = "pending"           # -> "ok" | "failed"
+    status: str = "pending"           # -> "ok"|"failed"|"shed"|"cancelled"
     error: Optional[str] = None
     attempts: int = 0                 # executable attempts spent on it
     degraded: bool = False            # served below the bucket's first rung
     served_by: Optional[str] = None   # "local" | "local:rungK" | "dist:SCHEME"
     verified: Optional[bool] = None   # output guards ran and passed
+    tenant: str = "default"
+    priority: int = 0                 # higher runs first within a bucket
+    t_deadline: Optional[float] = None  # absolute perf_counter deadline
+    running: bool = False             # drained into a batch in flight
+    future: Optional["GramFuture"] = None
+    ring_slot: Optional[tuple] = None  # (bucket key, ring index) staged in
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -173,9 +376,19 @@ class GramEngine:
                  verify_rtol: Optional[float] = None,
                  verify_seed: int = 0,
                  max_retries: int = 3, backoff_s: float = 0.0,
+                 max_backoff_s: Optional[float] = 5.0,
                  breaker_threshold: int = 2,
                  history_cap: int = 1024, drift_theta: float = 2.0,
-                 drift: Optional[DriftDetector] = None):
+                 drift: Optional[DriftDetector] = None,
+                 max_queue: int = 1024,
+                 max_queue_per_bucket: Optional[int] = None,
+                 admission: str = "shed",
+                 block_timeout_s: float = 1.0,
+                 deadline_shedding: bool = True,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 tenant_quota: Optional[int] = None,
+                 tenant_max_inflight: Optional[int] = None,
+                 ring_depth: Optional[int] = None):
         self.slots = slots
         self.levels, self.leaf, self.variant = levels, leaf, variant
         self.mode, self.block = mode, block
@@ -203,7 +416,49 @@ class GramEngine:
         self._verify_rng = np.random.default_rng(verify_seed)
         self.max_retries = max_retries
         self.backoff_s = backoff_s
+        # retry backoff is capped even for deadline-less requests —
+        # without this, exponential backoff on a deadline_s=None request
+        # sleeps unboundedly across retries
+        self.max_backoff_s = max_backoff_s
         self.breaker_threshold = max(1, breaker_threshold)
+        # -- overload model (DESIGN.md §15) --------------------------------
+        if admission not in ("shed", "block"):
+            raise ValueError(f"admission must be 'shed' or 'block', got "
+                             f"{admission!r}")
+        self.admission = admission
+        self.max_queue = max(1, max_queue)
+        self.max_queue_per_bucket = max_queue_per_bucket
+        self.block_timeout_s = block_timeout_s
+        self.deadline_shedding = deadline_shedding
+        self.tenant_weights = dict(tenant_weights or {})
+        self.tenant_quota = tenant_quota
+        self.tenant_max_inflight = tenant_max_inflight
+        self.ring_depth = ring_depth if ring_depth is not None \
+            else 4 * slots
+        # one re-entrant lock guards every queue/tenant/counter mutation;
+        # the three conditions share it: _work wakes the scheduler,
+        # _space wakes blocked submitters, _idle wakes drain()
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._space = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self._queued = 0
+        self._inflight = 0
+        self.queue_peak = 0
+        self.shed = 0
+        self.cancelled = 0
+        self.deadline_missed = 0
+        self._tenants: Dict[str, TenantState] = {}
+        self._vclock = 0.0               # WFQ system virtual time
+        self._rings: Dict[tuple, _OperandRing] = {}
+        self._stacks: Dict[tuple, np.ndarray] = {}
+        # CoDel-style shedder currency: exact cost-model leaf products
+        # per bucket request, and an EWMA of measured seconds per unit
+        self._work_cache: Dict[tuple, float] = {}
+        self._sec_per_unit: Optional[float] = None
+        self._batch_s: Dict[tuple, float] = {}
         self._uid = itertools.count()
         # bucket key -> FIFO of waiting requests (insertion-ordered so
         # tick scheduling is deterministic)
@@ -262,35 +517,296 @@ class GramEngine:
             lo=1.0 / 64, hi=2.0)
         self._m_exec = _metrics.histogram(
             "gram_exec_s", "executable wall seconds per batch attempt")
+        # overload instruments: admission decisions, sheds by reason,
+        # cancellations and deadline misses, labeled per tenant
+        self._m_admitted = _metrics.counter(
+            "gram_admitted_total", "requests accepted by admission control")
+        self._m_shed = _metrics.counter(
+            "gram_shed_total", "requests shed by admission/CoDel, by reason")
+        self._m_cancelled = _metrics.counter(
+            "gram_cancelled_total", "requests cancelled while queued")
+        self._m_deadline_miss = _metrics.counter(
+            "gram_deadline_miss_total", "deadline misses, by outcome")
 
     # -- request intake ----------------------------------------------------
     def submit(self, a, *, full: bool = True, gram_of: str = "cols",
-               deadline_s: Optional[float] = None) -> int:
-        """Enqueue one Gram request; returns its uid.  ``full`` selects the
-        mirrored symmetric C (default) vs the lower triangle only;
-        ``gram_of="rows"`` serves ``a @ a.T`` (the Arrigoni-Massini row
-        gram — the ``aat`` leaf program on the fused path) instead of the
-        default ``a.T @ a``.  ``deadline_s`` (relative to submission) lets
-        the engine fail the request fast instead of retrying past its
-        usefulness."""
+               deadline_s: Optional[float] = None, tenant: str = "default",
+               priority: int = 0, admission: Optional[str] = None,
+               block_timeout_s: Optional[float] = None) -> GramFuture:
+        """Enqueue one Gram request; returns its :class:`GramFuture`.
+
+        ``full`` selects the mirrored symmetric C (default) vs the lower
+        triangle only; ``gram_of="rows"`` serves ``a @ a.T`` (the
+        Arrigoni-Massini row gram — the ``aat`` leaf program on the
+        fused path) instead of the default ``a.T @ a``.  ``deadline_s``
+        (relative to submission) lets the engine fail the request fast
+        instead of retrying past its usefulness; ``tenant`` and
+        ``priority`` feed the weighted-fair / EDF scheduler.
+
+        Admission is decided HERE (DESIGN.md §15): the request is either
+        accepted (operand staged into the bucket's donated ring buffer),
+        shed — the future fails fast with :class:`Overloaded`; ``submit``
+        itself never raises on load — or, with ``admission="block"``,
+        the caller blocks until space frees or ``block_timeout_s``
+        expires (then sheds).  A request whose deadline is already
+        unmeetable given the queue ahead of it is shed immediately
+        rather than queued to die."""
         a = np.asarray(a)
         if a.ndim != 2:
             raise ValueError(f"gram request must be 2-D, got {a.shape}")
         if gram_of not in ("cols", "rows"):
             raise ValueError(f"gram_of must be 'cols' or 'rows', got "
                              f"{gram_of!r}")
+        mode = self.admission if admission is None else admission
+        if mode not in ("shed", "block"):
+            raise ValueError(f"admission must be 'shed' or 'block', got "
+                             f"{mode!r}")
+        now = time.perf_counter()
         r = GramRequest(uid=next(self._uid), a=a, shape=a.shape, full=full,
-                        gram_of=gram_of, t_submit=time.perf_counter(),
-                        deadline_s=deadline_s)
+                        gram_of=gram_of, t_submit=now,
+                        deadline_s=deadline_s, tenant=str(tenant),
+                        priority=int(priority))
+        if deadline_s is not None:
+            r.t_deadline = now + deadline_s
+        fut = GramFuture(self, r)
+        r.future = fut
         key = self._bucket_key(a.shape, a.dtype, gram_of)
-        self.waiting.setdefault(key, []).append(r)
         b = self._blabel(key)
-        self._m_requests.inc(engine=self.engine_label, bucket=b)
-        self._m_queue.set(sum(len(q) for q in self.waiting.values()),
-                          engine=self.engine_label)
-        _trace.instant("submit", trace_id=r.uid, bucket=b,
-                       shape=f"{a.shape[0]}x{a.shape[1]}", gram_of=gram_of)
-        return r.uid
+        timeout = self.block_timeout_s if block_timeout_s is None \
+            else block_timeout_s
+        t_give_up = now + timeout
+        with self._lock:
+            ts = self._tenant(r.tenant)
+            ts.submitted += 1
+            self._m_requests.inc(engine=self.engine_label, bucket=b)
+            _trace.instant("submit", trace_id=r.uid, bucket=b,
+                           shape=f"{a.shape[0]}x{a.shape[1]}",
+                           gram_of=gram_of, tenant=r.tenant)
+            while True:
+                if self._stop:
+                    self._finish_failed(
+                        r, "engine shutdown",
+                        exc=EngineShutdown(
+                            f"request {r.uid}: engine is shut down"))
+                    return fut
+                reason = self._admission_veto_locked(key, r, ts)
+                if reason is None:
+                    self._admit_locked(key, r, ts)
+                    return fut
+                if reason == "unmeetable":
+                    # blocking cannot help a deadline the queue already
+                    # makes unmeetable — shed even in block mode
+                    self._finish_shed(r, reason)
+                    return fut
+                # before shedding, try to free space by failing queued
+                # requests that are already doomed (CoDel discipline:
+                # drop the dead, not the newest)
+                if self._prune_queues_locked():
+                    continue
+                if mode == "block":
+                    remaining = t_give_up - time.perf_counter()
+                    if remaining > 0:
+                        self._space.wait(remaining)
+                        continue
+                    reason = f"{reason}_timeout"
+                self._finish_shed(r, reason)
+                return fut
+
+    # -- admission control (DESIGN.md §15) ---------------------------------
+    def _tenant(self, name: str) -> TenantState:
+        ts = self._tenants.get(name)
+        if ts is None:
+            ts = TenantState(name=name,
+                             weight=max(self.tenant_weights.get(name, 1.0),
+                                        1e-9),
+                             vtime=self._vclock)
+            self._tenants[name] = ts
+        return ts
+
+    def _admission_veto_locked(self, key, r: GramRequest,
+                               ts: TenantState) -> Optional[str]:
+        """None to accept, else the shed-reason slug.  The unmeetable
+        check prices only the QUEUE ahead of the request (batches of
+        ``slots`` at the bucket's estimated batch seconds) — never the
+        request's own service time, so an empty queue always admits and
+        the PR 6 deadline-expiry semantics are unchanged."""
+        qb = len(self.waiting.get(key, ()))
+        if self.deadline_shedding and r.t_deadline is not None:
+            est = self._est_batch_s(key)
+            if est is not None:
+                wait_est = (qb // self.slots) * est
+                if time.perf_counter() + wait_est > r.t_deadline:
+                    return "unmeetable"
+        if self._queued >= self.max_queue:
+            return "queue_full"
+        if (self.max_queue_per_bucket is not None
+                and qb >= self.max_queue_per_bucket):
+            return "bucket_full"
+        if self.tenant_quota is not None and ts.queued >= self.tenant_quota:
+            return "tenant_quota"
+        return None
+
+    def _admit_locked(self, key, r: GramRequest, ts: TenantState) -> None:
+        self._stage_operand_locked(key, r)
+        if ts.queued == 0:
+            # (re)activating tenant: no banked WFQ credit from idling
+            ts.vtime = max(ts.vtime, self._vclock)
+        self.waiting.setdefault(key, []).append(r)
+        self._queued += 1
+        ts.queued += 1
+        ts.admitted += 1
+        self.queue_peak = max(self.queue_peak, self._queued)
+        b = self._blabel(key)
+        self._m_admitted.inc(engine=self.engine_label, bucket=b,
+                             tenant=r.tenant)
+        self._m_queue.set(self._queued, engine=self.engine_label)
+        _trace.instant("admit", trace_id=r.uid, bucket=b, tenant=r.tenant,
+                       queued=self._queued)
+        self._work.notify()
+
+    def _stage_operand_locked(self, key, r: GramRequest) -> None:
+        """Copy the operand into a donated ring buffer for its bucket;
+        ``r.a`` becomes the true-shape view into the staged copy."""
+        M, N, dtype, _gram_of = key
+        ring = self._rings.get(key)
+        if ring is None:
+            ring = self._rings[key] = _OperandRing(
+                self.ring_depth, (M, N), jnp.dtype(dtype))
+        idx = ring.acquire()
+        m, n = r.shape
+        if idx is None:                 # ring exhausted: plain allocation
+            buf = np.zeros((M, N), jnp.dtype(dtype))
+        else:
+            buf = ring.bufs[idx]
+            r.ring_slot = (key, idx)
+        buf[:m, :n] = r.a
+        r.a = buf[:m, :n]
+
+    def _release_operand_locked(self, r: GramRequest) -> None:
+        if r.ring_slot is not None:
+            key, idx = r.ring_slot
+            r.ring_slot = None
+            ring = self._rings.get(key)
+            if ring is not None:
+                ring.release(idx)
+
+    def _dequeue_locked(self, r: GramRequest) -> None:
+        """Accounting for one request leaving a waiting queue (into a
+        batch, a shed, a cancel or shutdown) — the caller removes it
+        from the queue list itself."""
+        self._queued -= 1
+        self._tenants[r.tenant].queued -= 1
+
+    def _notify_idle_locked(self) -> None:
+        if self._queued == 0 and self._inflight == 0:
+            self._idle.notify_all()
+
+    # -- work estimation (cost model -> seconds) ---------------------------
+    _EST_ALPHA = 0.3
+
+    def _work_units(self, key) -> float:
+        """Cost-model work units (exact leaf-product count) for one
+        request of this bucket — the machine-independent currency of the
+        shedder and the WFQ scheduler."""
+        u = self._work_cache.get(key)
+        if u is None:
+            M, N, _dtype, gram_of = key
+            cfg = self._bucket_config(key, 0)
+            levels = cfg["levels"]
+            if levels == "auto":
+                levels = min(ata_levels_for(M, N, cfg["leaf"]),
+                             AUTO_MAX_LEVELS)
+            try:
+                u = float(gram_serve_work(M, N, gram_of=gram_of,
+                                          leaf=cfg["leaf"],
+                                          levels=int(levels)))
+            except Exception:
+                u = float(M) * N * (N + 1) / 2.0
+            self._work_cache[key] = u
+        return u
+
+    def _note_batch_seconds(self, key, dt: float) -> None:
+        """Feed one measured batch service time (including injected
+        exec_delay stalls — overload drills must inflate the estimate)
+        into the per-bucket EWMA and the global seconds-per-work-unit
+        EWMA used for never-measured buckets."""
+        with self._lock:
+            units = self._work_units(key) * self.slots
+            per = dt / max(units, 1.0)
+            a = self._EST_ALPHA
+            self._sec_per_unit = per if self._sec_per_unit is None \
+                else (1 - a) * self._sec_per_unit + a * per
+            old = self._batch_s.get(key)
+            self._batch_s[key] = dt if old is None \
+                else (1 - a) * old + a * dt
+
+    def _est_batch_s(self, key) -> Optional[float]:
+        """Estimated seconds to serve one batch of this bucket; None
+        until the engine has measured anything at all."""
+        est = self._batch_s.get(key)
+        if est is not None:
+            return est
+        if self._sec_per_unit is None:
+            return None
+        return self._sec_per_unit * self._work_units(key) * self.slots
+
+    def _prune_queues_locked(self) -> List[GramRequest]:
+        """CoDel-style sweep: walk every bucket queue in EDF order and
+        remove the requests that are already dead — overdue ones fail as
+        deadline misses, not-yet-overdue ones whose queue position makes
+        their deadline unmeetable are shed — so overload pressure evicts
+        the doomed, not the newest arrivals.  Returns the requests it
+        finished."""
+        now = time.perf_counter()
+        done: List[GramRequest] = []
+        for key in list(self.waiting):
+            q = self.waiting[key]
+            q.sort(key=_edf_key)
+            est = self._est_batch_s(key) if self.deadline_shedding else None
+            keep: List[GramRequest] = []
+            for r in q:
+                if r.t_deadline is None:
+                    keep.append(r)
+                elif now > r.t_deadline:
+                    self._dequeue_locked(r)
+                    self._finish_failed(r, "deadline exceeded in queue")
+                    done.append(r)
+                elif (est is not None
+                      and now + (len(keep) // self.slots) * est
+                      > r.t_deadline):
+                    self._dequeue_locked(r)
+                    self._finish_shed(r, "unmeetable")
+                    done.append(r)
+                else:
+                    keep.append(r)
+            if keep:
+                self.waiting[key] = keep
+            else:
+                del self.waiting[key]
+        if done:
+            self._m_queue.set(self._queued, engine=self.engine_label)
+            self._space.notify_all()
+            self._notify_idle_locked()
+        return done
+
+    def _cancel(self, r: GramRequest) -> bool:
+        """Cancel a queued request (GramFuture.cancel backend): False
+        once it is in flight or terminal."""
+        with self._lock:
+            if r.done or r.running:
+                return False
+            key = self._bucket_key(r.shape, r.a.dtype, r.gram_of)
+            q = self.waiting.get(key)
+            if q is None or r not in q:
+                return False            # racing terminal transition
+            q.remove(r)
+            if not q:
+                del self.waiting[key]
+            self._dequeue_locked(r)
+            self._m_queue.set(self._queued, engine=self.engine_label)
+            self._space.notify_all()
+            self._finish_cancelled(r)
+        return True
 
     def _bucket_key(self, shape, dtype, gram_of: str = "cols") -> tuple:
         M, N = _autotune.bucket_shape(*shape, min_side=self.min_bucket)
@@ -382,12 +898,15 @@ class GramEngine:
         if self.backoff_s <= 0:
             return
         wait = self.backoff_s * (2 ** (attempt - 1))
+        # deadline-less requests must not sleep unboundedly: the
+        # exponential is capped by max_backoff_s before any deadline math
+        if self.max_backoff_s is not None:
+            wait = min(wait, self.max_backoff_s)
         # never sleep past the tightest live deadline
         now = time.perf_counter()
         for r in batch:
-            if r.deadline_s is not None:
-                wait = min(wait, max(0.0,
-                                     r.t_submit + r.deadline_s - now))
+            if r.t_deadline is not None:
+                wait = min(wait, max(0.0, r.t_deadline - now))
         if wait > 0:
             time.sleep(wait)
 
@@ -396,8 +915,7 @@ class GramEngine:
         now = time.perf_counter()
         live, expired = [], []
         for slot, r in entries:
-            if (r.deadline_s is not None
-                    and now > r.t_submit + r.deadline_s):
+            if r.t_deadline is not None and now > r.t_deadline:
                 self._finish_failed(r, "deadline exceeded")
                 expired.append(r)
             else:
@@ -405,47 +923,129 @@ class GramEngine:
         return live, expired
 
     # -- completion bookkeeping -------------------------------------------
-    def _finish_ok(self, r: GramRequest, c: np.ndarray, *, served_by: str,
-                   degraded: bool, t_done: Optional[float] = None):
-        b = self._blabel(self._bucket_key(r.shape, r.a.dtype, r.gram_of))
-        r.result = c
-        r.status, r.done = "ok", True
-        r.t_done = t_done if t_done is not None else time.perf_counter()
-        r.degraded = degraded
-        r.served_by = served_by
-        r.verified = True if self._guard_on else None
+    # Every terminal path claims the future FIRST (exactly-once), then
+    # does its accounting under the engine lock.  A request taken into a
+    # batch holds an in-flight slot; releasing it may wake drain().
+
+    def _settle_locked(self, r: GramRequest) -> None:
+        """Shared terminal accounting: in-flight slot, operand ring,
+        host copy, finished history, idle wakeup."""
+        if r.running:
+            r.running = False
+            self._inflight -= 1
+            ts = self._tenants.get(r.tenant)
+            if ts is not None:
+                ts.inflight -= 1
+        self._release_operand_locked(r)
         r.a = None                      # free the host copy
         self.finished.append(r)
-        self.served += 1
-        if degraded:
-            self.degraded_served += 1
-        self._m_served.inc(engine=self.engine_label, bucket=b,
-                           served_by=served_by)
-        self._m_latency.observe(r.latency_s, engine=self.engine_label,
-                                bucket=b)
+        self._notify_idle_locked()
+
+    def _note_deadline_miss_locked(self, r: GramRequest, b: str,
+                                   outcome: str) -> None:
+        self.deadline_missed += 1
+        self._tenant(r.tenant).deadline_missed += 1
+        self._m_deadline_miss.inc(engine=self.engine_label, bucket=b,
+                                  tenant=r.tenant, outcome=outcome)
+        _trace.instant_at("deadline_miss", r.t_deadline or r.t_done,
+                          trace_id=r.uid, bucket=b, tenant=r.tenant,
+                          outcome=outcome)
+
+    def _finish_ok(self, r: GramRequest, c: np.ndarray, *, served_by: str,
+                   degraded: bool, t_done: Optional[float] = None):
+        if r.future is not None and not r.future._deliver(result=c):
+            return
+        with self._lock:
+            b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
+                                              r.gram_of))
+            r.result = c
+            r.status, r.done = "ok", True
+            r.t_done = t_done if t_done is not None else time.perf_counter()
+            r.degraded = degraded
+            r.served_by = served_by
+            r.verified = True if self._guard_on else None
+            self.served += 1
+            if degraded:
+                self.degraded_served += 1
+            self._tenant(r.tenant).served += 1
+            if r.t_deadline is not None and r.t_done > r.t_deadline:
+                self._note_deadline_miss_locked(r, b, "served_late")
+            self._settle_locked(r)
+            self._m_served.inc(engine=self.engine_label, bucket=b,
+                               served_by=served_by)
+            self._m_latency.observe(r.latency_s, engine=self.engine_label,
+                                    bucket=b)
         _trace.instant("done", trace_id=r.uid, status="ok",
                        served_by=served_by)
         _trace.add_span("request", r.t_submit, r.t_done, trace_id=r.uid,
                         bucket=b, status="ok", served_by=served_by,
                         attempts=r.attempts)
 
-    def _finish_failed(self, r: GramRequest, error: str):
-        b = self._blabel(self._bucket_key(r.shape, r.a.dtype, r.gram_of))
-        r.status, r.done = "failed", True
-        r.error = error
-        r.t_done = time.perf_counter()
-        r.a = None
-        self.finished.append(r)
-        self.failed += 1
-        self._m_failed.inc(engine=self.engine_label, bucket=b)
-        if error.startswith("deadline"):
-            self._m_deadline.inc(engine=self.engine_label, bucket=b)
-        self._m_latency.observe(r.latency_s, engine=self.engine_label,
-                                bucket=b)
+    def _finish_failed(self, r: GramRequest, error: str, *,
+                       exc: Optional[BaseException] = None):
+        if r.future is not None and not r.future._deliver(
+                exception=exc if exc is not None
+                else GramServeError(f"request {r.uid} failed: {error}")):
+            return
+        with self._lock:
+            b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
+                                              r.gram_of))
+            r.status, r.done = "failed", True
+            r.error = error
+            r.t_done = time.perf_counter()
+            self.failed += 1
+            self._tenant(r.tenant).failed += 1
+            self._m_failed.inc(engine=self.engine_label, bucket=b)
+            if error.startswith("deadline"):
+                self._m_deadline.inc(engine=self.engine_label, bucket=b)
+                self._note_deadline_miss_locked(r, b, "failed")
+            self._settle_locked(r)
+            self._m_latency.observe(r.latency_s, engine=self.engine_label,
+                                    bucket=b)
         _trace.instant("done", trace_id=r.uid, status="failed", error=error)
         _trace.add_span("request", r.t_submit, r.t_done, trace_id=r.uid,
                         bucket=b, status="failed", error=error,
                         attempts=r.attempts)
+
+    def _finish_shed(self, r: GramRequest, reason: str):
+        if r.future is not None and not r.future._deliver(
+                exception=Overloaded(
+                    f"request {r.uid} shed ({reason}): engine "
+                    f"{self.engine_label} is overloaded")):
+            return
+        with self._lock:
+            b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
+                                              r.gram_of))
+            r.status, r.done = "shed", True
+            r.error = f"shed: {reason}"
+            r.t_done = time.perf_counter()
+            self.shed += 1
+            self._tenant(r.tenant).shed += 1
+            self._m_shed.inc(engine=self.engine_label, bucket=b,
+                             tenant=r.tenant, reason=reason)
+            self._settle_locked(r)
+        _trace.instant("shed", trace_id=r.uid, bucket=b, tenant=r.tenant,
+                       reason=reason)
+        _trace.add_span("request", r.t_submit, r.t_done, trace_id=r.uid,
+                        bucket=b, status="shed", error=r.error,
+                        attempts=r.attempts)
+
+    def _finish_cancelled(self, r: GramRequest):
+        if r.future is not None and not r.future._deliver(
+                exception=CancelledError(f"request {r.uid} cancelled")):
+            return
+        with self._lock:
+            b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
+                                              r.gram_of))
+            r.status, r.done = "cancelled", True
+            r.error = "cancelled"
+            r.t_done = time.perf_counter()
+            self.cancelled += 1
+            self._tenant(r.tenant).cancelled += 1
+            self._m_cancelled.inc(engine=self.engine_label, bucket=b,
+                                  tenant=r.tenant)
+            self._settle_locked(r)
+        _trace.instant("cancel", trace_id=r.uid, bucket=b, tenant=r.tenant)
 
     # -- output guards -----------------------------------------------------
     def _guard(self, key, entries, out) -> Optional[str]:
@@ -710,30 +1310,89 @@ class GramEngine:
             self._local_executable(key, cfg)
         return self.compile_count - before
 
+    # -- scheduling (full-batch-first -> WFQ across buckets -> EDF) --------
+    def _select_bucket_locked(self) -> tuple:
+        """Pick the bucket to drain: any bucket with a full batch first
+        (throughput, exactly as before), ties and partial batches broken
+        by weighted-fair queuing — the bucket whose head request belongs
+        to the tenant with the smallest virtual time — then by oldest
+        head.  With a single tenant every vtime compares equal and this
+        degenerates to the old oldest-head-first policy."""
+        full = [k for k, q in self.waiting.items() if len(q) >= self.slots]
+        pool = full or list(self.waiting)
+
+        def rank(k):
+            head = min(self.waiting[k], key=_edf_key)
+            ts = self._tenants.get(head.tenant)
+            return (ts.vtime if ts is not None else 0.0,
+                    head.t_submit, head.uid)
+
+        key = min(pool, key=rank)
+        self._vclock = max(self._vclock, rank(key)[0])
+        return key
+
+    def _take_batch_locked(self, key) -> List[Tuple[int, GramRequest]]:
+        """Pop up to ``slots`` requests from one bucket in EDF order,
+        honoring the per-tenant in-flight cap (a capped tenant's surplus
+        stays queued for the next tick; the bucket never stalls — if
+        every waiting request is capped, the EDF head runs anyway)."""
+        q = self.waiting[key]
+        q.sort(key=_edf_key)
+        cap = self.tenant_max_inflight
+        take: List[GramRequest] = []
+        leftover: List[GramRequest] = []
+        taking: Dict[str, int] = {}
+        for r in q:
+            busy = (self._tenants[r.tenant].inflight
+                    + taking.get(r.tenant, 0))
+            if len(take) < self.slots and (cap is None or busy < cap):
+                take.append(r)
+                taking[r.tenant] = taking.get(r.tenant, 0) + 1
+            else:
+                leftover.append(r)
+        if not take:                    # livelock guard: serve the head
+            take, leftover = [q[0]], q[1:]
+        if leftover:
+            self.waiting[key] = leftover
+        else:
+            del self.waiting[key]
+        units = self._work_units(key)
+        for r in take:
+            self._dequeue_locked(r)
+            r.running = True
+            ts = self._tenants[r.tenant]
+            ts.inflight += 1
+            self._inflight += 1
+            # WFQ charge: one request's cost-model work over the
+            # tenant's weight advances its virtual time
+            ts.vtime += units / ts.weight
+        self._m_queue.set(self._queued, engine=self.engine_label)
+        self._space.notify_all()
+        return list(enumerate(take))
+
     # -- one engine tick ---------------------------------------------------
     def step(self) -> List[GramRequest]:
         """Drain one batch: serve a full batch if any bucket has one
-        (throughput), else the bucket whose head request has waited
-        longest (fairness — sparse buckets cannot be starved by popular
-        ones); FIFO within a bucket.  Runs the bucket executable over up
-        to ``slots`` stacked requests — through the degradation ladder
-        (retry / escalate / fail, see module docstring) — and slices each
-        result back to its true shape.  Returns the requests finished
-        this tick (served, degraded, or failed); never raises on an
-        executable failure."""
+        (throughput), else weighted-fair across tenants / oldest head
+        across buckets (fairness — sparse buckets cannot be starved by
+        popular ones); EDF within a bucket (FIFO when no deadlines or
+        priorities are in play).  Runs the bucket executable over up to
+        ``slots`` stacked requests — through the degradation ladder
+        (retry / escalate / fail, see module docstring) — and slices
+        each result back to its true shape.  Returns the requests
+        finished this tick (served, degraded, failed, or pruned by the
+        shedder); never raises on an executable failure."""
         if not self.waiting:
             return []
-        self.ticks += 1
         self._poll_faults()
-        full = [k for k, q in self.waiting.items() if len(q) >= self.slots]
-        key = min(full or self.waiting,
-                  key=lambda k: self.waiting[k][0].t_submit)
-        queue = self.waiting[key]
-        batch, rest = queue[:self.slots], queue[self.slots:]
-        if rest:
-            self.waiting[key] = rest
-        else:
-            del self.waiting[key]
+        with self._lock:
+            done = self._prune_queues_locked()
+            if not self.waiting:
+                return done
+            self.ticks += 1
+            key = self._select_bucket_locked()
+            entries = self._take_batch_locked(key)
+        batch = [r for _, r in entries]
 
         b = self._blabel(key)
         t_batch = time.perf_counter()
@@ -744,12 +1403,11 @@ class GramEngine:
             for r in batch:
                 _trace.add_span("queue_wait", r.t_submit, t_batch,
                                 trace_id=r.uid, bucket=b)
-        self._m_queue.set(sum(len(q) for q in self.waiting.values()),
-                          engine=self.engine_label)
         self._m_fill.observe(len(batch) / self.slots,
                              engine=self.engine_label)
 
-        entries, done = self._expire(list(enumerate(batch)))
+        entries, expired = self._expire(entries)
+        done.extend(expired)
         if entries:
             dist = self._is_distributed(key)
             with _trace.span("batch", bucket=b, n=len(entries),
@@ -768,8 +1426,15 @@ class GramEngine:
         executable under the retry/escalation ladder."""
         M, N, dtype, gram_of = key
         health = self._bucket_health(key)
-        # jnp.dtype resolves extended names ("bfloat16") numpy alone won't
-        clean = np.zeros((self.slots, M, N), jnp.dtype(dtype))
+        # reused per-bucket slot stack (zeroed each batch — the "clean
+        # host copy" retries restart from); jnp.dtype resolves extended
+        # names ("bfloat16") numpy alone won't
+        clean = self._stacks.get(key)
+        if clean is None or clean.shape[0] != self.slots:
+            clean = np.zeros((self.slots, M, N), jnp.dtype(dtype))
+            self._stacks[key] = clean
+        else:
+            clean.fill(0)
         for slot, r in entries:
             m, n = r.shape
             clean[slot, :m, :n] = r.a
@@ -783,6 +1448,10 @@ class GramEngine:
             rung = health.rung
             cfg = self._bucket_config(key, rung)
             site = f"gram.engine.exec.local.{M}x{N}.{dtype}.{gram_of}"
+            # service-time sampling starts BEFORE the fault hook: an
+            # injected exec_delay stall is real service time and must
+            # inflate the shedder's estimate
+            t_a0 = time.perf_counter()
             try:
                 _faults.check_exec(site)
                 stack = _faults.poison("poison_operand",
@@ -813,6 +1482,7 @@ class GramEngine:
                                             trace_id=r.uid, bucket=b,
                                             vetoed=veto is not None)
                 if veto is None:
+                    self._note_batch_seconds(key, t_x1 - t_a0)
                     if rung == 0:
                         # wall drift channel: measured executable seconds
                         # vs model bytes, per tuned bucket (rung 0 only —
@@ -863,8 +1533,8 @@ class GramEngine:
         m, n = r.shape
         attempt, last_err = 0, "unknown failure"
         while True:
-            if (r.deadline_s is not None and
-                    time.perf_counter() > r.t_submit + r.deadline_s):
+            if (r.t_deadline is not None and
+                    time.perf_counter() > r.t_deadline):
                 self._finish_failed(r, "deadline exceeded")
                 return
             health = self._bucket_health(key)
@@ -919,8 +1589,95 @@ class GramEngine:
                 return
             self._backoff(attempt, [r])
 
+    # -- background scheduler ----------------------------------------------
+    def _scheduler_alive(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def start(self) -> "GramEngine":
+        """Start the background scheduler loop: after this, ``submit``
+        alone drives serving and futures resolve asynchronously.
+        Idempotent; ``shutdown()`` stops it.  Returns self."""
+        with self._lock:
+            if self._scheduler_alive():
+                return self
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._scheduler_loop,
+                name=f"gram-engine-{self.engine_label}", daemon=True)
+            self._thread.start()
+        return self
+
+    def _scheduler_loop(self) -> None:
+        while True:
+            with self._work:
+                while not self._stop and self._queued == 0:
+                    # bounded wait: re-check stop even if a notify races
+                    self._work.wait(0.05)
+                if self._stop:
+                    return
+            try:
+                self.step()
+            except Exception as e:  # noqa: BLE001 — step() is supposed
+                # to absorb executable failures; anything escaping here
+                # must not kill the serving thread
+                _trace.instant("scheduler_error",
+                               error=f"{type(e).__name__}: {e}")
+                time.sleep(0.005)
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted request is terminal (queues empty,
+        nothing in flight).  True on success, False on timeout."""
+        with self._lock:
+            return self._idle.wait_for(
+                lambda: self._queued == 0 and self._inflight == 0, timeout)
+
+    def shutdown(self, *, timeout: float = 10.0) -> int:
+        """Stop the scheduler and fail every still-queued request
+        exceptionally (``EngineShutdown``) — no future is left hanging.
+        Returns the number of requests failed this way.  The engine can
+        be ``start()``-ed again afterwards."""
+        with self._lock:
+            self._stop = True
+            self._work.notify_all()
+            self._space.notify_all()
+        t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout)
+        with self._lock:
+            pending = [r for q in self.waiting.values() for r in q]
+            self.waiting.clear()
+            for r in pending:
+                self._dequeue_locked(r)
+            self._m_queue.set(self._queued, engine=self.engine_label)
+            for r in pending:
+                self._finish_failed(
+                    r, "engine shutdown",
+                    exc=EngineShutdown(
+                        f"request {r.uid}: engine {self.engine_label} "
+                        f"shut down with the request still queued"))
+            self._space.notify_all()
+            self._notify_idle_locked()
+        return len(pending)
+
+    def serve(self, a, *, timeout: Optional[float] = None,
+              **kw) -> np.ndarray:
+        """Synchronous convenience path: ``submit(...).result()`` — all
+        PR 6 retry/breaker/verify semantics apply unchanged.  Steps the
+        engine inline when no background scheduler is running."""
+        fut = self.submit(a, **kw)
+        if not self._scheduler_alive():
+            ticks = 0
+            while not fut.done() and ticks < 10_000:
+                self.step()
+                ticks += 1
+        return fut.result(timeout)
+
     def run_to_completion(self, max_ticks: int = 10_000) \
             -> List[GramRequest]:
+        if self._scheduler_alive():
+            self.drain()
+            return list(self.finished)
         for _ in range(max_ticks):
             if not self.waiting:
                 break
@@ -955,7 +1712,29 @@ class GramEngine:
                             if h.quarantined},
             "history_cap": self.history_cap,
             "engine": self.engine_label,
-            "queue_depth": sum(len(q) for q in self.waiting.values()),
+            "queue_depth": self._queued,
+            "queue_peak": self.queue_peak,
+            "inflight": self._inflight,
+            "shed": self.shed,
+            "cancelled": self.cancelled,
+            "deadline_missed": self.deadline_missed,
+            "scheduler_running": self._scheduler_alive(),
+            "sec_per_work_unit": self._sec_per_unit,
+            "ring": {
+                "depth": self.ring_depth,
+                "hits": sum(rg.hits for rg in self._rings.values()),
+                "misses": sum(rg.misses for rg in self._rings.values()),
+            },
+            "admission": {
+                "mode": self.admission,
+                "max_queue": self.max_queue,
+                "max_queue_per_bucket": self.max_queue_per_bucket,
+                "tenant_quota": self.tenant_quota,
+                "tenant_max_inflight": self.tenant_max_inflight,
+                "deadline_shedding": self.deadline_shedding,
+            },
+            "tenants": {name: ts.snapshot()
+                        for name, ts in sorted(self._tenants.items())},
             "p50_latency_s": self._m_latency.quantile(0.50, eng),
             "p99_latency_s": self._m_latency.quantile(0.99, eng),
             "drift": [f.as_dict() for f in self.drift.findings("wall")],

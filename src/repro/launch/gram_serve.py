@@ -13,6 +13,14 @@ map straight onto the engine's degradation ladder — e.g.
 
     ... --faults "poison_output:rate=0.1;exec_fail:rate=0.05" --verify 2
 
+The overload model rides it as well (DESIGN.md §15): ``--async`` serves
+through the background scheduler (``submit`` returns futures; the driver
+drains them), ``--tenants N`` spreads the trace round-robin over N
+synthetic tenants, and the admission knobs (``--max-queue``,
+``--admission shed|block``, ``--tenant-quota``, ``--tenant-weights``)
+bound the queues — shed requests fail fast with ``Overloaded`` and are
+reported separately from served/failed.
+
 The flight recorder rides along too (DESIGN.md §14): ``--trace-out``
 enables request-scoped tracing and writes the Chrome trace-event JSON
 (open it in Perfetto — every request's submit -> queue-wait -> execute ->
@@ -79,6 +87,36 @@ def main(argv=None):
                          "fast instead of retrying)")
     ap.add_argument("--backoff-ms", type=float, default=0.0,
                     help="base retry backoff (doubles per attempt)")
+    ap.add_argument("--max-backoff-ms", type=float, default=5000.0,
+                    help="hard cap on one retry backoff sleep — bounds "
+                         "deadline-less requests too")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="serve through the background scheduler loop: "
+                         "submit() returns futures, the driver drains "
+                         "them (DESIGN.md §15)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="spread the trace round-robin over N synthetic "
+                         "tenants (t0..tN-1) for the weighted-fair "
+                         "scheduler")
+    ap.add_argument("--tenant-weights", default=None, metavar="SPEC",
+                    help="per-tenant WFQ weights, e.g. 't0=3,t1=1' "
+                         "(unlisted tenants weigh 1)")
+    ap.add_argument("--tenant-quota", type=int, default=None,
+                    help="max queued requests per tenant (excess is "
+                         "shed with Overloaded)")
+    ap.add_argument("--tenant-max-inflight", type=int, default=None,
+                    help="max in-flight requests per tenant per batch")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="global admission bound across all buckets")
+    ap.add_argument("--max-queue-per-bucket", type=int, default=None,
+                    help="admission bound per shape bucket")
+    ap.add_argument("--admission", default="shed",
+                    choices=("shed", "block"),
+                    help="on a full queue: shed fast with Overloaded "
+                         "(default) or block the submitter until space "
+                         "frees / --block-timeout-ms expires")
+    ap.add_argument("--block-timeout-ms", type=float, default=1000.0,
+                    help="admission='block' gives up (sheds) after this")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable request-scoped tracing and write the "
                          "Chrome trace-event JSON here (Perfetto-"
@@ -111,24 +149,57 @@ def main(argv=None):
     if args.trace_out:
         obs_trace.set_tracer(obs_trace.Tracer(enabled=True))
 
+    weights = {}
+    if args.tenant_weights:
+        for part in args.tenant_weights.split(","):
+            name, _, w = part.partition("=")
+            weights[name.strip()] = float(w)
+
     eng = GramEngine(slots=args.slots, levels=levels, mode=args.mode,
                      min_bucket=args.min_bucket, verify=verify,
                      max_retries=args.retries,
                      backoff_s=args.backoff_ms / 1e3,
-                     drift_theta=args.drift_theta)
+                     max_backoff_s=args.max_backoff_ms / 1e3,
+                     drift_theta=args.drift_theta,
+                     max_queue=args.max_queue,
+                     max_queue_per_bucket=args.max_queue_per_bucket,
+                     admission=args.admission,
+                     block_timeout_s=args.block_timeout_ms / 1e3,
+                     tenant_weights=weights or None,
+                     tenant_quota=args.tenant_quota,
+                     tenant_max_inflight=args.tenant_max_inflight)
     deadline = None if args.deadline_ms is None else args.deadline_ms / 1e3
-    for m, n in shapes:
-        eng.submit(rng.standard_normal((m, n)).astype(np.float32),
-                   deadline_s=deadline)
+    if args.async_serve:
+        eng.start()
     t0 = time.perf_counter()
+    futures = []
+    n_tenants = max(args.tenants, 1)
+    for i, (m, n) in enumerate(shapes):
+        futures.append(
+            eng.submit(rng.standard_normal((m, n)).astype(np.float32),
+                       deadline_s=deadline, tenant=f"t{i % n_tenants}"))
     finished = eng.run_to_completion()
     dt = time.perf_counter() - t0
+    if args.async_serve:
+        eng.shutdown()
     s = eng.stats()
+    terminal = sum(1 for f in futures if f.done())
     print(f"served {len(finished)} gram requests in {dt:.2f}s "
-          f"({len(finished)/dt:.1f} req/s) over {s['ticks']} ticks")
+          f"({max(len(finished), 1)/dt:.1f} req/s) over {s['ticks']} ticks"
+          + (f" [async scheduler, {terminal}/{len(futures)} futures "
+             f"terminal]" if args.async_serve else ""))
     print(f"buckets={len(s['buckets'])} compiles={s['compile_count']} "
           f"p50={s['p50_latency_s']*1e3:.1f}ms "
           f"p99={s['p99_latency_s']*1e3:.1f}ms")
+    if s["shed"] or s["deadline_missed"] or s["cancelled"]:
+        print(f"shed={s['shed']} deadline_missed={s['deadline_missed']} "
+              f"cancelled={s['cancelled']} queue_peak={s['queue_peak']} "
+              f"admission={s['admission']['mode']}")
+    if args.tenants > 1:
+        for name, ts in s["tenants"].items():
+            print(f"  tenant {name}: submitted={ts['submitted']} "
+                  f"served={ts['served']} shed={ts['shed']} "
+                  f"failed={ts['failed']} weight={ts['weight']:g}")
     if args.faults or s["failed"] or s["retries"]:
         print(f"ok={s['served']} failed={s['failed']} "
               f"degraded={s['degraded_served']} retries={s['retries']} "

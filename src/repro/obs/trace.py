@@ -198,6 +198,20 @@ class Tracer:
             parent_id=parent.span_id if parent else None,
             trace_id=trace_id, tid=threading.get_ident(), attrs=attrs))
 
+    def instant_at(self, name: str, t: float, *,
+                   trace_id: Optional[int] = None, **attrs) -> None:
+        """An instant with an explicit ``perf_counter`` timestamp — for
+        moments only recognized after the fact (a deadline miss is
+        stamped at the deadline, not at detection).  Parentless, like
+        ``add_span``: the emitting thread's stack is not the context the
+        moment happened in."""
+        if not self.enabled:
+            return
+        self._record(TraceEvent(
+            name=name, ph="i", t0=t, t1=t, span_id=self._next_id(),
+            parent_id=None, trace_id=trace_id,
+            tid=threading.get_ident(), attrs=attrs))
+
     def add_span(self, name: str, t0: float, t1: float, *,
                  trace_id: Optional[int] = None, **attrs) -> None:
         """Record a span with explicit ``perf_counter`` endpoints — for
@@ -327,6 +341,14 @@ def instant(name: str, *, trace_id: Optional[int] = None, **attrs) -> None:
     if not t.enabled:
         return
     t.instant(name, trace_id=trace_id, **attrs)
+
+
+def instant_at(name: str, at: float, *,
+               trace_id: Optional[int] = None, **attrs) -> None:
+    t = _TRACER
+    if not t.enabled:
+        return
+    t.instant_at(name, at, trace_id=trace_id, **attrs)
 
 
 def add_span(name: str, t0: float, t1: float, *,

@@ -5,11 +5,19 @@ slot axis. Prefill runs per request at bucketed prompt lengths (bounded
 recompiles); decode runs one vmapped step over all slots per tick —
 requests at different positions decode together (per-slot index lives
 inside its vmapped cache). Greedy or temperature sampling.
+
+Requests carry the same SLO vocabulary as ``gram.engine`` —
+``deadline_s`` / ``tenant`` / ``priority``: admission pops the waiting
+list in (priority, deadline, FIFO) order and a request past its deadline
+while still waiting is failed fast (``status="deadline"``) instead of
+occupying a slot; the default path (no deadlines, no priorities) keeps
+the exact old FIFO behavior.
 """
 from __future__ import annotations
 
 import itertools
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -29,6 +37,12 @@ class Request:
     eos_id: Optional[int] = None
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    status: str = "pending"           # -> "ok" | "deadline"
+    tenant: str = "default"
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    t_submit: float = 0.0
+    t_deadline: Optional[float] = None
 
 
 def _bucket(n: int) -> int:
@@ -59,8 +73,15 @@ class ServingEngine:
 
     # -- request intake ----------------------------------------------------
     def add_request(self, prompt: List[int], *, max_new_tokens: int = 16,
-                    eos_id: Optional[int] = None) -> int:
-        r = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
+                    eos_id: Optional[int] = None,
+                    deadline_s: Optional[float] = None,
+                    tenant: str = "default", priority: int = 0) -> int:
+        now = time.perf_counter()
+        r = Request(next(self._uid), list(prompt), max_new_tokens, eos_id,
+                    tenant=str(tenant), priority=int(priority),
+                    deadline_s=deadline_s, t_submit=now,
+                    t_deadline=None if deadline_s is None
+                    else now + deadline_s)
         self.waiting.append(r)
         return r.uid
 
@@ -82,7 +103,32 @@ class ServingEngine:
                 sub, logits / self.temperature, axis=-1))
         return np.asarray(jnp.argmax(logits, axis=-1))
 
+    def _expire_waiting(self):
+        """Fail waiting requests that are already past their deadline —
+        they must not consume a prefill or a slot."""
+        now = time.perf_counter()
+        keep = []
+        for r in self.waiting:
+            if r.t_deadline is not None and now > r.t_deadline:
+                r.done = True
+                r.status = "deadline"
+                self.finished.append(r)
+                self._done_now.append(r)
+            else:
+                keep.append(r)
+        self.waiting = keep
+
     def _admit(self):
+        self._expire_waiting()
+        # priority first, earliest deadline next, FIFO last — a stable
+        # sort of (priority, deadline) leaves deadline-less same-priority
+        # traffic in exactly the old FIFO order
+        if any(r.priority or r.t_deadline is not None
+               for r in self.waiting):
+            self.waiting.sort(key=lambda r: (
+                -r.priority,
+                r.t_deadline if r.t_deadline is not None else math.inf,
+                r.uid))
         for slot, occ in self.active.items():
             if occ is not None or not self.waiting:
                 continue
@@ -144,6 +190,7 @@ class ServingEngine:
                     or (r.eos_id is not None and r.generated
                         and r.generated[-1] == r.eos_id)):
                 r.done = True
+                r.status = "ok"
                 self.finished.append(r)
                 self._done_now.append(r)
                 self.active[s] = None

@@ -36,7 +36,7 @@ def _trace(rng, requests, lo=5, hi=60):
 def test_failing_executable_drains_queue_as_failed():
     rng = np.random.default_rng(0)
     eng = GramEngine(slots=2, levels=0, min_bucket=16, max_retries=1)
-    uids = [eng.submit(a) for a in _trace(rng, 6)]
+    uids = [eng.submit(a).uid for a in _trace(rng, 6)]
     with faults.inject(FaultSpec("exec_fail", site="gram.engine.exec*")):
         finished = eng.run_to_completion()
     assert not eng.waiting, "queue did not drain"
@@ -47,7 +47,7 @@ def test_failing_executable_drains_queue_as_failed():
     assert eng.stats()["failed"] == 6
     # and the engine recovers once the fault clears
     a = rng.standard_normal((20, 10)).astype(np.float32)
-    uid = eng.submit(a)
+    uid = eng.submit(a).uid
     (r,) = eng.step()
     assert r.uid == uid and r.status == "ok"
 
@@ -71,7 +71,7 @@ def test_ten_percent_fault_trace_serves_everything_clean():
     eng = GramEngine(slots=4, levels=1, leaf=8, min_bucket=16,
                      verify=2, max_retries=6, breaker_threshold=2,
                      verify_seed=5)
-    uid_to_a = {eng.submit(a): a for a in arrays}
+    uid_to_a = {eng.submit(a).uid: a for a in arrays}
     specs = [
         FaultSpec("poison_output", rate=0.10),              # NaN tiles
         FaultSpec("poison_output", rate=0.10, value=2.5),   # silent finite
@@ -159,7 +159,7 @@ def test_rung_is_sticky_but_counts_reset_on_success():
     key = (16, 16, "float32", "cols")
     assert eng._health[key].rung == 1          # sticky after recovery
     assert eng._health[key].consecutive_failures == 0
-    uid = eng.submit(rng.standard_normal((16, 16)).astype(np.float32))
+    uid = eng.submit(rng.standard_normal((16, 16)).astype(np.float32)).uid
     (r,) = eng.run_to_completion()[-1:]
     assert r.uid == uid and r.status == "ok" and r.degraded
 
@@ -167,9 +167,9 @@ def test_rung_is_sticky_but_counts_reset_on_success():
 def test_deadline_fails_fast():
     rng = np.random.default_rng(6)
     eng = GramEngine(slots=2, levels=0, min_bucket=16)
-    ok_uid = eng.submit(rng.standard_normal((16, 16)).astype(np.float32))
+    ok_uid = eng.submit(rng.standard_normal((16, 16)).astype(np.float32)).uid
     late = eng.submit(rng.standard_normal((16, 16)).astype(np.float32),
-                      deadline_s=0.0)
+                      deadline_s=0.0).uid
     done = {r.uid: r for r in eng.run_to_completion()}
     assert done[ok_uid].status == "ok"
     assert done[late].status == "failed"
@@ -358,7 +358,7 @@ def test_mesh_shrink_falls_back_through_schemes(multidevice_count):
     assert r1.served_by == "dist:bfs25d"
 
     a2 = rng.standard_normal((120, 60)).astype(np.float32)
-    u2 = eng.submit(a2)
+    u2 = eng.submit(a2).uid
     with faults.inject(
             FaultSpec("mesh_shrink", times=1),
             FaultSpec("exec_fail", site="*bfs25d*")) as reg:

@@ -18,7 +18,7 @@ def test_engine_serves_mixed_trace_correctly():
     rng = np.random.default_rng(0)
     eng = GramEngine(slots=4, levels=1, leaf=8, min_bucket=16)
     trace = _mixed_trace(rng, 20, max_dim=100)
-    uid_to_a = {eng.submit(a): a for _, a in trace}
+    uid_to_a = {eng.submit(a).uid: a for _, a in trace}
     finished = eng.run_to_completion()
     assert len(finished) == 20
     for r in finished:
@@ -78,7 +78,7 @@ def test_engine_fused_interpret_mode():
                      interpret=True, min_bucket=32)
     arrays = [rng.standard_normal((40, 24)).astype(np.float32)
               for _ in range(2)]
-    uids = [eng.submit(a) for a in arrays]
+    uids = [eng.submit(a).uid for a in arrays]
     finished = {r.uid: r for r in eng.run_to_completion()}
     for uid, a in zip(uids, arrays):
         want = a.astype(np.float64).T @ a.astype(np.float64)
@@ -104,15 +104,15 @@ def test_engine_oldest_head_served_before_longer_queue():
     bucket has a longer queue."""
     rng = np.random.default_rng(7)
     eng = GramEngine(slots=4, levels=0, min_bucket=16)
-    rare = eng.submit(rng.standard_normal((100, 50)).astype(np.float32))
+    rare = eng.submit(rng.standard_normal((100, 50)).astype(np.float32)).uid
     for _ in range(3):
         eng.submit(rng.standard_normal((16, 16)).astype(np.float32))
     first_tick = eng.step()
     assert [r.uid for r in first_tick] == [rare]
     # a full batch, though, takes priority over an older partial one
     eng2 = GramEngine(slots=2, levels=0, min_bucket=16)
-    old = eng2.submit(rng.standard_normal((100, 50)).astype(np.float32))
-    full = [eng2.submit(rng.standard_normal((16, 16)).astype(np.float32))
+    old = eng2.submit(rng.standard_normal((100, 50)).astype(np.float32)).uid
+    full = [eng2.submit(rng.standard_normal((16, 16)).astype(np.float32)).uid
             for _ in range(2)]
     assert {r.uid for r in eng2.step()} == set(full)
     assert [r.uid for r in eng2.step()] == [old]
@@ -140,8 +140,8 @@ def test_engine_serves_row_gram_buckets():
     rng = np.random.default_rng(9)
     eng = GramEngine(slots=2, levels=1, leaf=8, min_bucket=16)
     a = rng.standard_normal((40, 24)).astype(np.float32)
-    u_rows = eng.submit(a, gram_of="rows")
-    u_cols = eng.submit(a)
+    u_rows = eng.submit(a, gram_of="rows").uid
+    u_cols = eng.submit(a).uid
     done = {r.uid: r for r in eng.run_to_completion()}
     a64 = a.astype(np.float64)
     want_rows, want_cols = a64 @ a64.T, a64.T @ a64
@@ -173,7 +173,7 @@ def test_engine_routes_large_buckets_to_mesh(multidevice_count):
                      mesh=mesh, dist_threshold=128 * 64)
     big = rng.standard_normal((120, 60)).astype(np.float32)    # -> 128x64
     small = rng.standard_normal((20, 12)).astype(np.float32)   # -> 32x32
-    u_big, u_small = eng.submit(big), eng.submit(small)
+    u_big, u_small = eng.submit(big).uid, eng.submit(small).uid
     done = {r.uid: r for r in eng.run_to_completion()}
     assert len(done) == 2
     for uid, a in ((u_big, big), (u_small, small)):
@@ -224,8 +224,8 @@ def test_engine_bf16_requests_bucket_separately():
     eng = GramEngine(slots=2, levels=0, min_bucket=16)
     a32 = rng.standard_normal((24, 16)).astype(np.float32)
     a16 = jnp.asarray(a32).astype(jnp.bfloat16)
-    u32 = eng.submit(a32)
-    u16 = eng.submit(np.asarray(a16))
+    u32 = eng.submit(a32).uid
+    u16 = eng.submit(np.asarray(a16)).uid
     done = {r.uid: r for r in eng.run_to_completion()}
     assert eng.compile_count == 2
     want = a32.astype(np.float64).T @ a32.astype(np.float64)

@@ -1,0 +1,129 @@
+"""Overload + fault chaos combined (DESIGN.md §15): the degradation
+ladder and the shedder running at the same time.
+
+The CI chaos job re-runs this file with an ``REPRO_FAULTS`` exec_delay
+overload profile armed in the environment; the assertions here hold
+with or without it — every admitted request must reach a terminal
+status and the queue must drain, whatever mix of stalls, crashes and
+poisoned outputs is in effect.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.gram import GramEngine, Overloaded
+from repro.runtime import faults
+from repro.runtime.faults import FaultSpec
+
+TERMINAL = {"ok", "failed", "shed", "cancelled"}
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _flood(eng, rng, n, **kw):
+    return [eng.submit(rng.standard_normal((20, 10)).astype(np.float32),
+                       **kw) for _ in range(n)]
+
+
+def test_overload_profile_queue_drains_every_request_terminal():
+    """exec_delay overload (every batch stalls) + a bounded queue: the
+    ladder keeps serving, admission keeps shedding, and at the end the
+    queue is empty with every request in a terminal state."""
+    rng = np.random.default_rng(0)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16,
+                     max_queue=8, backoff_s=0.0).start()
+    try:
+        with faults.inject(FaultSpec("exec_delay", delay=0.02,
+                                     site="gram.engine.exec.*")):
+            futs = _flood(eng, rng, 40, deadline_s=30.0)
+            assert eng.drain(timeout=60), "queue did not drain"
+    finally:
+        eng.shutdown()
+    assert all(f.done() for f in futs)
+    statuses = [f.request.status for f in futs]
+    assert set(statuses) <= TERMINAL
+    s = eng.stats()
+    assert s["queue_depth"] == 0 and s["inflight"] == 0
+    assert s["queue_peak"] <= 8
+    assert s["served"] + s["failed"] + s["shed"] + s["cancelled"] == 40
+    assert s["served"] > 0, "overload served nothing at all"
+    # sheds failed FAST (admission time), not after queueing
+    for f in futs:
+        if f.request.status == "shed":
+            with pytest.raises(Overloaded):
+                f.result()
+
+
+def test_overload_plus_crash_and_poison_chaos_still_terminates():
+    """The full drill: stalls + crashes + NaN poison while submitters
+    race the scheduler.  Nothing may hang; the ladder absorbs faults
+    for admitted requests, the shedder bounds the queue."""
+    rng = np.random.default_rng(1)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16, verify="finite",
+                     max_retries=4, max_queue=12,
+                     tenant_quota=8).start()
+    futs, lock = [], threading.Lock()
+
+    def submitter(tenant, n):
+        local_rng = np.random.default_rng(hash(tenant) % 2**32)
+        for _ in range(n):
+            f = eng.submit(
+                local_rng.standard_normal((20, 10)).astype(np.float32),
+                tenant=tenant, deadline_s=30.0)
+            with lock:
+                futs.append(f)
+            time.sleep(0.001)
+
+    try:
+        with faults.inject(
+                FaultSpec("exec_delay", rate=0.5, delay=0.01,
+                          site="gram.engine.exec.*"),
+                FaultSpec("exec_fail", rate=0.1,
+                          site="gram.engine.exec*"),
+                FaultSpec("poison_output", rate=0.05),
+                seed=3):
+            threads = [threading.Thread(target=submitter,
+                                        args=(f"t{i}", 15))
+                       for i in range(3)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert eng.drain(timeout=120), "queue did not drain"
+    finally:
+        eng.shutdown()
+    assert len(futs) == 45
+    assert all(f.done() for f in futs), "a future never became terminal"
+    assert {f.request.status for f in futs} <= TERMINAL
+    s = eng.stats()
+    assert s["queue_depth"] == 0 and s["inflight"] == 0
+    assert s["served"] > 0
+    # per-tenant accounting adds up
+    for name, ts in s["tenants"].items():
+        assert ts["served"] + ts["failed"] + ts["shed"] \
+            + ts["cancelled"] == ts["submitted"], (name, ts)
+
+
+def test_env_profile_composes_with_overload_assertions():
+    """Sanity for the CI chaos job: whatever ``REPRO_FAULTS`` is armed
+    in the environment composes with a bounded engine — drain + all
+    terminal (this is what the chaos job's overload profile step
+    exercises under `exec_delay:site=gram.engine.exec.*`)."""
+    rng = np.random.default_rng(2)
+    eng = GramEngine(slots=2, levels=0, min_bucket=16, max_queue=16,
+                     max_retries=4).start()
+    try:
+        futs = _flood(eng, rng, 24)
+        assert eng.drain(timeout=120)
+    finally:
+        eng.shutdown()
+    assert all(f.done() for f in futs)
+    assert {f.request.status for f in futs} <= TERMINAL
+    assert eng.stats()["queue_depth"] == 0

@@ -234,7 +234,7 @@ def test_chaos_trace_has_complete_chains_faults_and_rung_transitions():
     eng = GramEngine(slots=4, levels=1, leaf=8, min_bucket=16,
                      verify=2, max_retries=6, breaker_threshold=2,
                      verify_seed=5)
-    uids = [eng.submit(a) for a in arrays]
+    uids = [eng.submit(a).uid for a in arrays]
     specs = [
         FaultSpec("poison_output", rate=0.10),
         FaultSpec("poison_output", rate=0.10, value=2.5),
@@ -249,7 +249,7 @@ def test_chaos_trace_has_complete_chains_faults_and_rung_transitions():
     # budget meets breaker_threshold=2 exactly, so the bucket escalates
     # to rung 1 and the request still completes there
     a = rng.standard_normal((40, 20)).astype(np.float32)
-    uids.append(eng.submit(a))
+    uids.append(eng.submit(a).uid)
     with faults.inject(FaultSpec("exec_fail", times=2,
                                  site="gram.engine.exec*")):
         (r2,) = eng.step()
