@@ -63,6 +63,10 @@ def ata(
     out_dtype=None,
     block: Optional[int] = None,
     interpret: Optional[bool] = None,
+    pipeline_depth: Optional[int] = None,
+    operand_dtype=None,
+    acc_dtype=None,
+    sr_seed: Optional[int] = None,
 ) -> jax.Array:
     """Lower triangle of ``a.T @ a`` via the paper's ATA recursion.
 
@@ -111,6 +115,16 @@ def ata(
         (256 when untuned).
       interpret: Pallas interpret-mode override for the fused path
         (default: interpret off-TPU).
+      pipeline_depth: revolving-buffer DMA pipeline depth for the fused
+        path (DESIGN.md §16).  ``None`` = backend default (2 compiled,
+        1 interpret); 1 reproduces the unpipelined grid walk bit-exactly.
+      operand_dtype: quantize operand tiles to this dtype (fp8 e4m3/e5m2,
+        bf16, ...) before the kernel; accumulation stays >=fp32.  Fused
+        path only; ``None`` keeps the native operand dtype.
+      acc_dtype: VMEM accumulator storage dtype on the fused path
+        (default fp32).
+      sr_seed: when set (with bf16 ``out_dtype``), apply deterministic
+        stochastic rounding to the fused Gram output under this seed.
 
     Returns:
       (n, n) array, strictly upper triangle zeroed, dtype ``out_dtype``.
@@ -126,12 +140,21 @@ def ata(
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
     mode = resolve_mode(mode, base_syrk, base_matmul)
+    if mode != "fused" and operand_dtype is not None:
+        # Reference oracle for quantized operands: quantize once, then
+        # recurse in the promoted compute dtype (the fused kernel upcasts
+        # quantized tiles to fp32 before every signed sum / dot).
+        a = a.astype(jnp.dtype(operand_dtype)).astype(
+            jnp.promote_types(a.dtype, jnp.float32))
     if gram_of == "rows":
         if mode == "fused":
             from ..kernels.ops import aat_fused
             return aat_fused(a, levels=levels, variant=variant, gram=gram,
                              bm=block, bk=block, out_dtype=out_dtype,
-                             interpret=interpret)
+                             interpret=interpret,
+                             pipeline_depth=pipeline_depth,
+                             operand_dtype=operand_dtype,
+                             acc_dtype=acc_dtype, sr_seed=sr_seed)
         # reference oracle: AAT(A) = ATA(A^t) — the 2021 paper's identity
         syrk = base_syrk or _default_base_syrk
         out = _ata_rec(a.T, levels, leaf, variant, syrk, base_matmul)
@@ -140,7 +163,10 @@ def ata(
         from ..kernels.ops import ata_fused
         return ata_fused(a, levels=levels, variant=variant, gram=gram,
                          bk=block, bn=block, out_dtype=out_dtype,
-                         interpret=interpret, bwd=bwd)
+                         interpret=interpret, bwd=bwd,
+                         pipeline_depth=pipeline_depth,
+                         operand_dtype=operand_dtype, acc_dtype=acc_dtype,
+                         sr_seed=sr_seed)
     syrk = base_syrk or _default_base_syrk
     out = _ata_rec(a, levels, leaf, variant, syrk, base_matmul)
     return out.astype(out_dtype)

@@ -499,6 +499,31 @@ TPU_V5E_ICI_BW = 50e9             # bytes/s per link
 TPU_V5E_ICI_LATENCY = 1e-6        # per collective round (s), order of mag
 
 
+def pipelined_bytes_score(read_bytes: float, write_bytes: float,
+                          flops: float, *, pipeline_depth: int = 1,
+                          grid_steps: int = 1,
+                          flop_rate: float = TPU_V5E_BF16_FLOPS,
+                          hbm_bw: float = TPU_V5E_HBM_BW) -> float:
+    """Roofline score (HBM-byte-equivalents) of a bound leaf program under
+    DMA pipelining (DESIGN.md §16).
+
+    Unpipelined (depth <= 1), each grid step serializes its operand DMA
+    against its MXU work, so the cost is the SUM of the memory and
+    compute terms.  With revolving buffers (depth >= 2) the next step's
+    copies stream while the current step computes, so steady state pays
+    the MAX of the two, plus one non-overlapped pipeline fill amortized
+    over ``grid_steps``.  Compute is expressed in byte-equivalents
+    (``flops * hbm_bw / flop_rate``) so the score stays comparable with
+    the raw ``read_bytes + write_bytes`` ranking autotune used before
+    this term existed."""
+    mem = float(read_bytes) + float(write_bytes)
+    cmp_eq = float(flops) * hbm_bw / flop_rate
+    if pipeline_depth <= 1:
+        return mem + cmp_eq
+    fill = min(mem, cmp_eq) / max(int(grid_steps), 1)
+    return max(mem, cmp_eq) + fill
+
+
 # ---------------------------------------------------------------------------
 # Distributed-gram communication model (beyond-paper; DESIGN.md §5).
 #

@@ -338,6 +338,7 @@ class GramRequest:
     running: bool = False             # drained into a batch in flight
     future: Optional["GramFuture"] = None
     ring_slot: Optional[tuple] = None  # (bucket key, ring index) staged in
+    operand_dtype: str = "native"     # resolved quantization ("native" off)
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -388,7 +389,9 @@ class GramEngine:
                  tenant_weights: Optional[Dict[str, float]] = None,
                  tenant_quota: Optional[int] = None,
                  tenant_max_inflight: Optional[int] = None,
-                 ring_depth: Optional[int] = None):
+                 ring_depth: Optional[int] = None,
+                 pipeline_depth: Optional[int] = None,
+                 operand_dtype=None):
         self.slots = slots
         self.levels, self.leaf, self.variant = levels, leaf, variant
         self.mode, self.block = mode, block
@@ -396,6 +399,15 @@ class GramEngine:
         self.min_bucket = min_bucket
         self.use_autotune_cache = use_autotune_cache
         self.interpret = interpret
+        # §16 perf/precision knobs: pipeline_depth None defers to the
+        # measured autotune winner (then the kernel's backend default);
+        # operand_dtype quantizes every served operand tile (fp8/bf16,
+        # fp32 accumulation) and becomes part of the bucket key so
+        # quantized and native traffic never share an executable,
+        # a guard tolerance, or a drift history.
+        self.pipeline_depth = pipeline_depth
+        self.operand_dtype = (None if operand_dtype is None
+                              else jnp.dtype(operand_dtype).name)
         # distributed routing: buckets of >= dist_threshold elements go to
         # distributed_gram on `mesh` (axis names per default_gram_axes)
         self.mesh = mesh
@@ -532,7 +544,8 @@ class GramEngine:
     def submit(self, a, *, full: bool = True, gram_of: str = "cols",
                deadline_s: Optional[float] = None, tenant: str = "default",
                priority: int = 0, admission: Optional[str] = None,
-               block_timeout_s: Optional[float] = None) -> GramFuture:
+               block_timeout_s: Optional[float] = None,
+               operand_dtype=None) -> GramFuture:
         """Enqueue one Gram request; returns its :class:`GramFuture`.
 
         ``full`` selects the mirrored symmetric C (default) vs the lower
@@ -542,6 +555,9 @@ class GramEngine:
         (relative to submission) lets the engine fail the request fast
         instead of retrying past its usefulness; ``tenant`` and
         ``priority`` feed the weighted-fair / EDF scheduler.
+        ``operand_dtype`` overrides the engine-level quantization for
+        this request (fp8/bf16 operand tiles, DESIGN.md §16); quantized
+        requests bucket separately from native ones.
 
         Admission is decided HERE (DESIGN.md §15): the request is either
         accepted (operand staged into the bucket's donated ring buffer),
@@ -562,15 +578,18 @@ class GramEngine:
             raise ValueError(f"admission must be 'shed' or 'block', got "
                              f"{mode!r}")
         now = time.perf_counter()
+        od = operand_dtype if operand_dtype is not None \
+            else self.operand_dtype
+        od = "native" if od in (None, "native") else jnp.dtype(od).name
         r = GramRequest(uid=next(self._uid), a=a, shape=a.shape, full=full,
                         gram_of=gram_of, t_submit=now,
                         deadline_s=deadline_s, tenant=str(tenant),
-                        priority=int(priority))
+                        priority=int(priority), operand_dtype=od)
         if deadline_s is not None:
             r.t_deadline = now + deadline_s
         fut = GramFuture(self, r)
         r.future = fut
-        key = self._bucket_key(a.shape, a.dtype, gram_of)
+        key = self._bucket_key(a.shape, a.dtype, gram_of, od)
         b = self._blabel(key)
         timeout = self.block_timeout_s if block_timeout_s is None \
             else block_timeout_s
@@ -667,7 +686,7 @@ class GramEngine:
     def _stage_operand_locked(self, key, r: GramRequest) -> None:
         """Copy the operand into a donated ring buffer for its bucket;
         ``r.a`` becomes the true-shape view into the staged copy."""
-        M, N, dtype, _gram_of = key
+        M, N, dtype, _gram_of = key[:4]
         ring = self._rings.get(key)
         if ring is None:
             ring = self._rings[key] = _OperandRing(
@@ -710,7 +729,7 @@ class GramEngine:
         shedder and the WFQ scheduler."""
         u = self._work_cache.get(key)
         if u is None:
-            M, N, _dtype, gram_of = key
+            M, N, _dtype, gram_of = key[:4]
             cfg = self._bucket_config(key, 0)
             levels = cfg["levels"]
             if levels == "auto":
@@ -795,7 +814,8 @@ class GramEngine:
         with self._lock:
             if r.done or r.running:
                 return False
-            key = self._bucket_key(r.shape, r.a.dtype, r.gram_of)
+            key = self._bucket_key(r.shape, r.a.dtype, r.gram_of,
+                                   r.operand_dtype)
             q = self.waiting.get(key)
             if q is None or r not in q:
                 return False            # racing terminal transition
@@ -808,23 +828,48 @@ class GramEngine:
             self._finish_cancelled(r)
         return True
 
-    def _bucket_key(self, shape, dtype, gram_of: str = "cols") -> tuple:
+    def _bucket_key(self, shape, dtype, gram_of: str = "cols",
+                    operand_dtype=None) -> tuple:
+        """5-tuple bucket identity: (M, N, dtype, gram_of, operand) where
+        the last element is the quantization the bucket serves under —
+        ``"native"`` (no quantization — the historical behavior) or the
+        operand dtype name.  Quantized and native traffic for the same
+        shape are distinct buckets: distinct executables, guard
+        tolerances, rings, and drift histories."""
         M, N = _autotune.bucket_shape(*shape, min_side=self.min_bucket)
-        return (M, N, jnp.dtype(dtype).name, gram_of)
+        od = operand_dtype if operand_dtype is not None \
+            else self.operand_dtype
+        od = "native" if od in (None, "native") else jnp.dtype(od).name
+        return (M, N, jnp.dtype(dtype).name, gram_of, od)
 
     @staticmethod
-    def _blabel(key) -> str:
-        """Metric/trace label for one bucket key."""
-        M, N, dtype, gram_of = key
-        return f"{M}x{N}/{dtype}/{gram_of}"
+    def _bucket_operand(key) -> Optional[str]:
+        """Quantized operand dtype name of a bucket key, None for native
+        (tolerates legacy 4-tuple keys fed by older tests/tools)."""
+        od = key[4] if len(key) > 4 else "native"
+        return None if od == "native" else od
 
-    @staticmethod
-    def _drift_key(key) -> str:
+    @classmethod
+    def _blabel(cls, key) -> str:
+        """Metric/trace label for one bucket key.  Native buckets keep
+        the historical ``MxN/dtype/gram_of`` form bit-for-bit; quantized
+        buckets append the operand dtype."""
+        M, N, dtype, gram_of = key[:4]
+        base = f"{M}x{N}/{dtype}/{gram_of}"
+        od = cls._bucket_operand(key)
+        return base if od is None else f"{base}/{od}"
+
+    @classmethod
+    def _drift_key(cls, key) -> str:
         """Drift-detector key: the bucket in autotune's vocabulary (the
         `kind` the winner was tuned for), so a finding maps 1:1 onto a
-        cache entry ``invalidate_drifted`` can drop."""
-        M, N, dtype, gram_of = key
-        return f"{M}x{N}/{dtype}/{'aat' if gram_of == 'rows' else 'ata'}"
+        cache entry ``invalidate_drifted`` can drop.  Native buckets keep
+        the historical 3-segment form; quantized buckets append the
+        operand dtype as a 4th segment."""
+        M, N, dtype, gram_of = key[:4]
+        base = f"{M}x{N}/{dtype}/{'aat' if gram_of == 'rows' else 'ata'}"
+        od = cls._bucket_operand(key)
+        return base if od is None else f"{base}/{od}"
 
     # -- degradation ladder ------------------------------------------------
     def _bucket_health(self, key) -> BucketHealth:
@@ -842,10 +887,20 @@ class GramEngine:
         placeholder blocks).  Higher rungs degrade: 1 skips the autotune
         winner (quarantine), 2 forces the XLA reference recursion, 3 adds
         ``levels=0`` (classical — no fast-variant arithmetic at all).
+
+        The §16 perf knobs ride the same policy: ``pipeline_depth`` is
+        adopted only from *measured* fused winners (it is a wall-clock
+        claim — a model-only entry must not pick the pipelined kernel on
+        a backend where it was never timed), and ``operand_dtype`` is
+        never adopted from the cache at all — quantization changes the
+        served numerics, so it flows exclusively from the caller (engine
+        kwarg / per-request override) via the bucket key.
         """
-        M, N, dtype, gram_of = key
+        M, N, dtype, gram_of = key[:4]
         cfg = {"mode": self.mode, "levels": self.levels, "leaf": self.leaf,
-               "variant": self.variant, "block": self.block}
+               "variant": self.variant, "block": self.block,
+               "pipeline_depth": self.pipeline_depth,
+               "operand_dtype": self._bucket_operand(key)}
         if self.use_autotune_cache and rung == 0:
             try:
                 hit = _autotune.lookup(
@@ -860,6 +915,9 @@ class GramEngine:
                         cfg["mode"] = hit["mode"]
                     if cfg["levels"] == "auto":
                         cfg["levels"] = hit["levels"]
+                    if cfg["pipeline_depth"] is None \
+                            and hit.get("mode") == "fused":
+                        cfg["pipeline_depth"] = hit.get("pipeline_depth")
                 if cfg["block"] is None and hit.get("mode") == "fused":
                     cfg["block"] = hit.get("bk")
         if rung >= 2:
@@ -957,7 +1015,8 @@ class GramEngine:
             return
         with self._lock:
             b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
-                                              r.gram_of))
+                                              r.gram_of,
+                                              r.operand_dtype))
             r.result = c
             r.status, r.done = "ok", True
             r.t_done = t_done if t_done is not None else time.perf_counter()
@@ -989,7 +1048,8 @@ class GramEngine:
             return
         with self._lock:
             b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
-                                              r.gram_of))
+                                              r.gram_of,
+                                              r.operand_dtype))
             r.status, r.done = "failed", True
             r.error = error
             r.t_done = time.perf_counter()
@@ -1015,7 +1075,8 @@ class GramEngine:
             return
         with self._lock:
             b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
-                                              r.gram_of))
+                                              r.gram_of,
+                                              r.operand_dtype))
             r.status, r.done = "shed", True
             r.error = f"shed: {reason}"
             r.t_done = time.perf_counter()
@@ -1036,7 +1097,8 @@ class GramEngine:
             return
         with self._lock:
             b = self._blabel(self._bucket_key(r.shape, r.a.dtype,
-                                              r.gram_of))
+                                              r.gram_of,
+                                              r.operand_dtype))
             r.status, r.done = "cancelled", True
             r.error = "cancelled"
             r.t_done = time.perf_counter()
@@ -1060,7 +1122,7 @@ class GramEngine:
         the small diag vector unless probes are enabled."""
         if not self._guard_on:
             return None
-        M, N, dtype, gram_of = key
+        M, N, dtype, gram_of = key[:4]
         # fast path: one float64 reduction (any NaN/Inf propagates); the
         # full scan only confirms — a float64 *overflow* in the reduction
         # of huge-but-finite values must not veto a correct result
@@ -1070,7 +1132,9 @@ class GramEngine:
             return "guard veto: non-finite entries in served batch"
         rtol = self.verify_rtol
         if rtol is None:
-            rtol = _verify.default_rtol(dtype)
+            # precision-scaled: a quantized bucket's residual is bounded
+            # by the operand quantization step, not the storage dtype
+            rtol = _verify.default_rtol(self._bucket_operand(key) or dtype)
         for slot, r in entries:
             n = r.shape[0] if gram_of == "rows" else r.shape[1]
             c = out[slot, :n, :n] if out.ndim == 3 else out[:n, :n]
@@ -1129,10 +1193,11 @@ class GramEngine:
     @staticmethod
     def _cfg_fingerprint(cfg) -> tuple:
         return (cfg["mode"], str(cfg["levels"]), cfg["leaf"],
-                cfg["variant"], cfg["block"])
+                cfg["variant"], cfg["block"],
+                cfg.get("pipeline_depth"), cfg.get("operand_dtype"))
 
     def _local_executable(self, key, cfg):
-        M, N, dtype, gram_of = key
+        M, N, dtype, gram_of = key[:4]
         ekey = ("local", key, self._cfg_fingerprint(cfg))
         if ekey in self._executables:
             self._m_exec_cache.inc(engine=self.engine_label, path="local",
@@ -1145,7 +1210,9 @@ class GramEngine:
             return ata(x, gram_of=gram_of, levels=cfg["levels"],
                        leaf=cfg["leaf"], variant=cfg["variant"],
                        mode=cfg["mode"], out_dtype=self.out_dtype,
-                       block=cfg["block"], interpret=self.interpret)
+                       block=cfg["block"], interpret=self.interpret,
+                       pipeline_depth=cfg.get("pipeline_depth"),
+                       operand_dtype=cfg.get("operand_dtype"))
         spec = jax.ShapeDtypeStruct((self.slots, M, N), jnp.dtype(dtype))
         with _trace.span("compile", bucket=self._blabel(key), path="local",
                          mode=str(cfg["mode"]), levels=str(cfg["levels"])):
@@ -1158,7 +1225,7 @@ class GramEngine:
         return compiled
 
     def _dist_executable(self, key, scheme, cfg):
-        M, N, dtype, gram_of = key
+        M, N, dtype, gram_of = key[:4]
         ekey = ("dist", key, scheme, self._mesh_epoch)
         if ekey in self._executables:
             self._m_exec_cache.inc(engine=self.engine_label, path="dist",
@@ -1198,7 +1265,7 @@ class GramEngine:
         ck = (key, self._cfg_fingerprint(cfg))
         if ck in self._drift_pred_cache:
             return self._drift_pred_cache[ck]
-        M, N, dtype, gram_of = key
+        M, N, dtype, gram_of = key[:4]
         pred: Optional[float] = None
         try:
             levels = cfg["levels"]
@@ -1242,14 +1309,16 @@ class GramEngine:
         re-measures from scratch.  Returns the flagged drift keys."""
         dropped = []
         for dk in self.drift.stale_keys(channel):
-            size, dtype, kind = str(dk).split("/")
+            parts = str(dk).split("/")
+            size, dtype, kind = parts[:3]
+            od = parts[3] if len(parts) > 3 else "native"
             M, N = (int(x) for x in size.split("x"))
             try:
                 _autotune.invalidate(M, N, dtype=dtype, kind=kind,
                                      min_side=self.min_bucket)
             except Exception:
                 pass                    # no cache entry to drop is fine
-            key = (M, N, dtype, "rows" if kind == "aat" else "cols")
+            key = (M, N, dtype, "rows" if kind == "aat" else "cols", od)
             self._executables = {
                 ek: exe for ek, exe in self._executables.items()
                 if ek[1] != key}
@@ -1267,10 +1336,14 @@ class GramEngine:
         "auto", any feasible scheme; otherwise dist_scheme itself must be
         feasible, or the bucket stays local rather than failing mid-step
         on a shard_map divisibility error)."""
-        M, N, _, gram_of = key
+        M, N, _, gram_of = key[:4]
         if gram_of == "rows":
             # the distributed schemes decompose A^t A; row-gram buckets
             # stay on the local aat executor
+            return False
+        if self._bucket_operand(key) is not None:
+            # quantized operand tiles are a fused-local-kernel feature;
+            # the distributed schemes serve native precision only
             return False
         if self.mesh is None or M * N < self.dist_threshold:
             return False
@@ -1285,7 +1358,7 @@ class GramEngine:
         cached per mesh epoch."""
         ck = (key, self._mesh_epoch)
         if ck not in self._dist_chains:
-            M, N, dtype, gram_of = key
+            M, N, dtype, gram_of = key[:4]
             chain = scheme_fallback_chain(
                 M, N, self.mesh, scheme=self.dist_scheme,
                 dtype_bytes=jnp.dtype(dtype).itemsize,
@@ -1424,7 +1497,7 @@ class GramEngine:
     def _serve_local(self, key, entries) -> List[GramRequest]:
         """Serve [(slot, request)] through the slot-batched local
         executable under the retry/escalation ladder."""
-        M, N, dtype, gram_of = key
+        M, N, dtype, gram_of = key[:4]
         health = self._bucket_health(key)
         # reused per-bucket slot stack (zeroed each batch — the "clean
         # host copy" retries restart from); jnp.dtype resolves extended
@@ -1529,7 +1602,7 @@ class GramEngine:
         chain (…-> local) on failure; the mesh may shrink between
         attempts (``_poll_faults`` runs per tick, ``apply_mesh`` any
         time), so the chain is re-read every attempt."""
-        M, N, dtype, gram_of = key
+        M, N, dtype, gram_of = key[:4]
         m, n = r.shape
         attempt, last_err = 0, "unknown failure"
         while True:

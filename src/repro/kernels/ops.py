@@ -12,6 +12,8 @@ block arguments bypass the cache entirely.
 from __future__ import annotations
 
 import functools
+import logging
+import os
 
 import jax
 import jax.numpy as jnp
@@ -22,11 +24,46 @@ from . import combine as _combine
 from . import transpose as _transpose
 from ..core.symmetry import unpack_tril_blocks
 
+_log = logging.getLogger(__name__)
 
-def _auto_interpret(interpret):
+# Backends with a native Pallas lowering for the pltpu primitives the
+# kernels use (scalar prefetch, DMA semaphores).  GPU has no Triton port
+# of those yet, so off-TPU backends run the interpreter.
+_COMPILED_BACKENDS = ("tpu",)
+
+# (site, backend, decision) triples already logged — the decision is
+# per-call-site but only logs once per distinct combination, so hot
+# serving loops don't spam.
+_INTERPRET_LOGGED: set = set()
+
+
+def _auto_interpret(interpret, site=None):
+    """Resolve the ``interpret`` knob for one kernel call site.
+
+    Explicit arguments always win.  Otherwise the ``REPRO_INTERPRET``
+    env var ("1"/"true" forces interpret, "0"/"false" forces compiled)
+    overrides, then the per-backend default applies: compiled on TPU,
+    interpret on CPU/GPU where the kernels are unsupported.  Each
+    distinct (site, backend) decision is logged once.
+    """
     if interpret is not None:
         return interpret
-    return jax.default_backend() != "tpu"
+    backend = jax.default_backend()
+    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        decision, why = True, "REPRO_INTERPRET override"
+    elif env in ("0", "false", "no", "off"):
+        decision, why = False, "REPRO_INTERPRET override"
+    else:
+        decision = backend not in _COMPILED_BACKENDS
+        why = ("native pallas lowering" if not decision
+               else "kernel unsupported off-TPU")
+    key = (site, backend, decision)
+    if key not in _INTERPRET_LOGGED:
+        _INTERPRET_LOGGED.add(key)
+        _log.info("pallas interpret=%s at %s [backend=%s: %s]",
+                  decision, site or "<unnamed site>", backend, why)
+    return decision
 
 
 def _resolve_blocks(kind, m, n, dtype, **blocks):
@@ -154,59 +191,85 @@ def pallas_base_syrk(bk=None, bn=None, interpret=None):
 # ---------------------------------------------------------------------------
 
 def ata_fused(a, *, levels=2, variant="strassen", gram="strassen", bk=None,
-              bn=None, out_dtype=None, interpret=None, bwd="fused"):
+              bn=None, out_dtype=None, interpret=None, bwd="fused",
+              pipeline_depth=None, operand_dtype=None, acc_dtype=None,
+              sr_seed=None):
     """Dense ``tril(a.T @ a)`` via the fused leaf-task schedule.
     ``bk``/``bn`` default to the autotune-cache winner for this shape
     bucket (256 when untuned).  ``gram`` picks the registered symmetric
     decomposition (``leaf_ir.registered_gram_algebras()``; ``"dps"`` is
     the 5-product scheme).  ``bwd`` picks the VJP engine: ``"fused"``
     (packed-cotangent symm schedule, the default) or ``"dense"`` (the
-    classical dense-dot baseline)."""
+    classical dense-dot baseline).
+
+    Perf/precision knobs (DESIGN.md §16): ``pipeline_depth`` (revolving
+    DMA buffers, None = backend default), ``operand_dtype`` (fp8/bf16
+    operand tiles, fp32 accumulation), ``acc_dtype`` (VMEM accumulator
+    storage) and ``sr_seed`` (stochastic-rounded bf16 output)."""
     bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
     return _ata_fused_jit(a, levels=levels, variant=variant, gram=gram,
                           bk=bs["bk"], bn=bs["bn"], out_dtype=out_dtype,
-                          interpret=interpret, bwd=bwd)
+                          interpret=interpret, bwd=bwd,
+                          pipeline_depth=pipeline_depth,
+                          operand_dtype=operand_dtype, acc_dtype=acc_dtype,
+                          sr_seed=sr_seed)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "levels", "variant", "gram", "bk", "bn", "out_dtype", "interpret",
-    "bwd"))
+    "bwd", "pipeline_depth", "operand_dtype", "acc_dtype", "sr_seed"))
 def _ata_fused_jit(a, *, levels, variant, gram="strassen", bk, bn,
-                   out_dtype=None, interpret=None, bwd="fused"):
+                   out_dtype=None, interpret=None, bwd="fused",
+                   pipeline_depth=None, operand_dtype=None, acc_dtype=None,
+                   sr_seed=None):
     from . import strassen_fused as _sf
     return _sf.fused_ata(a, levels=levels, variant=variant, gram=gram,
                          bk=bk, bn=bn, out_dtype=out_dtype,
-                         interpret=_auto_interpret(interpret), bwd=bwd)
+                         interpret=_auto_interpret(interpret,
+                                                   site="ops.ata_fused"),
+                         bwd=bwd, pipeline_depth=pipeline_depth,
+                         operand_dtype=operand_dtype, acc_dtype=acc_dtype,
+                         sr_seed=sr_seed)
 
 
 def ata_fused_packed(a, *, levels=2, variant="strassen", gram="strassen",
                      bk=None, bn=None, out_dtype=None, interpret=None,
-                     bwd="fused"):
+                     bwd="fused", pipeline_depth=None, operand_dtype=None,
+                     acc_dtype=None, sr_seed=None):
     """Packed lower-tri block stack of ``a.T @ a`` via the fused schedule
     (upper-triangular blocks are never computed or written).
     Differentiable: the custom VJP consumes the *packed* cotangent
-    directly (``bwd="fused"``) — no dense n^2 buffer in the backward."""
+    directly (``bwd="fused"``) — no dense n^2 buffer in the backward.
+    Same perf/precision knobs as :func:`ata_fused`."""
     bs = _resolve_blocks("ata", a.shape[0], a.shape[1], a.dtype, bk=bk, bn=bn)
     return _ata_fused_packed_jit(a, levels=levels, variant=variant,
                                  gram=gram, bk=bs["bk"], bn=bs["bn"],
                                  out_dtype=out_dtype, interpret=interpret,
-                                 bwd=bwd)
+                                 bwd=bwd, pipeline_depth=pipeline_depth,
+                                 operand_dtype=operand_dtype,
+                                 acc_dtype=acc_dtype, sr_seed=sr_seed)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "levels", "variant", "gram", "bk", "bn", "out_dtype", "interpret",
-    "bwd"))
+    "bwd", "pipeline_depth", "operand_dtype", "acc_dtype", "sr_seed"))
 def _ata_fused_packed_jit(a, *, levels, variant, gram="strassen", bk, bn,
-                          out_dtype=None, interpret=None, bwd="fused"):
+                          out_dtype=None, interpret=None, bwd="fused",
+                          pipeline_depth=None, operand_dtype=None,
+                          acc_dtype=None, sr_seed=None):
     from . import strassen_fused as _sf
     packed, _ = _sf.fused_ata_packed(
         a, levels=levels, variant=variant, gram=gram, bk=bk, bn=bn,
-        out_dtype=out_dtype, interpret=_auto_interpret(interpret), bwd=bwd)
+        out_dtype=out_dtype,
+        interpret=_auto_interpret(interpret, site="ops.ata_fused_packed"),
+        bwd=bwd, pipeline_depth=pipeline_depth, operand_dtype=operand_dtype,
+        acc_dtype=acc_dtype, sr_seed=sr_seed)
     return packed
 
 
 def symm_matmul(x, s_packed, *, levels=2, variant="strassen", bm=None,
-                diag_sym=False, out_dtype=None, interpret=None):
+                diag_sym=False, out_dtype=None, interpret=None,
+                pipeline_depth=None, operand_dtype=None, acc_dtype=None):
     """``x @ Sym`` where Sym is given only as its packed lower-triangular
     tile stack (``syrk_packed`` / ``ata_fused_packed`` layout; the tile
     edge is read off the stack) — the symm-schedule kernel that powers
@@ -215,23 +278,30 @@ def symm_matmul(x, s_packed, *, levels=2, variant="strassen", bm=None,
     bs = _resolve_blocks("ata", x.shape[0], x.shape[1], x.dtype, bm=bm)
     return _symm_matmul_jit(x, s_packed, levels=levels, variant=variant,
                             bm=bs["bm"], diag_sym=diag_sym,
-                            out_dtype=out_dtype, interpret=interpret)
+                            out_dtype=out_dtype, interpret=interpret,
+                            pipeline_depth=pipeline_depth,
+                            operand_dtype=operand_dtype, acc_dtype=acc_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "bm", "diag_sym", "out_dtype", "interpret"))
+    "levels", "variant", "bm", "diag_sym", "out_dtype", "interpret",
+    "pipeline_depth", "operand_dtype", "acc_dtype"))
 def _symm_matmul_jit(x, s_packed, *, levels, variant, bm, diag_sym,
-                     out_dtype=None, interpret=None):
+                     out_dtype=None, interpret=None, pipeline_depth=None,
+                     operand_dtype=None, acc_dtype=None):
     from . import strassen_fused as _sf
     return _sf.fused_symm_matmul(
         x, s_packed, levels=levels, variant=variant, bm=bm,
         diag_sym=diag_sym, out_dtype=out_dtype,
-        interpret=_auto_interpret(interpret))
+        interpret=_auto_interpret(interpret, site="ops.symm_matmul"),
+        pipeline_depth=pipeline_depth, operand_dtype=operand_dtype,
+        acc_dtype=acc_dtype)
 
 
 def matmul_fused(a, b, *, levels=2, variant="strassen", bm=None, bk=None,
                  bn=None, trans_a=False, trans_b=False, out_dtype=None,
-                 interpret=None, bwd="fused"):
+                 interpret=None, bwd="fused", pipeline_depth=None,
+                 operand_dtype=None, acc_dtype=None):
     """``op(a) @ op(b)`` via the fused Strassen program kernel;
     ``trans_a``/``trans_b`` transpose an operand *through the index
     maps* — no transposed HBM copy (the distributed ring/2.5D block
@@ -244,24 +314,33 @@ def matmul_fused(a, b, *, levels=2, variant="strassen", bm=None, bk=None,
                              bm=bs["bm"], bk=bs["bk"], bn=bs["bn"],
                              trans_a=trans_a, trans_b=trans_b,
                              out_dtype=out_dtype, interpret=interpret,
-                             bwd=bwd)
+                             bwd=bwd, pipeline_depth=pipeline_depth,
+                             operand_dtype=operand_dtype,
+                             acc_dtype=acc_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "levels", "variant", "bm", "bk", "bn", "trans_a", "trans_b",
-    "out_dtype", "interpret", "bwd"))
+    "out_dtype", "interpret", "bwd", "pipeline_depth", "operand_dtype",
+    "acc_dtype"))
 def _matmul_fused_jit(a, b, *, levels, variant, bm, bk, bn, trans_a=False,
                       trans_b=False, out_dtype=None, interpret=None,
-                      bwd="fused"):
+                      bwd="fused", pipeline_depth=None, operand_dtype=None,
+                      acc_dtype=None):
     from . import strassen_fused as _sf
     return _sf.fused_matmul(a, b, levels=levels, variant=variant, bm=bm,
                             bk=bk, bn=bn, trans_a=trans_a, trans_b=trans_b,
                             out_dtype=out_dtype,
-                            interpret=_auto_interpret(interpret), bwd=bwd)
+                            interpret=_auto_interpret(
+                                interpret, site="ops.matmul_fused"),
+                            bwd=bwd, pipeline_depth=pipeline_depth,
+                            operand_dtype=operand_dtype,
+                            acc_dtype=acc_dtype)
 
 
 def aat_fused(a, *, levels=2, variant="strassen", gram="strassen", bm=None,
-              bk=None, out_dtype=None, interpret=None):
+              bk=None, out_dtype=None, interpret=None, pipeline_depth=None,
+              operand_dtype=None, acc_dtype=None, sr_seed=None):
     """Dense ``tril(a @ a.T)`` — the Arrigoni-Massini row gram
     (``ata(x, gram_of="rows")``) via the same leaf-program executor; the
     transpose of ``a`` never exists in HBM."""
@@ -269,44 +348,65 @@ def aat_fused(a, *, levels=2, variant="strassen", gram="strassen", bm=None,
                          bm=bm, bk=bk)
     return _aat_fused_jit(a, levels=levels, variant=variant, gram=gram,
                           bm=bs["bm"], bk=bs["bk"], out_dtype=out_dtype,
-                          interpret=interpret)
+                          interpret=interpret,
+                          pipeline_depth=pipeline_depth,
+                          operand_dtype=operand_dtype, acc_dtype=acc_dtype,
+                          sr_seed=sr_seed)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "gram", "bm", "bk", "out_dtype", "interpret"))
+    "levels", "variant", "gram", "bm", "bk", "out_dtype", "interpret",
+    "pipeline_depth", "operand_dtype", "acc_dtype", "sr_seed"))
 def _aat_fused_jit(a, *, levels, variant, gram="strassen", bm, bk,
-                   out_dtype=None, interpret=None):
+                   out_dtype=None, interpret=None, pipeline_depth=None,
+                   operand_dtype=None, acc_dtype=None, sr_seed=None):
     from . import strassen_fused as _sf
     return _sf.fused_aat(a, levels=levels, variant=variant, gram=gram,
                          bm=bm, bk=bk, out_dtype=out_dtype,
-                         interpret=_auto_interpret(interpret))
+                         interpret=_auto_interpret(interpret,
+                                                   site="ops.aat_fused"),
+                         pipeline_depth=pipeline_depth,
+                         operand_dtype=operand_dtype, acc_dtype=acc_dtype,
+                         sr_seed=sr_seed)
 
 
 def aat_fused_packed(a, *, levels=2, variant="strassen", gram="strassen",
-                     bm=None, bk=None, out_dtype=None, interpret=None):
+                     bm=None, bk=None, out_dtype=None, interpret=None,
+                     pipeline_depth=None, operand_dtype=None,
+                     acc_dtype=None, sr_seed=None):
     """Packed lower-tri block stack of ``a @ a.T`` (row-gram dual of
     :func:`ata_fused_packed`)."""
     bs = _resolve_blocks("aat", a.shape[0], a.shape[1], a.dtype,
                          bm=bm, bk=bk)
     return _aat_fused_packed_jit(a, levels=levels, variant=variant,
                                  gram=gram, bm=bs["bm"], bk=bs["bk"],
-                                 out_dtype=out_dtype, interpret=interpret)
+                                 out_dtype=out_dtype, interpret=interpret,
+                                 pipeline_depth=pipeline_depth,
+                                 operand_dtype=operand_dtype,
+                                 acc_dtype=acc_dtype, sr_seed=sr_seed)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "levels", "variant", "gram", "bm", "bk", "out_dtype", "interpret"))
+    "levels", "variant", "gram", "bm", "bk", "out_dtype", "interpret",
+    "pipeline_depth", "operand_dtype", "acc_dtype", "sr_seed"))
 def _aat_fused_packed_jit(a, *, levels, variant, gram="strassen", bm, bk,
-                          out_dtype=None, interpret=None):
+                          out_dtype=None, interpret=None,
+                          pipeline_depth=None, operand_dtype=None,
+                          acc_dtype=None, sr_seed=None):
     from . import strassen_fused as _sf
     packed, _ = _sf.fused_aat_packed(
         a, levels=levels, variant=variant, gram=gram, bm=bm, bk=bk,
-        out_dtype=out_dtype, interpret=_auto_interpret(interpret))
+        out_dtype=out_dtype,
+        interpret=_auto_interpret(interpret, site="ops.aat_fused_packed"),
+        pipeline_depth=pipeline_depth, operand_dtype=operand_dtype,
+        acc_dtype=acc_dtype, sr_seed=sr_seed)
     return packed
 
 
 def rank_k_update(c_stack, a, *, levels=2, variant="strassen",
                   gram="strassen", bk=None, out_dtype=None, interpret=None,
-                  donate=True):
+                  donate=True, pipeline_depth=None, operand_dtype=None,
+                  acc_dtype=None):
     """``C += tril(a.T @ a)`` on a packed tile stack in ONE kernel — the
     accumulating (rank-k) program.  The stack seeds the kernel's VMEM
     accumulator, so a streamed Gram chunk materializes no delta stack
@@ -315,19 +415,26 @@ def rank_k_update(c_stack, a, *, levels=2, variant="strassen",
     bs = _resolve_blocks("rank_k", a.shape[0], a.shape[1], a.dtype, bk=bk)
     fn = _rank_k_jit_donated if donate else _rank_k_jit
     return fn(c_stack, a, levels=levels, variant=variant, gram=gram,
-              bk=bs["bk"], out_dtype=out_dtype, interpret=interpret)
+              bk=bs["bk"], out_dtype=out_dtype, interpret=interpret,
+              pipeline_depth=pipeline_depth, operand_dtype=operand_dtype,
+              acc_dtype=acc_dtype)
 
 
 def _rank_k_impl(c_stack, a, *, levels, variant, gram="strassen", bk,
-                 out_dtype=None, interpret=None):
+                 out_dtype=None, interpret=None, pipeline_depth=None,
+                 operand_dtype=None, acc_dtype=None):
     from . import strassen_fused as _sf
     return _sf.fused_rank_k_update(
         c_stack, a, levels=levels, variant=variant, gram=gram, bk=bk,
-        out_dtype=out_dtype, interpret=_auto_interpret(interpret))
+        out_dtype=out_dtype,
+        interpret=_auto_interpret(interpret, site="ops.rank_k_update"),
+        pipeline_depth=pipeline_depth, operand_dtype=operand_dtype,
+        acc_dtype=acc_dtype)
 
 
 _rank_k_static = ("levels", "variant", "gram", "bk", "out_dtype",
-                  "interpret")
+                  "interpret", "pipeline_depth", "operand_dtype",
+                  "acc_dtype")
 _rank_k_jit = jax.jit(_rank_k_impl, static_argnames=_rank_k_static)
 _rank_k_jit_donated = jax.jit(_rank_k_impl, static_argnames=_rank_k_static,
                               donate_argnums=(0,))

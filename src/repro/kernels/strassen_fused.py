@@ -70,7 +70,7 @@ from .syrk import _tri_decode
 __all__ = ["fused_ata", "fused_ata_packed", "fused_aat", "fused_aat_packed",
            "fused_matmul", "fused_symm_matmul", "fused_rank_k_update",
            "ata_traffic_model", "aat_traffic_model", "ata_bwd_traffic_model",
-           "rank_k_traffic_model"]
+           "rank_k_traffic_model", "stochastic_round_bf16"]
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -84,10 +84,78 @@ def _round_up(x: int, mult: int) -> int:
 # fp32 = 4 MB single-buffered.
 MAX_OPERAND_TERMS = 8
 
+# Revolving-buffer depth cap: each extra slot holds another 2*max_terms
+# operand tiles in VMEM, so depth 4 at 256x256 fp32 tiles is already
+# 16 MB of ring — past the point of diminishing overlap returns.
+MAX_PIPELINE_DEPTH = 4
+
+# Operand-tile storage dtypes the executor will quantize to.  fp8 tiles
+# halve (vs bf16) / quarter (vs fp32) the DMA traffic per term while the
+# accumulation stays in the fp32 VMEM scratch — the serving-grade Gram
+# trade (DESIGN.md §16).
+_SUPPORTED_OPERAND_DTYPES = ("float8_e4m3fn", "float8_e5m2", "bfloat16",
+                             "float16", "float32", "float64")
+
 # (kind, variant, requested, clamped) combinations already warned about —
 # the clamp silently changing the schedule depth bit users before, so it
 # warns exactly once per distinct clamp.
 _CLAMP_WARNED: set = set()
+
+
+def _canon_dtype(dt):
+    """Optional dtype-like -> canonical name string (or None): the
+    hashable form threaded through custom-VJP nondiff argnums."""
+    return None if dt is None else jnp.dtype(dt).name
+
+
+def _resolve_operand_dtype(operand_dtype):
+    name = _canon_dtype(operand_dtype)
+    if name is not None and name not in _SUPPORTED_OPERAND_DTYPES:
+        raise ValueError(
+            f"operand_dtype={name!r} is not a supported operand-tile "
+            f"storage dtype; pick one of {_SUPPORTED_OPERAND_DTYPES}")
+    return name
+
+
+def _resolve_acc_dtype(acc_dtype):
+    name = "float32" if acc_dtype is None else jnp.dtype(acc_dtype).name
+    if name not in ("float32", "bfloat16", "float64"):
+        raise ValueError(f"acc_dtype={name!r}: the VMEM accumulator must "
+                         "be float32 (default), bfloat16 or float64")
+    return name
+
+
+def _resolve_pipeline_depth(pipeline_depth, interpret) -> int:
+    """Resolve the ``pipeline_depth`` knob.
+
+    ``None`` picks the backend default: 2 (double buffering — prefetch
+    the next contribution's operand tiles while the current MXU work
+    runs) for compiled kernels, 1 in interpret mode, where the emulator
+    runs DMAs synchronously and revolving buffers only add bookkeeping.
+    Explicit values are always honored (parity tests force 2/3 under
+    interpret).
+    """
+    if pipeline_depth is None:
+        return 1 if interpret else 2
+    depth = int(pipeline_depth)
+    if not 1 <= depth <= MAX_PIPELINE_DEPTH:
+        raise ValueError(
+            f"pipeline_depth must be in [1, {MAX_PIPELINE_DEPTH}], got "
+            f"{pipeline_depth} (each slot rings 2*{MAX_OPERAND_TERMS} "
+            "operand tiles in VMEM)")
+    return depth
+
+
+def _resolve_sr_seed(sr_seed, out_dtype):
+    """Validate the stochastic-rounding knob: SR only targets bf16
+    outputs (the fp32 accumulator is rounded once, on store)."""
+    if sr_seed is None:
+        return None
+    if jnp.dtype(out_dtype) != jnp.bfloat16:
+        raise ValueError(
+            "sr_seed (stochastic rounding) requires out_dtype=bfloat16, "
+            f"got {jnp.dtype(out_dtype).name}")
+    return int(sr_seed)
 
 
 def _warn_fan_in_clamp(kind: str, variant: str, gram: str, requested: int,
@@ -119,6 +187,49 @@ def _fan_in_clamp(kind: str, levels: int, variant: str,
     if levels < requested:
         _warn_fan_in_clamp(kind, variant, g, requested, levels)
     return levels
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding: fp32 -> bf16 with probability proportional to the
+# truncated fraction, so E[SR(x)] == x exactly.  Applied as a post-pass on
+# the executor's fp32 output (one threefry draw per call, deterministic
+# under a fixed seed); gradients pass straight through.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _sr_apply(xf, bits):
+    u = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    # adding uniform 16-bit noise below the bf16 mantissa boundary and
+    # truncating rounds up with probability (low 16 bits) / 2^16 — the
+    # unbiased rounding; carries ripple into the exponent exactly when
+    # the mantissa overflows (that IS the round-up to the next binade)
+    rounded = ((u + bits.astype(jnp.uint32)) >> 16).astype(jnp.uint16)
+    sr = jax.lax.bitcast_convert_type(rounded, jnp.bfloat16)
+    # non-finite values: the noise could walk a NaN payload or push a
+    # large-magnitude carry across the inf boundary — pass them through
+    # round-to-nearest instead
+    return jnp.where(jnp.isfinite(xf), sr, xf.astype(jnp.bfloat16))
+
+
+def _sr_fwd(xf, bits):
+    return _sr_apply(xf, bits), None
+
+
+def _sr_bwd(_, g):
+    # straight-through: rounding is an unbiased identity in expectation
+    return g.astype(jnp.float32), None
+
+
+_sr_apply.defvjp(_sr_fwd, _sr_bwd)
+
+
+def stochastic_round_bf16(x: jax.Array, key) -> jax.Array:
+    """Stochastically round ``x`` to bfloat16 (unbiased, deterministic
+    per threefry ``key``); non-finite entries round to nearest.  The
+    executor applies this on its fp32 output when ``sr_seed`` is set."""
+    xf = x.astype(jnp.float32)
+    bits = jax.random.bits(key, xf.shape, jnp.uint16)
+    return _sr_apply(xf, bits)
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +353,8 @@ class _Spec:
     right_tri: bool
     diag_sym: bool
     accumulate: bool
+    pipeline_depth: int = 1     # revolving VMEM buffer slots (1 = grid walk)
+    acc_dtype: str = "float32"  # VMEM accumulator storage dtype (name)
 
     @property
     def grid_steps(self) -> int:
@@ -249,7 +362,8 @@ class _Spec:
 
 
 def _bind(prog: LeafProgram, *, n_out, n_tj, q_i, q_j, n_k, bi, bj, bc,
-          diag_sym=False) -> _Spec:
+          diag_sym=False, pipeline_depth=1,
+          acc_dtype="float32") -> _Spec:
     ls, rs, os_ = prog.left_spec, prog.right_spec, prog.out_spec
     return _Spec(
         kind=prog.kind, levels=prog.levels, variant=prog.variant,
@@ -263,7 +377,8 @@ def _bind(prog: LeafProgram, *, n_out, n_tj, q_i, q_j, n_k, bi, bj, bc,
         out_tri=os_.packing == "tri",
         left_trans=ls.transpose, right_trans=rs.transpose,
         right_tri=rs.layout == "tri",
-        diag_sym=diag_sym, accumulate=os_.accumulate)
+        diag_sym=diag_sym, accumulate=os_.accumulate,
+        pipeline_depth=pipeline_depth, acc_dtype=acc_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -375,7 +490,7 @@ def _leaf_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
         if spec.accumulate:
             # rank-k: the running packed stack seeds the accumulator —
             # the incoming C is read once per tile, never re-materialized
-            acc_ref[...] = cin_ref[...].astype(jnp.float32)
+            acc_ref[...] = cin_ref[...].astype(acc_ref.dtype)
         else:
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -406,12 +521,225 @@ def _leaf_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
             right = _signed_sum(r_refs, rsgn_ref, ld, c)
             if spec.right_trans:
                 right = right.T
-        acc_ref[...] += sgn.astype(jnp.float32) * jnp.dot(
+        contrib = sgn.astype(jnp.float32) * jnp.dot(
             left, right, preferred_element_type=jnp.float32)
+        acc_ref[...] += contrib.astype(acc_ref.dtype)
 
     @pl.when((c == spec.n_c - 1) & (k == spec.n_k - 1))
     def _store():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pipelined_kernel(sign_ref, lrow_ref, lcol_ref, lsgn_ref,
+                      rrow_ref, rcol_ref, rsgn_ref, rtrn_ref, *refs,
+                      spec: _Spec, l_shape, r_shape):
+    """Depth>=2 executor body: one grid step per output tile; the
+    (contribution, K) sweep runs in-kernel behind a revolving-buffer
+    manual-DMA pipeline (DESIGN.md §16).
+
+    Slot protocol: step ``s`` computes out of slot ``s % depth`` while
+    the copies for step ``s + depth - 1`` stream into slot
+    ``(s + depth - 1) % depth`` — the slot whose compute retired at step
+    ``s - 1`` (the sweep is sequential per tile), so a buffer is never
+    overwritten while in use.  The flattened step order
+    ``s = c * n_k + k`` reproduces the depth-1 grid walk (k fastest), so
+    the accumulation order — and therefore the result — is bit-exact vs
+    ``pipeline_depth=1``.  The epilogue contract is unchanged: the
+    accumulator is (c_in-)seeded before the sweep and stored exactly
+    once after it.
+    """
+    depth, tmax = spec.pipeline_depth, spec.tmax
+    n_k = spec.n_k
+    n_steps = spec.n_c * n_k
+    left_hbm, right_hbm = refs[0], refs[1]
+    cin_ref = refs[2] if spec.accumulate else None
+    o_ref = refs[3] if spec.accumulate else refs[2]
+    l_bufs, r_bufs, l_sems, r_sems, acc_ref = refs[-5:]
+
+    t = pl.program_id(0)
+    gi, gj = _decode_out(t, spec)
+    ld = _dest_ld(gi, gj, spec)
+    jq = gj % spec.q_j
+
+    # the same index arithmetic as the depth-1 BlockSpec maps, evaluated
+    # in-kernel on the scalar-prefetch tables (block indices -> element
+    # offsets via the tile edges)
+    def left_block(p, c, k):
+        if spec.left_trans:
+            return (lrow_ref[ld, c, p] * n_k + k,
+                    lcol_ref[ld, c, p] * spec.q_i + gi % spec.q_i)
+        return (lrow_ref[ld, c, p] * spec.q_i + gi % spec.q_i,
+                lcol_ref[ld, c, p] * n_k + k)
+
+    def right_block(q, c, k):
+        if spec.right_tri:
+            gr, gc = _tri_term_coords(rrow_ref, rcol_ref, rtrn_ref,
+                                      ld, c, q, spec, k, jq)
+            fr = jnp.maximum(gr, gc)
+            fc = jnp.minimum(gr, gc)
+            return (fr * (fr + 1) // 2 + fc, 0)
+        if spec.right_trans:
+            return (rrow_ref[ld, c, q] * spec.q_j + jq,
+                    rcol_ref[ld, c, q] * n_k + k)
+        return (rrow_ref[ld, c, q] * n_k + k,
+                rcol_ref[ld, c, q] * spec.q_j + jq)
+
+    def _copies(s):
+        """The 2*tmax async tile copies of step ``s`` (start and wait
+        must describe the identical transfers)."""
+        slot = s % depth
+        c, k = s // n_k, s % n_k
+        cps = []
+        for p in range(tmax):
+            br, bc_ = left_block(p, c, k)
+            cps.append(pltpu.make_async_copy(
+                left_hbm.at[pl.ds(br * l_shape[0], l_shape[0]),
+                            pl.ds(bc_ * l_shape[1], l_shape[1])],
+                l_bufs.at[slot, p], l_sems.at[slot, p]))
+        for q in range(tmax):
+            br, bc_ = right_block(q, c, k)
+            cps.append(pltpu.make_async_copy(
+                right_hbm.at[pl.ds(br * r_shape[0], r_shape[0]),
+                             pl.ds(bc_ * r_shape[1], r_shape[1])],
+                r_bufs.at[slot, q], r_sems.at[slot, q]))
+        return cps
+
+    def _start(s):
+        for cp in _copies(s):
+            cp.start()
+
+    def _wait(s):
+        for cp in _copies(s):
+            cp.wait()
+
+    if spec.accumulate:
+        acc_ref[...] = cin_ref[...].astype(acc_ref.dtype)
+    else:
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for i in range(min(depth - 1, n_steps)):      # pipeline warm-up
+        _start(i)
+
+    def body(s, carry):
+        slot = s % depth
+
+        @pl.when(s + depth - 1 < n_steps)
+        def _prefetch():
+            _start(s + depth - 1)
+
+        _wait(s)
+        c, k = s // n_k, s % n_k
+        sgn = sign_ref[ld, c]
+
+        @pl.when(sgn != 0)
+        def _accumulate():
+            left = None
+            for p in range(tmax):
+                term = l_bufs[slot, p].astype(jnp.float32) \
+                    * lsgn_ref[ld, c, p].astype(jnp.float32)
+                left = term if left is None else left + term
+            if spec.left_trans:
+                left = left.T
+            if spec.right_tri:
+                right = None
+                for qt in range(tmax):
+                    gr, gc = _tri_term_coords(rrow_ref, rcol_ref, rtrn_ref,
+                                              ld, c, qt, spec, k, jq)
+                    tile = r_bufs[slot, qt].astype(jnp.float32)
+                    mirrored = (rtrn_ref[ld, c, qt] != 0) | (gr < gc)
+                    tile = jnp.where(mirrored, tile.T, tile)
+                    if spec.diag_sym:
+                        tile = jnp.where(gr == gc, tile + tile.T, tile)
+                    term = tile * rsgn_ref[ld, c, qt].astype(jnp.float32)
+                    right = term if right is None else right + term
+            else:
+                right = None
+                for qt in range(tmax):
+                    term = r_bufs[slot, qt].astype(jnp.float32) \
+                        * rsgn_ref[ld, c, qt].astype(jnp.float32)
+                    right = term if right is None else right + term
+                if spec.right_trans:
+                    right = right.T
+            contrib = sgn.astype(jnp.float32) * jnp.dot(
+                left, right, preferred_element_type=jnp.float32)
+            acc_ref[...] += contrib.astype(acc_ref.dtype)
+
+        return carry
+
+    jax.lax.fori_loop(0, n_steps, body, 0)
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _operand_shapes(spec: _Spec):
+    l_shape = (spec.bc, spec.bi) if spec.left_trans else (spec.bi, spec.bc)
+    if spec.right_tri:
+        r_shape = (spec.bj, spec.bj)
+    elif spec.right_trans:
+        r_shape = (spec.bj, spec.bc)
+    else:
+        r_shape = (spec.bc, spec.bj)
+    return l_shape, r_shape
+
+
+def _out_shape_struct(spec: _Spec, out_dtype):
+    if spec.out_tri:
+        return jax.ShapeDtypeStruct((spec.n_out * spec.bi, spec.bj),
+                                    out_dtype)
+    return jax.ShapeDtypeStruct(
+        ((spec.n_out // spec.n_tj) * spec.bi, spec.n_tj * spec.bj),
+        out_dtype)
+
+
+def _execute_pipelined(spec: _Spec, tables, left, right, out_dtype,
+                       interpret, c_in):
+    """Depth>=2 ``pallas_call`` site: grid = output tiles only; the
+    operands stay in HBM/ANY and the kernel streams their tiles through
+    revolving VMEM buffers with manual async copies (DMA semaphores),
+    overlapping the next step's fetch with the current MXU work."""
+    n_tab = len(tables)
+    depth, tmax = spec.pipeline_depth, spec.tmax
+    l_shape, r_shape = _operand_shapes(spec)
+
+    def out_map(t, *tabs):
+        if spec.out_tri:
+            return (t, 0)
+        return (t // spec.n_tj, t % spec.n_tj)
+
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands = [left, right]
+    if spec.accumulate:
+        in_specs.append(pl.BlockSpec((spec.bi, spec.bj), out_map))
+        operands.append(c_in)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_tab,
+        grid=(spec.n_out,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((spec.bi, spec.bj), out_map),
+        scratch_shapes=[
+            pltpu.VMEM((depth, tmax) + l_shape, left.dtype),
+            pltpu.VMEM((depth, tmax) + r_shape, right.dtype),
+            pltpu.SemaphoreType.DMA((depth, tmax)),
+            pltpu.SemaphoreType.DMA((depth, tmax)),
+            pltpu.VMEM((spec.bi, spec.bj), jnp.dtype(spec.acc_dtype)),
+        ],
+    )
+    with jax.named_scope(
+            f"fused:{spec.kind}:l{spec.levels}:{spec.variant}:{spec.gram}"
+            f":pd{depth}"):
+        return pl.pallas_call(
+            functools.partial(_pipelined_kernel, spec=spec,
+                              l_shape=l_shape, r_shape=r_shape),
+            grid_spec=grid_spec,
+            out_shape=_out_shape_struct(spec, out_dtype),
+            # only the output-tile axis remains a grid axis and its
+            # tiles are independent -> megacore partitions freely; the
+            # sequential sweep lives inside the kernel body.
+            compiler_params=pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel",)),
+            interpret=interpret,
+        )(*tables, *operands)
 
 
 def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
@@ -422,9 +750,18 @@ def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
     the one-input gram kinds); ``c_in`` the incoming packed stack for
     accumulating programs.  Returns the raw output buffer: the packed
     tri stack for tri-packed programs, the dense (padded) grid otherwise.
+
+    ``spec.pipeline_depth >= 2`` routes to the revolving-buffer DMA
+    pipeline (one grid step per output tile, the (contribution, K) sweep
+    in-kernel); depth 1 keeps the classic 3-axis grid walk.  Both paths
+    accumulate in the same order, so they are bit-exact for a fixed
+    ``acc_dtype``.
     """
     tables = _program_tables(spec.kind, spec.levels, spec.variant,
                              spec.gram, spec.trans_a, spec.trans_b)
+    if spec.pipeline_depth > 1:
+        return _execute_pipelined(spec, tables, left, right, out_dtype,
+                                  interpret, c_in)
     n_tab = len(tables)
 
     def left_map(p):
@@ -466,13 +803,7 @@ def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
             return (t, 0)
         return (t // spec.n_tj, t % spec.n_tj)
 
-    l_shape = (spec.bc, spec.bi) if spec.left_trans else (spec.bi, spec.bc)
-    if spec.right_tri:
-        r_shape = (spec.bj, spec.bj)
-    elif spec.right_trans:
-        r_shape = (spec.bj, spec.bc)
-    else:
-        r_shape = (spec.bc, spec.bj)
+    l_shape, r_shape = _operand_shapes(spec)
 
     in_specs = [pl.BlockSpec(l_shape, left_map(p)) for p in range(spec.tmax)]
     in_specs += [pl.BlockSpec(r_shape, right_map(q))
@@ -483,20 +814,13 @@ def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
         in_specs.append(pl.BlockSpec((spec.bi, spec.bj), out_map))
         operands.append(c_in)
 
-    if spec.out_tri:
-        out_shape = jax.ShapeDtypeStruct((spec.n_out * spec.bi, spec.bj),
-                                         out_dtype)
-    else:
-        out_shape = jax.ShapeDtypeStruct(
-            ((spec.n_out // spec.n_tj) * spec.bi, spec.n_tj * spec.bj),
-            out_dtype)
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=n_tab,
         grid=(spec.n_out, spec.n_c, spec.n_k),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((spec.bi, spec.bj), out_map),
-        scratch_shapes=[pltpu.VMEM((spec.bi, spec.bj), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((spec.bi, spec.bj),
+                                   jnp.dtype(spec.acc_dtype))],
     )
     # named_scope: the bound program's identity (kind/levels/variant)
     # lands in the HLO metadata of the pallas_call, so profiler traces
@@ -507,7 +831,7 @@ def _execute(spec: _Spec, left: jax.Array, right: jax.Array,
         return pl.pallas_call(
             functools.partial(_leaf_kernel, spec=spec),
             grid_spec=grid_spec,
-            out_shape=out_shape,
+            out_shape=_out_shape_struct(spec, out_dtype),
             # output tiles (t) are independent -> megacore partitions
             # them; the (contribution, K) sweep carries the VMEM
             # accumulator and must stay sequential per tile.
@@ -532,6 +856,10 @@ def fused_ata_packed(
     out_dtype=None,
     interpret=None,
     bwd: str = "fused",
+    pipeline_depth=None,
+    operand_dtype=None,
+    acc_dtype=None,
+    sr_seed=None,
 ):
     """Packed lower-triangular block stack of ``tril(a.T @ a)`` via the
     leaf-program executor.
@@ -555,32 +883,54 @@ def fused_ata_packed(
     no dense n^2 buffer ever materialized.  ``bwd="dense"`` selects the
     classical dense-dot baseline (unpack + ``A @ (S + S^t)``) for
     benchmarking.
+
+    Perf/precision knobs (DESIGN.md §16): ``pipeline_depth`` revolving
+    DMA buffer slots (None = backend default: 2 compiled, 1 interpret);
+    ``operand_dtype`` quantizes the stored operand tiles (fp8/bf16)
+    while accumulation stays in ``acc_dtype`` (fp32 default);
+    ``sr_seed`` stochastically rounds a bf16 output (deterministic per
+    seed, unbiased in expectation).
     """
-    interpret = _auto_interpret(interpret)
+    interpret = _auto_interpret(interpret, site="fused_ata_packed")
+    depth = _resolve_pipeline_depth(pipeline_depth, interpret)
+    op_dt = _resolve_operand_dtype(operand_dtype)
+    acc_dt = _resolve_acc_dtype(acc_dtype)
     m, n = a.shape
     geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
+    sr = _resolve_sr_seed(sr_seed, out_dtype)
+    core_out = jnp.dtype(jnp.float32) if sr is not None else out_dtype
     packed = _fused_ata_packed_core(a, levels, variant, gram, bk, bn,
-                                    out_dtype, interpret, bwd)
+                                    core_out, interpret, bwd, depth,
+                                    op_dt, acc_dt)
+    if sr is not None:
+        packed = stochastic_round_bf16(packed, jax.random.PRNGKey(sr))
     return packed, geo["N"]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11))
 def _fused_ata_packed_core(a, levels, variant, gram, bk, bn, out_dtype,
-                           interpret, bwd):
+                           interpret, bwd, pipeline_depth, operand_dtype,
+                           acc_dtype):
     return _fused_ata_packed_exec(a, levels, variant, gram, bk, bn,
-                                  out_dtype, interpret)[0]
+                                  out_dtype, interpret, pipeline_depth,
+                                  operand_dtype, acc_dtype)[0]
 
 
 def _fused_ata_packed_fwd(a, levels, variant, gram, bk, bn, out_dtype,
-                          interpret, bwd):
+                          interpret, bwd, pipeline_depth, operand_dtype,
+                          acc_dtype):
     return (_fused_ata_packed_core(a, levels, variant, gram, bk, bn,
-                                   out_dtype, interpret, bwd), a)
+                                   out_dtype, interpret, bwd,
+                                   pipeline_depth, operand_dtype,
+                                   acc_dtype), a)
 
 
 def _fused_ata_packed_bwd(levels, variant, gram, bk, bn, out_dtype,
-                          interpret, bwd, a, gp):
+                          interpret, bwd, pipeline_depth, operand_dtype,
+                          acc_dtype, a, gp):
     # vdot(gp, packed(A)) has S = block-lower cotangent (diagonal tiles
     # full — the forward computes them full), so dA = A (S + S^t): the
     # packed stack *is* S and feeds the symm executor directly.
@@ -595,7 +945,8 @@ def _fused_ata_packed_bwd(levels, variant, gram, bk, bn, out_dtype,
     else:
         da = fused_symm_matmul(a, gp, levels=levels, variant=variant,
                                bm=bk, diag_sym=True, out_dtype=acc,
-                               interpret=interpret)[:, :n]
+                               interpret=interpret,
+                               pipeline_depth=pipeline_depth)[:, :n]
     return (da.astype(a.dtype),)
 
 
@@ -611,18 +962,26 @@ def _fused_ata_packed_exec(
     bn: int,
     out_dtype,
     interpret,
+    pipeline_depth: int = 1,
+    operand_dtype=None,
+    acc_dtype: str = "float32",
 ):
     """Forward executor (no autodiff surface — see the custom VJP above)."""
     m, n = a.shape
     geo = _ata_geometry(m, n, levels, variant, bk, bn, gram=gram)
     plan = geo["plan"]
     M, N = geo["M"], geo["N"]
-    if (M, N) != (m, n):
-        a = jnp.pad(a, ((0, M - m), (0, N - n)))
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
+    if (M, N) != (m, n):
+        a = jnp.pad(a, ((0, M - m), (0, N - n)))
+    if operand_dtype is not None:
+        # the quantization step: operand tiles are STORED (and DMA'd) at
+        # the low precision; every compute upcasts tile-wise to fp32
+        a = a.astype(jnp.dtype(operand_dtype))
     spec = _bind(plan, n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
-                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk,
+                 pipeline_depth=pipeline_depth, acc_dtype=acc_dtype)
     return _execute(spec, a, a, out_dtype, interpret), N
 
 
@@ -637,6 +996,10 @@ def fused_ata(
     out_dtype=None,
     interpret=None,
     bwd: str = "fused",
+    pipeline_depth=None,
+    operand_dtype=None,
+    acc_dtype=None,
+    sr_seed=None,
 ) -> jax.Array:
     """Dense ``tril(a.T @ a)`` at the original size via the fused pipeline.
 
@@ -647,29 +1010,44 @@ def fused_ata(
     storage, per-tile slices — no dense S + S^t or padded-S buffer) and
     the product runs the same leaf-program pipeline as the forward.
     ``bwd="dense"`` keeps the classical ``jnp.dot(a, s + s.T)`` baseline.
+
+    Accepts the same perf/precision knobs as :func:`fused_ata_packed`:
+    ``pipeline_depth``, ``operand_dtype``, ``acc_dtype``, ``sr_seed``.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = _auto_interpret(interpret, site="fused_ata")
+    depth = _resolve_pipeline_depth(pipeline_depth, interpret)
+    op_dt = _resolve_operand_dtype(operand_dtype)
+    acc_dt = _resolve_acc_dtype(acc_dtype)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-    return _fused_ata_dense(a, levels, variant, gram, bk, bn, out_dtype,
-                            interpret, bwd)
+    sr = _resolve_sr_seed(sr_seed, out_dtype)
+    core_out = jnp.dtype(jnp.float32) if sr is not None else out_dtype
+    out = _fused_ata_dense(a, levels, variant, gram, bk, bn, core_out,
+                           interpret, bwd, depth, op_dt, acc_dt)
+    if sr is not None:
+        out = stochastic_round_bf16(out, jax.random.PRNGKey(sr))
+    return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11))
 def _fused_ata_dense(a, levels, variant, gram, bk, bn, out_dtype, interpret,
-                     bwd):
+                     bwd, pipeline_depth, operand_dtype, acc_dtype):
     n = a.shape[1]
     packed, n_pad = _fused_ata_packed_exec(
-        a, levels, variant, gram, bk, bn, out_dtype, interpret)
+        a, levels, variant, gram, bk, bn, out_dtype, interpret,
+        pipeline_depth, operand_dtype, acc_dtype)
     dense = unpack_tril_blocks(packed, n_pad, bn, symmetrize=False)
     # diagonal blocks are computed full — drop their upper halves
     return jnp.tril(dense)[:n, :n]
 
 
 def _fused_ata_dense_fwd(a, levels, variant, gram, bk, bn, out_dtype,
-                         interpret, bwd):
+                         interpret, bwd, pipeline_depth, operand_dtype,
+                         acc_dtype):
     return (_fused_ata_dense(a, levels, variant, gram, bk, bn, out_dtype,
-                             interpret, bwd), a)
+                             interpret, bwd, pipeline_depth, operand_dtype,
+                             acc_dtype), a)
 
 
 def _pack_cotangent(g: jax.Array, n: int, n_pad: int, bn: int) -> jax.Array:
@@ -697,7 +1075,8 @@ def _pack_cotangent(g: jax.Array, n: int, n_pad: int, bn: int) -> jax.Array:
 
 
 def _fused_ata_dense_bwd(levels, variant, gram, bk, bn, out_dtype, interpret,
-                         bwd, a, g):
+                         bwd, pipeline_depth, operand_dtype, acc_dtype,
+                         a, g):
     # C = tril(A^t A) => dL/dA = A (S + S^t), S = tril(dL/dC); the factor
     # 2 on the diagonal of S + S^t is exactly the quadratic term's.
     acc = jnp.promote_types(a.dtype, jnp.float32)
@@ -710,7 +1089,8 @@ def _fused_ata_dense_bwd(levels, variant, gram, bk, bn, out_dtype, interpret,
         sp = _pack_cotangent(g.astype(acc), n, geo["N"], bn)
         da = fused_symm_matmul(a, sp, levels=geo["levels"], variant=variant,
                                bm=bk, diag_sym=True, out_dtype=acc,
-                               interpret=interpret)[:, :n]
+                               interpret=interpret,
+                               pipeline_depth=pipeline_depth)[:, :n]
     return (da.astype(a.dtype),)
 
 
@@ -734,6 +1114,10 @@ def fused_aat_packed(
     bk: int = 256,
     out_dtype=None,
     interpret=None,
+    pipeline_depth=None,
+    operand_dtype=None,
+    acc_dtype=None,
+    sr_seed=None,
 ):
     """Packed lower-triangular block stack of ``tril(a @ a.T)``.
 
@@ -741,19 +1125,32 @@ def fused_aat_packed(
     ``(T(T+1)/2 * bm, bm)``, ``T = m_padded // bm``.  Zero-padding is
     exact: zero columns add nothing to A A^t, zero rows add zero
     rows/columns to C that the dense wrapper slices away.
+
+    Accepts the same perf/precision knobs as :func:`fused_ata_packed`.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = _auto_interpret(interpret, site="fused_aat_packed")
+    depth = _resolve_pipeline_depth(pipeline_depth, interpret)
+    op_dt = _resolve_operand_dtype(operand_dtype)
+    acc_dt = _resolve_acc_dtype(acc_dtype)
     m, n = a.shape
     geo = _aat_geometry(m, n, levels, variant, bm, bk, gram=gram)
     plan = geo["plan"]
     M, N = geo["M"], geo["N"]
-    if (M, N) != (m, n):
-        a = jnp.pad(a, ((0, M - m), (0, N - n)))
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
+    sr = _resolve_sr_seed(sr_seed, out_dtype)
+    core_out = jnp.dtype(jnp.float32) if sr is not None else out_dtype
+    if (M, N) != (m, n):
+        a = jnp.pad(a, ((0, M - m), (0, N - n)))
+    if op_dt is not None:
+        a = a.astype(jnp.dtype(op_dt))
     spec = _bind(plan, n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
-                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bm, bj=bm, bc=bk)
-    return _execute(spec, a, a, out_dtype, interpret), M
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bm, bj=bm, bc=bk,
+                 pipeline_depth=depth, acc_dtype=acc_dt)
+    packed = _execute(spec, a, a, core_out, interpret)
+    if sr is not None:
+        packed = stochastic_round_bf16(packed, jax.random.PRNGKey(sr))
+    return packed, M
 
 
 def fused_aat(
@@ -766,6 +1163,10 @@ def fused_aat(
     bk: int = 256,
     out_dtype=None,
     interpret=None,
+    pipeline_depth=None,
+    operand_dtype=None,
+    acc_dtype=None,
+    sr_seed=None,
 ) -> jax.Array:
     """Dense ``tril(a @ a.T)`` at the original size via the fused
     pipeline — ``ata(x, gram_of="rows")``.
@@ -773,33 +1174,50 @@ def fused_aat(
     Differentiable: ``dA = (S + S^t) A`` with ``S = tril(cotangent)``
     (the dense-dot VJP; the row-gram backward is symmetric-left rather
     than symmetric-right, which the symm program does not yet express).
+
+    Accepts the same perf/precision knobs as :func:`fused_ata_packed`.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = _auto_interpret(interpret, site="fused_aat")
+    depth = _resolve_pipeline_depth(pipeline_depth, interpret)
+    op_dt = _resolve_operand_dtype(operand_dtype)
+    acc_dt = _resolve_acc_dtype(acc_dtype)
     out_dtype = (jnp.promote_types(a.dtype, jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
-    return _fused_aat_dense(a, levels, variant, gram, bm, bk, out_dtype,
-                            interpret)
+    sr = _resolve_sr_seed(sr_seed, out_dtype)
+    core_out = jnp.dtype(jnp.float32) if sr is not None else out_dtype
+    out = _fused_aat_dense(a, levels, variant, gram, bm, bk, core_out,
+                           interpret, depth, op_dt, acc_dt)
+    if sr is not None:
+        out = stochastic_round_bf16(out, jax.random.PRNGKey(sr))
+    return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
-def _fused_aat_dense(a, levels, variant, gram, bm, bk, out_dtype, interpret):
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+def _fused_aat_dense(a, levels, variant, gram, bm, bk, out_dtype, interpret,
+                     pipeline_depth, operand_dtype, acc_dtype):
     m = a.shape[0]
     packed, m_pad = fused_aat_packed(a, levels=levels, variant=variant,
                                      gram=gram, bm=bm, bk=bk,
                                      out_dtype=out_dtype,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     pipeline_depth=pipeline_depth,
+                                     operand_dtype=operand_dtype,
+                                     acc_dtype=acc_dtype)
     dense = unpack_tril_blocks(packed, m_pad, bm, symmetrize=False)
     return jnp.tril(dense)[:m, :m]
 
 
 def _fused_aat_dense_fwd(a, levels, variant, gram, bm, bk, out_dtype,
-                         interpret):
+                         interpret, pipeline_depth, operand_dtype,
+                         acc_dtype):
     return (_fused_aat_dense(a, levels, variant, gram, bm, bk, out_dtype,
-                             interpret), a)
+                             interpret, pipeline_depth, operand_dtype,
+                             acc_dtype), a)
 
 
 def _fused_aat_dense_bwd(levels, variant, gram, bm, bk, out_dtype, interpret,
-                         a, g):
+                         pipeline_depth, operand_dtype, acc_dtype, a, g):
     # C = tril(A A^t) => dA = (S + S^t) A, S = tril(g)
     acc = jnp.promote_types(a.dtype, jnp.float32)
     s = jnp.tril(g).astype(acc)
@@ -827,6 +1245,9 @@ def fused_rank_k_update(
     bk: int = 256,
     out_dtype=None,
     interpret=None,
+    pipeline_depth=None,
+    operand_dtype=None,
+    acc_dtype=None,
 ) -> jax.Array:
     """``C += tril(a.T @ a)`` on a packed lower-triangular tile stack.
 
@@ -841,8 +1262,16 @@ def fused_rank_k_update(
     the stack cotangent passes through packed, and ``dA`` runs the symm
     program on the packed cotangent (DESIGN.md §11) — no dense n^2
     buffer in either direction.
+
+    ``pipeline_depth``/``operand_dtype``/``acc_dtype`` as in
+    :func:`fused_ata_packed`; ``operand_dtype`` quantizes only the
+    incoming chunk ``a`` — the running stack seeds the accumulator at
+    its own precision, so streamed state never degrades.
     """
-    interpret = _auto_interpret(interpret)
+    interpret = _auto_interpret(interpret, site="fused_rank_k_update")
+    depth = _resolve_pipeline_depth(pipeline_depth, interpret)
+    op_dt = _resolve_operand_dtype(operand_dtype)
+    acc_dt = _resolve_acc_dtype(acc_dtype)
     if c_stack.ndim != 2 or a.ndim != 2:
         raise ValueError(f"bad ranks: stack {c_stack.shape} x {a.shape}")
     bn = c_stack.shape[1]
@@ -861,18 +1290,22 @@ def fused_rank_k_update(
                  else jnp.dtype(out_dtype))
     return _fused_rank_k_core(c_stack, a, levels, variant, gram, bk, bn,
                               out_dtype, jnp.dtype(c_stack.dtype),
-                              interpret)
+                              interpret, depth, op_dt, acc_dt)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12))
 def _fused_rank_k_core(c_stack, a, levels, variant, gram, bk, bn, out_dtype,
-                       stack_dtype, interpret):
+                       stack_dtype, interpret, pipeline_depth,
+                       operand_dtype, acc_dtype):
     return _fused_rank_k_exec(c_stack, a, levels, variant, gram, bk, bn,
-                              out_dtype, interpret)
+                              out_dtype, interpret, pipeline_depth,
+                              operand_dtype, acc_dtype)
 
 
 def _fused_rank_k_exec(c_stack, a, levels, variant, gram, bk, bn, out_dtype,
-                       interpret):
+                       interpret, pipeline_depth=1, operand_dtype=None,
+                       acc_dtype="float32"):
     n_tri = c_stack.shape[0] // bn
     T = (math.isqrt(8 * n_tri + 1) - 1) // 2
     N = T * bn
@@ -881,19 +1314,25 @@ def _fused_rank_k_exec(c_stack, a, levels, variant, gram, bk, bn, out_dtype,
     plan, M = geo["plan"], geo["M"]
     if (M, N) != (m, n):
         a = jnp.pad(a, ((0, M - m), (0, N - n)))
+    if operand_dtype is not None:
+        a = a.astype(jnp.dtype(operand_dtype))
     spec = _bind(plan, n_out=geo["n_tri"], n_tj=0, q_i=geo["nbt"],
-                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk)
+                 q_j=geo["nbt"], n_k=geo["n_k"], bi=bn, bj=bn, bc=bk,
+                 pipeline_depth=pipeline_depth, acc_dtype=acc_dtype)
     return _execute(spec, a, a, out_dtype, interpret, c_in=c_stack)
 
 
 def _fused_rank_k_fwd(c_stack, a, levels, variant, gram, bk, bn, out_dtype,
-                      stack_dtype, interpret):
+                      stack_dtype, interpret, pipeline_depth, operand_dtype,
+                      acc_dtype):
     return (_fused_rank_k_core(c_stack, a, levels, variant, gram, bk, bn,
-                               out_dtype, stack_dtype, interpret), a)
+                               out_dtype, stack_dtype, interpret,
+                               pipeline_depth, operand_dtype, acc_dtype), a)
 
 
 def _fused_rank_k_bwd(levels, variant, gram, bk, bn, out_dtype, stack_dtype,
-                      interpret, a, g):
+                      interpret, pipeline_depth, operand_dtype, acc_dtype,
+                      a, g):
     # C_out = C_in + tril(A^t A): dC_in = g (packed pass-through, cast
     # back to the stack primal's dtype); dA = A (S + S^t) with S the
     # block-lower cotangent stack.
@@ -904,7 +1343,8 @@ def _fused_rank_k_bwd(levels, variant, gram, bk, bn, out_dtype, stack_dtype,
                           gram=gram)["levels"]
     da = fused_symm_matmul(a, g, levels=lv, variant=variant, bm=bk,
                            diag_sym=True, out_dtype=acc,
-                           interpret=interpret)[:, :n]
+                           interpret=interpret,
+                           pipeline_depth=pipeline_depth)[:, :n]
     return g.astype(stack_dtype), da.astype(a.dtype)
 
 
@@ -928,6 +1368,9 @@ def fused_symm_matmul(
     diag_sym: bool = False,
     out_dtype=None,
     interpret=None,
+    pipeline_depth=None,
+    operand_dtype=None,
+    acc_dtype=None,
 ) -> jax.Array:
     """``x @ Sym`` via the flattened symm program, one fused kernel.
 
@@ -949,8 +1392,15 @@ def fused_symm_matmul(
     Same fusion contract as the forward: operand sums and mirrored
     transposes live in VMEM only, fp32 VMEM accumulation, one HBM write
     per output tile, no dense Sym (or S + S^t) buffer ever exists.
+
+    ``pipeline_depth``/``operand_dtype``/``acc_dtype`` as in
+    :func:`fused_ata_packed` (``operand_dtype`` quantizes both ``x`` and
+    the packed stack).
     """
-    interpret = _auto_interpret(interpret)
+    interpret = _auto_interpret(interpret, site="fused_symm_matmul")
+    depth = _resolve_pipeline_depth(pipeline_depth, interpret)
+    op_dt = _resolve_operand_dtype(operand_dtype)
+    acc_dt = _resolve_acc_dtype(acc_dtype)
     if x.ndim != 2 or s_packed.ndim != 2:
         raise ValueError(f"bad ranks: {x.shape} x packed {s_packed.shape}")
     bs = s_packed.shape[1]
@@ -977,8 +1427,12 @@ def fused_symm_matmul(
     M, nbm, q = geo["M"], geo["nbm"], geo["q"]
     if M != m:
         x = jnp.pad(x, ((0, M - m), (0, 0)))
+    if op_dt is not None:
+        x = x.astype(jnp.dtype(op_dt))
+        s_packed = s_packed.astype(jnp.dtype(op_dt))
     spec = _bind(plan, n_out=(M // bm) * T, n_tj=T, q_i=nbm, q_j=q,
-                 n_k=q, bi=bm, bj=bs, bc=bs, diag_sym=diag_sym)
+                 n_k=q, bi=bm, bj=bs, bc=bs, diag_sym=diag_sym,
+                 pipeline_depth=depth, acc_dtype=acc_dt)
     out = _execute(spec, x, s_packed, out_dtype, interpret)
     return out[:m]
 
@@ -1010,7 +1464,12 @@ def _traffic(spec: _Spec, *, left_bytes: int, right_bytes: int,
     if spec.accumulate:
         reads += spec.n_out * spec.bi * spec.bj * cin_bytes
     writes = spec.n_out * spec.bi * spec.bj * out_bytes
-    return {"grid_steps": grid, "read_bytes": reads, "write_bytes": writes}
+    # MXU work per grid step: one (bi, bc) x (bc, bj) leaf product (the
+    # VPU gather adds are second-order) — feeds the pipelined occupancy
+    # term in cost_model.pipelined_bytes_score
+    flops = 2 * grid * spec.bi * spec.bc * spec.bj
+    return {"grid_steps": grid, "read_bytes": reads, "write_bytes": writes,
+            "flops": flops}
 
 
 def ata_traffic_model(
@@ -1160,6 +1619,9 @@ def fused_matmul(
     out_dtype=None,
     interpret=None,
     bwd: str = "fused",
+    pipeline_depth=None,
+    operand_dtype=None,
+    acc_dtype=None,
 ) -> jax.Array:
     """``op(a) @ op(b)`` via the flattened Strassen program, one fused
     kernel; ``op`` transposes when the flag is set — folded into the
@@ -1186,16 +1648,22 @@ def fused_matmul(
         raise ValueError(
             f"bad shapes for matmul: {a.shape} x {b.shape} "
             f"(trans_a={trans_a}, trans_b={trans_b})")
-    interpret = _auto_interpret(interpret)
+    interpret = _auto_interpret(interpret, site="fused_matmul")
+    depth = _resolve_pipeline_depth(pipeline_depth, interpret)
+    op_dt = _resolve_operand_dtype(operand_dtype)
+    acc_dt = _resolve_acc_dtype(acc_dtype)
     out_dtype = (jnp.promote_types(jnp.promote_types(a.dtype, b.dtype),
                                    jnp.float32)
                  if out_dtype is None else jnp.dtype(out_dtype))
     return _fused_matmul_core(a, b, levels, variant, bm, bk, bn, trans_a,
-                              trans_b, out_dtype, interpret, bwd)
+                              trans_b, out_dtype, interpret, bwd, depth,
+                              op_dt, acc_dt)
 
 
 def _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
-                       interpret, trans_a=False, trans_b=False):
+                       interpret, trans_a=False, trans_b=False,
+                       pipeline_depth=1, operand_dtype=None,
+                       acc_dtype="float32"):
     """Executor binding for C = op(a) @ op(b)."""
     m, k_dim = a.shape[::-1] if trans_a else a.shape
     n, _ = b.shape if trans_b else b.shape[::-1]
@@ -1222,30 +1690,43 @@ def _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
         a = jnp.pad(a, [(0, t - s) for s, t in zip(a.shape, a_shape)])
     if b.shape != b_shape:
         b = jnp.pad(b, [(0, t - s) for s, t in zip(b.shape, b_shape)])
+    if operand_dtype is not None:
+        a = a.astype(jnp.dtype(operand_dtype))
+        b = b.astype(jnp.dtype(operand_dtype))
 
     nbm, nbn = mb // bm, nb // bn
     spec = _bind(plan, n_out=(M // bm) * (N // bn), n_tj=N // bn,
-                 q_i=nbm, q_j=nbn, n_k=kb // bk, bi=bm, bj=bn, bc=bk)
+                 q_i=nbm, q_j=nbn, n_k=kb // bk, bi=bm, bj=bn, bc=bk,
+                 pipeline_depth=pipeline_depth, acc_dtype=acc_dtype)
     out = _execute(spec, a, b, out_dtype, interpret)
     return out[:m, :n]
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10, 11))
+                   nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13,
+                                    14))
 def _fused_matmul_core(a, b, levels, variant, bm, bk, bn, trans_a, trans_b,
-                       out_dtype, interpret, bwd):
+                       out_dtype, interpret, bwd, pipeline_depth,
+                       operand_dtype, acc_dtype):
     return _fused_matmul_exec(a, b, levels, variant, bm, bk, bn, out_dtype,
-                              interpret, trans_a=trans_a, trans_b=trans_b)
+                              interpret, trans_a=trans_a, trans_b=trans_b,
+                              pipeline_depth=pipeline_depth,
+                              operand_dtype=operand_dtype,
+                              acc_dtype=acc_dtype)
 
 
 def _fused_matmul_fwd(a, b, levels, variant, bm, bk, bn, trans_a, trans_b,
-                      out_dtype, interpret, bwd):
+                      out_dtype, interpret, bwd, pipeline_depth,
+                      operand_dtype, acc_dtype):
     return (_fused_matmul_core(a, b, levels, variant, bm, bk, bn, trans_a,
-                               trans_b, out_dtype, interpret, bwd), (a, b))
+                               trans_b, out_dtype, interpret, bwd,
+                               pipeline_depth, operand_dtype, acc_dtype),
+            (a, b))
 
 
 def _fused_matmul_bwd(levels, variant, bm, bk, bn, trans_a, trans_b,
-                      out_dtype, interpret, bwd, res, g):
+                      out_dtype, interpret, bwd, pipeline_depth,
+                      operand_dtype, acc_dtype, res, g):
     a, b = res
     acc = jnp.promote_types(jnp.promote_types(a.dtype, b.dtype), jnp.float32)
     gf = g.astype(acc)
@@ -1268,7 +1749,8 @@ def _fused_matmul_bwd(levels, variant, bm, bk, bn, trans_a, trans_b,
         # without an HBM-wide fp32 copy):
         ex = functools.partial(_fused_matmul_exec, levels=levels,
                                variant=variant, out_dtype=acc,
-                               interpret=interpret)
+                               interpret=interpret,
+                               pipeline_depth=pipeline_depth)
         if not trans_a and not trans_b:
             # da = g b^t; db = a^t g
             da = ex(gf, b, bm=bm, bk=bn, bn=bk, trans_b=True)

@@ -140,7 +140,7 @@ def test_breaker_escalates_to_reference_mode():
     assert r.status == "ok" and r.degraded
     assert r.served_by == "local:rung2"
     assert r.attempts == 3
-    key = (32, 16, "float32", "cols")
+    key = (32, 16, "float32", "cols", "native")
     assert eng._health[key].rung == 2
     assert len(eng._health[key].quarantined) == 2
     assert eng.stats()["quarantined"][str(key)]
@@ -156,7 +156,7 @@ def test_rung_is_sticky_but_counts_reset_on_success():
     with faults.inject(FaultSpec("exec_fail", times=1,
                                  site="gram.engine.exec*")):
         eng.run_to_completion()
-    key = (16, 16, "float32", "cols")
+    key = (16, 16, "float32", "cols", "native")
     assert eng._health[key].rung == 1          # sticky after recovery
     assert eng._health[key].consecutive_failures == 0
     uid = eng.submit(rng.standard_normal((16, 16)).astype(np.float32)).uid

@@ -184,10 +184,12 @@ def test_engine_routes_large_buckets_to_mesh(multidevice_count):
                                    rtol=1e-5)
     stats = eng.stats()
     assert stats["dist_served"] == 1
-    assert stats["distributed_buckets"] == [(128, 64, "float32", "cols")]
+    assert stats["distributed_buckets"] == [(128, 64, "float32", "cols",
+                                          "native")]
     # the small bucket stayed on the local vmapped path
-    assert (32, 16, "float32", "cols") in stats["buckets"]
-    assert (32, 16, "float32", "cols") not in stats["distributed_buckets"]
+    assert (32, 16, "float32", "cols", "native") in stats["buckets"]
+    assert (32, 16, "float32", "cols",
+            "native") not in stats["distributed_buckets"]
 
 
 def test_engine_infeasible_dist_scheme_stays_local():

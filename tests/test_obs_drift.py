@@ -145,7 +145,7 @@ def test_engine_invalidate_drifted_drops_winner_and_history(tmp_path,
 
     # ...whose wall-channel EWMA is 20x off its peers (two honest peers
     # pin the cross-key median)
-    key = (64, 64, "float32", "cols")
+    key = (64, 64, "float32", "cols", "native")
     _feed(eng.drift, "64x64/float32/ata", 80.0, 4e6)
     _feed(eng.drift, "128x128/float32/ata", 1.0, 1e6)
     _feed(eng.drift, "256x256/float32/ata", 1.1, 1e6)

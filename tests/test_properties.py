@@ -231,3 +231,56 @@ def test_stream_any_chunking_matches_one_shot(key, m, n, data, dtype,
     tol = 5e-5 if dtype == jnp.float32 else 5e-2
     assert np.abs(got - want).max() / scale < tol
     assert int(st_state.rows) == m
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_stochastic_round_bf16_deterministic_under_fixed_key(key):
+    """SR is a pure function of (x, key): bit-identical replay under the
+    same threefry key, different under a different one."""
+    from repro.kernels.strassen_fused import stochastic_round_bf16
+
+    x = _rand(key, 16, 16) * 3.0
+    k1, k2 = jax.random.PRNGKey(key), jax.random.PRNGKey(key ^ 0x5bd1e995)
+    r1 = np.asarray(stochastic_round_bf16(x, k1).astype(jnp.float32))
+    r2 = np.asarray(stochastic_round_bf16(x, k1).astype(jnp.float32))
+    assert np.array_equal(r1, r2)
+    r3 = np.asarray(stochastic_round_bf16(x, k2).astype(jnp.float32))
+    assert not np.array_equal(r1, r3)
+    # every output is exactly a bf16 value (round went DOWN or UP, never
+    # anywhere else)
+    assert np.array_equal(
+        r1, np.asarray(jnp.asarray(r1).astype(jnp.bfloat16)
+                       .astype(jnp.float32)))
+
+
+def test_stochastic_round_bf16_mean_unbiased():
+    """E[SR(x)] == x: a value 1/8 of the way between two bf16 neighbours
+    must round up ~12.5% of the time, so the sample mean over 2^14
+    independent draws sits far closer to x than either neighbour."""
+    from repro.kernels.strassen_fused import stochastic_round_bf16
+
+    val = 1.0 + 2.0 ** -10          # bf16 ulp at 1.0 is 2^-7
+    xs = jnp.full((1 << 14,), val, jnp.float32)
+    r = np.asarray(stochastic_round_bf16(
+        xs, jax.random.PRNGKey(0)).astype(np.float32), np.float64)
+    lo, hi = 1.0, 1.0 + 2.0 ** -7
+    assert set(np.unique(r)) == {lo, hi}
+    # p(up) = 1/8; std of the mean ~ ulp * sqrt(p(1-p)) / 2^7 ~ 2e-5, so
+    # 1e-4 leaves ~5 sigma while nearest-rounding (always down) would
+    # miss by the full 2^-10 ~ 9.8e-4
+    assert abs(r.mean() - val) < 1e-4
+
+
+def test_ata_fused_sr_seed_deterministic():
+    """sr_seed pins the SR key: two calls with the same seed are
+    bit-identical, a different seed is not (at bf16 output)."""
+    from repro.kernels import ops
+
+    a = _rand(9, 96, 64)
+    kw = dict(levels=1, bk=32, bn=32, out_dtype=jnp.bfloat16)
+    o1 = np.asarray(ops.ata_fused(a, sr_seed=7, **kw).astype(jnp.float32))
+    o2 = np.asarray(ops.ata_fused(a, sr_seed=7, **kw).astype(jnp.float32))
+    o3 = np.asarray(ops.ata_fused(a, sr_seed=8, **kw).astype(jnp.float32))
+    assert np.array_equal(o1, o2)
+    assert not np.array_equal(o1, o3)
